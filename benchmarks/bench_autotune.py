@@ -1,0 +1,86 @@
+"""Self-tuning on the framework itself (the paper's end goal, §4):
+
+1. Build utilization signatures for assigned architectures by abstractly
+   tracing their forward/loss step (the "small set of data" profiling run).
+2. Store signatures + best-known exec configs in the ReferenceDB.
+3. A "new" workload (kimi-k2, held out of the DB) is matched with the
+   paper's DTW+correlation pipeline and inherits the exec config of its
+   nearest neighbour — expected: deepseek-v2 (the other MLA+MoE arch).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfglib
+from repro.core import ReferenceDB, AutoTuner
+from repro.core.signatures import signature_of
+from repro.models import model as model_lib
+
+PROFILE_ARCHS = ["deepseek-v2-236b", "phi3-mini-3p8b", "starcoder2-15b",
+                 "granite-20b", "minitron-4b", "zamba2-7b"]
+QUERY_ARCH = "kimi-k2-1t-a32b"
+
+# profiling shape: the paper profiles on a SMALL input, not the full run
+PROF_B, PROF_S = 4, 512
+#: signature resolution must preserve per-layer structure through the
+#: Chebyshev de-noise (64 scan steps x ~8 samples/layer), and the match
+#: threshold is re-calibrated for jaxpr-trace signatures the same way the
+#: paper set 0.9 empirically for SysStat traces (EXPERIMENTS.md §Matching).
+SAMPLES = 2048
+BAND = 64
+THRESHOLD = 0.85
+
+
+def _signature(arch: str) -> np.ndarray:
+    cfg = cfglib.get(arch)
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda k: model_lib.init(k, cfg), key)
+    tok_shape = (PROF_B, PROF_S) if cfg.num_codebooks == 1 else \
+        (PROF_B, PROF_S, cfg.num_codebooks)
+    batch = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+             "labels": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    return signature_of(
+        lambda p, b: model_lib.loss_fn(p, b, cfg)[0], params, batch,
+        samples=SAMPLES)
+
+
+def run():
+    db = ReferenceDB()
+    tuner = AutoTuner(db, band=BAND, threshold=THRESHOLD)
+
+    t0 = time.time()
+    for arch in PROFILE_ARCHS:
+        sig = _signature(arch)
+        tuner.profile(arch, {"B": PROF_B, "S": PROF_S}, sig)
+        db.set_best_config(arch, cfglib.exec_default(arch, "train_4k").as_dict(),
+                           score=1.0)
+    t_profile = (time.time() - t0) / len(PROFILE_ARCHS)
+
+    t0 = time.time()
+    qsig = _signature(QUERY_ARCH)
+    decision = tuner.match(QUERY_ARCH, qsig)
+    t_match = time.time() - t0
+
+    print(f"[autotune] query {QUERY_ARCH} scores:")
+    for w, s in sorted(decision.scores.items(), key=lambda kv: -kv[1]):
+        print(f"    {w:20s} {s:.4f}")
+    print(f"[autotune] matched={decision.matched} corr={decision.corr:.4f} "
+          f"-> transferred config: {decision.config}")
+    assert decision.matched == "deepseek-v2-236b", decision.scores
+    assert decision.corr >= THRESHOLD
+    assert decision.config is not None and decision.config.get("fsdp") is True
+
+    return [("autotune_profile_per_arch", t_profile * 1e6,
+             f"match={decision.matched};corr={decision.corr:.3f}"),
+            ("autotune_match_call", t_match * 1e6,
+             f"db_size={len(PROFILE_ARCHS)}")]
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

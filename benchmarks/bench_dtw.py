@@ -1,0 +1,50 @@
+"""DTW implementations: jnp min-plus scan vs Pallas kernel (interpret) vs
+Sakoe-Chiba banded, over series lengths (paper §3.1.2 + §5 scaling
+discussion: DTW is the quadratic hot spot of cluster-scale matching).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import dtw
+from repro.kernels.dtw import dtw_batched
+
+
+def _timeit(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    for n in (128, 256, 512):
+        x = rng.normal(size=n).astype(np.float32)
+        y = rng.normal(size=n).astype(np.float32)
+        us_jnp = _timeit(dtw.dtw_matrix, x, y)
+        us_band = _timeit(lambda a, b: dtw.dtw_matrix_banded(a, b, band=n // 8),
+                          x, y)
+        rows.append((f"dtw_jnp_n{n}", us_jnp, "full_matrix"))
+        rows.append((f"dtw_banded_n{n}", us_band,
+                     f"band={n//8};work_ratio~{2*(n//8)/n:.2f}"))
+    # pallas kernel (interpret mode on CPU -> correctness timing only)
+    x = rng.normal(size=128).astype(np.float32)
+    ys = rng.normal(size=(4, 128)).astype(np.float32)
+    us_k = _timeit(lambda a, b: dtw_batched(a, b), x, ys, reps=1)
+    rows.append(("dtw_pallas_interpret_n128_k4", us_k,
+                 "interpret-mode (CPU container); TPU target"))
+    for r in rows:
+        print(f"[dtw] {r[0]}: {r[1]:.0f}us {r[2]}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,44 @@
+"""Matching-phase accuracy (paper Fig. 4-b): leave-one-run-out over the
+three applications x parameter sets — does the matcher recover the true
+application family from an unseen run's CPU series?
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import mrsim
+from repro.core import match_application
+
+BAND = 8
+
+
+def run():
+    psets = mrsim.paper_param_sets()
+    apps = list(mrsim.APPS)
+    refs = {app: [mrsim.simulate_cpu_series(app, p, run=0) for p in psets]
+            for app in apps}
+
+    t0 = time.time()
+    correct = total = 0
+    for app in apps:
+        for run_id in (1, 2, 3):
+            qs = [mrsim.simulate_cpu_series(app, p, run=run_id)
+                  for p in psets]
+            res = match_application(qs, refs, band=BAND)
+            total += 1
+            if res.best == app:
+                correct += 1
+    dt = time.time() - t0
+    acc = correct / total
+    print(f"[matching] leave-one-run-out accuracy {correct}/{total} "
+          f"({100*acc:.0f}%)")
+    assert acc >= 0.8, "matching accuracy degraded"
+    return [("matching_accuracy", dt / total * 1e6, f"acc={acc:.3f}")]
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,69 @@
+"""Roofline report: aggregates the dry-run artifacts into the per-(arch x
+shape x mesh) table used by EXPERIMENTS.md §Roofline, and emits summary
+rows for the benchmark CSV.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "roofline_table.md")
+
+
+def load_records(pattern: str = "*.json"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ART_DIR, pattern))):
+        if "__tuned" in p or "__hc" in p:
+            continue
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r):
+    rf = r["roofline"]
+    t = rf["terms_seconds"]
+    mem_gb = r["memory_analysis"].get("temp_size_in_bytes", 0) / 1e9
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh_name']} "
+            f"| {t['compute']:.3e} | {t['memory']:.3e} "
+            f"| {t['collective']:.3e} | {rf['dominant']} "
+            f"| {rf['useful_compute_ratio']:.2f} "
+            f"| {rf['roofline_fraction']:.3f} | {mem_gb:.1f} |")
+
+
+def run():
+    recs = load_records()
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| dominant | useful ratio | roofline frac | temp GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    doms = {"compute": 0, "memory": 0, "collective": 0}
+    worst = None
+    for r in recs:
+        lines.append(fmt_row(r))
+        rf = r["roofline"]
+        doms[rf["dominant"]] += 1
+        key = (rf["roofline_fraction"], r["arch"], r["shape"])
+        if r["shape"] == "train_4k" and (worst is None or key < worst):
+            worst = key
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    with open(OUT_MD, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"[roofline] {len(recs)} cells -> {OUT_MD}")
+    print(f"[roofline] dominant-term histogram: {doms}")
+    if worst:
+        print(f"[roofline] worst train cell: {worst[1]} x {worst[2]} "
+              f"frac={worst[0]:.3f}")
+    return [("roofline_cells", float(len(recs)),
+             f"dominant_hist={doms}".replace(",", ";"))]
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

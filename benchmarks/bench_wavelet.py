@@ -1,0 +1,54 @@
+"""Wavelet-compressed matching (the paper's §5 future plan, implemented):
+speed vs fidelity against full DTW matching.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro import mrsim
+from repro.core import similarity, wavelet
+
+
+def run():
+    psets = mrsim.paper_param_sets()
+    pairs = []
+    for p in psets:
+        e = mrsim.simulate_cpu_series("exim", p, run=1)
+        for app in ("wordcount", "terasort"):
+            r = mrsim.simulate_cpu_series(app, p)
+            pairs.append((e, r, app))
+
+    # DTW ground truth ordering
+    t0 = time.time()
+    dtw_scores = [similarity(e, r, preprocess=True, band=8)
+                  for e, r, _ in pairs]
+    t_dtw = (time.time() - t0) / len(pairs) * 1e6
+
+    rows = []
+    for m in (16, 32, 64, 128):
+        t0 = time.time()
+        w_scores = [wavelet.wavelet_similarity(e, r, m=m) for e, r, _ in pairs]
+        t_w = (time.time() - t0) / len(pairs) * 1e6
+        # rank agreement: does wavelet matching order wc above ts per pset?
+        agree = 0
+        for j in range(len(psets)):
+            wc, ts = w_scores[2 * j], w_scores[2 * j + 1]
+            dwc, dts = dtw_scores[2 * j], dtw_scores[2 * j + 1]
+            agree += int((wc > ts) == (dwc > dts))
+        corr = np.corrcoef(dtw_scores, w_scores)[0, 1]
+        rows.append((f"wavelet_match_m{m}", t_w,
+                     f"speedup_vs_dtw={t_dtw/t_w:.1f}x"
+                     f";rank_agree={agree}/{len(psets)};corr={corr:.2f}"))
+        print(f"[wavelet] m={m}: {t_w:.0f}us/pair "
+              f"({t_dtw/t_w:.1f}x faster than DTW) rank agree {agree}/4 "
+              f"score-corr {corr:.2f}")
+    rows.append(("dtw_reference_matchcall", t_dtw, "baseline"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,51 @@
+"""Benchmark harness: one module per paper table/figure + framework
+deployment benches.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (bench_paper_table1, bench_matching, bench_dtw, bench_wavelet,
+               bench_autotune, bench_roofline)
+
+BENCHES = {
+    "paper_table1": bench_paper_table1.run,   # paper Table 1
+    "matching": bench_matching.run,           # paper Fig. 4-b / §5
+    "dtw": bench_dtw.run,                     # paper §3.1.2 scaling
+    "wavelet": bench_wavelet.run,             # paper §5 future plan
+    "autotune": bench_autotune.run,           # paper §4 end goal, on JAX
+    "roofline": bench_roofline.run,           # dry-run aggregation
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    failed = []
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n===== bench: {name} =====")
+        try:
+            rows.extend(fn())
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failed.append((name, repr(e)))
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""The paper's technique deployed on the framework itself: a new
+architecture inherits tuned execution parameters from its nearest
+utilization-signature neighbour instead of a parameter search.
+
+    PYTHONPATH=src python examples/autotune_workload.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import bench_autotune
+
+for name, us, derived in bench_autotune.run():
+    print(f"{name}: {us:.0f}us  {derived}")

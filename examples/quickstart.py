@@ -1,0 +1,41 @@
+"""Quickstart: the paper's full pipeline in ~40 lines.
+
+Profiling phase: simulate CPU-utilization series for WordCount and
+TeraSort under the paper's four {M, R, FS, I} parameter sets, de-noise
+with the 6th-order Chebyshev filter, store in the reference DB with their
+known-good configs.  Matching phase: a new application (Exim mainlog
+parsing) is DTW-matched and inherits WordCount's configuration.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import mrsim
+from repro.core import AutoTuner, ReferenceDB
+
+db = ReferenceDB()
+tuner = AutoTuner(db, band=8)
+
+# --- profiling phase (paper Fig. 4-a) -----------------------------------
+for app in ("wordcount", "terasort"):
+    for pset in mrsim.paper_param_sets():
+        series = mrsim.simulate_cpu_series(app, pset)
+        tuner.profile(app, pset.as_dict(), series)
+
+# suppose prior runs found these optimal configuration parameters:
+db.set_best_config("wordcount", {"mappers": 21, "reducers": 30,
+                                 "split_mb": 10, "input_mb": 80}, score=1.0)
+db.set_best_config("terasort", {"mappers": 42, "reducers": 33,
+                                "split_mb": 20, "input_mb": 60}, score=1.0)
+
+# --- matching phase (paper Fig. 4-b) -------------------------------------
+new_series = mrsim.simulate_cpu_series("exim", mrsim.paper_param_sets()[0],
+                                       run=1)
+decision = tuner.match("exim-mainlog", new_series)
+
+print("candidate scores:", {k: f"{v:.3f}" for k, v in decision.scores.items()})
+print(f"matched application: {decision.matched} "
+      f"(CORR={decision.corr:.3f} >= 0.9)")
+print(f"transferred configuration parameters: {decision.config}")
+assert decision.matched == "wordcount"

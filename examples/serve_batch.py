@@ -1,0 +1,12 @@
+"""Batched serving demo: prefill + greedy decode with a KV cache on a
+smoke-sized StarCoder2-family model (the 'serve a small model with
+batched requests' end-to-end path).
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.argv = ["serve", "--arch", "starcoder2-15b", "--smoke", "--batch", "4",
+            "--prompt-len", "32", "--max-new", "16"]
+import runpy
+runpy.run_module("repro.launch.serve", run_name="__main__")

@@ -1,0 +1,26 @@
+"""End-to-end training driver: decoder-only LM on the synthetic corpus
+with checkpoint/restart, cosine schedule and signature recording.
+
+Default run fits a CPU container; pass --hundred-m for the ~100M-param
+configuration (12L x 768, vocab 32768, seq 256, a few hundred steps —
+sized for a real accelerator).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+    PYTHONPATH=src python examples/train_lm.py --hundred-m --steps 300
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import runpy
+
+args = sys.argv[1:]
+if "--hundred-m" in args:
+    args.remove("--hundred-m")
+    args = ["--layers", "12", "--d-model", "768", "--vocab", "32768",
+            "--seq", "256", "--batch", "8"] + args
+else:
+    args = ["--layers", "4", "--d-model", "256", "--vocab", "4096",
+            "--seq", "128", "--batch", "4"] + args
+
+sys.argv = ["train"] + args + ["--ckpt-dir", "/tmp/repro_train_ckpt",
+                               "--tuner-db", "/tmp/repro_tuner_db"]
+runpy.run_module("repro.launch.train", run_name="__main__")

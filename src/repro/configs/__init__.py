@@ -1,0 +1,116 @@
+"""Architecture registry: one module per assigned architecture, plus the
+input-shape suite and ``input_specs`` (ShapeDtypeStruct stand-ins, no
+allocation) used by the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..sharding.rules import ExecConfig
+
+ARCHS = (
+    "xlstm-1p3b", "minitron-4b", "starcoder2-15b", "phi3-mini-3p8b",
+    "granite-20b", "musicgen-large", "deepseek-v2-236b", "kimi-k2-1t-a32b",
+    "qwen2-vl-2b", "zamba2-7b",
+)
+
+#: canonical ids from the assignment -> module names
+_ALIASES = {
+    "xlstm-1.3b": "xlstm-1p3b",
+    "phi3-mini-3.8b": "phi3-mini-3p8b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+#: long_500k is designated sub-quadratic-only (SSM / hybrid archs).
+LONG_CTX_ARCHS = ("xlstm-1p3b", "zamba2-7b")
+
+
+def canonical(arch: str) -> str:
+    return _ALIASES.get(arch, arch)
+
+
+def get(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{canonical(arch).replace('-', '_')}",
+                                  __package__)
+    return mod.CONFIG
+
+
+def exec_default(arch: str, shape: str) -> ExecConfig:
+    mod = importlib.import_module(f".{canonical(arch).replace('-', '_')}",
+                                  __package__)
+    table = getattr(mod, "EXEC", {})
+    return table.get(shape, table.get("default", ExecConfig()))
+
+
+def smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f".{canonical(arch).replace('-', '_')}",
+                                  __package__)
+    return mod.SMOKE
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells; full-attention archs skip long_500k."""
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            skip = shape == "long_500k" and arch not in LONG_CTX_ARCHS
+            if skip and not include_skipped:
+                continue
+            out.append((arch, shape, skip))
+    return out
+
+
+def input_specs(arch: str, shape: str,
+                reduced: Optional[ModelConfig] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct inputs for (arch x shape): the dry-run stand-ins.
+
+    train  -> {"tokens", "labels" (+"extra_embeds"/"positions" for stubs)}
+    prefill-> {"tokens", ...}
+    decode -> {"token", "pos"}
+    (caches are built separately via models.make_cache).
+    """
+    cfg = reduced if reduced is not None else get(arch)
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    i32 = jnp.int32
+    tok_shape: Tuple[int, ...] = (B, S)
+    if cfg.num_codebooks > 1:
+        tok_shape = (B, S, cfg.num_codebooks)
+
+    out: Dict[str, Any] = {}
+    if spec.kind in ("train", "prefill"):
+        out["tokens"] = jax.ShapeDtypeStruct(tok_shape, i32)
+        if spec.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct(tok_shape, i32)
+        if cfg.frontend == "vision":
+            # patch-embedding stub (precomputed by the frozen vision tower)
+            out["extra_embeds"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.bfloat16)
+            out["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+    else:  # decode
+        tshape = (B,) if cfg.num_codebooks == 1 else (B, cfg.num_codebooks)
+        out["token"] = jax.ShapeDtypeStruct(tshape, i32)
+        out["pos"] = jax.ShapeDtypeStruct((), i32)
+    return out

@@ -1,0 +1,35 @@
+"""Core library: the paper's contribution.
+
+Pipeline (paper Fig. 3/4): profile -> Chebyshev de-noise -> [0,1]
+normalize -> store in ReferenceDB; match new workloads with DTW +
+correlation (>= 0.9) and transfer the matched workload's best-known
+configuration parameters (AutoTuner).
+"""
+
+from .filters import cheby1_design, lfilter, filtfilt, denoise, normalize01, preprocess
+from .dtw import (cost_matrix, dtw_matrix, dtw_distance, dtw_matrix_banded,
+                  backtrack, warp_to, dtw_warp)
+from .similarity import (correlation, similarity, MatchResult, match_series,
+                         match_application, MATCH_THRESHOLD)
+from .wavelet import (haar_dwt, haar_idwt, compress, reconstruct,
+                      wavelet_distance, wavelet_similarity, match_series_wavelet)
+from .database import Entry, ReferenceDB
+from .signatures import (ChipSpec, TPU_V5E, OpCost, jaxpr_costs,
+                         utilization_series, signature_of)
+from .tuner import AutoTuner, TuneDecision
+from . import hloparse
+
+__all__ = [
+    "cheby1_design", "lfilter", "filtfilt", "denoise", "normalize01", "preprocess",
+    "cost_matrix", "dtw_matrix", "dtw_distance", "dtw_matrix_banded",
+    "backtrack", "warp_to", "dtw_warp",
+    "correlation", "similarity", "MatchResult", "match_series",
+    "match_application", "MATCH_THRESHOLD",
+    "haar_dwt", "haar_idwt", "compress", "reconstruct",
+    "wavelet_distance", "wavelet_similarity", "match_series_wavelet",
+    "Entry", "ReferenceDB",
+    "ChipSpec", "TPU_V5E", "OpCost", "jaxpr_costs", "utilization_series",
+    "signature_of",
+    "AutoTuner", "TuneDecision",
+    "hloparse",
+]

@@ -1,0 +1,128 @@
+"""Reference database of profiled workloads (paper Fig. 3-a / Fig. 4-a).
+
+Each entry stores ``(workload, params, series, meta)`` — in the paper:
+(application, {M, R, FS, I}, de-noised CPU series).  Here ``workload`` is a
+free-form id (e.g. ``"deepseek-v2-236b/train_4k"`` or ``"wordcount"``),
+``params`` the configuration-parameter values the series was captured
+under, and ``meta`` carries whatever tuning knowledge exists for the
+workload (best-known exec config, roofline terms, ...).
+
+Persistence is a directory with one ``.npz`` for the series plus an
+``index.json`` manifest — append-only, atomic (tmp+rename), safe for
+concurrent readers; this is the on-disk format the AutoTuner ships between
+jobs on a cluster.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["Entry", "ReferenceDB"]
+
+
+def _params_key(params: Mapping[str, Any]) -> str:
+    return json.dumps({k: params[k] for k in sorted(params)}, sort_keys=True)
+
+
+@dataclasses.dataclass
+class Entry:
+    workload: str
+    params: Dict[str, Any]
+    series: np.ndarray
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class ReferenceDB:
+    """In-memory reference DB with directory persistence."""
+
+    def __init__(self) -> None:
+        self._entries: List[Entry] = []
+
+    # -- population ---------------------------------------------------------
+    def add(self, workload: str, params: Mapping[str, Any],
+            series: np.ndarray, **meta: Any) -> Entry:
+        e = Entry(workload=str(workload), params=dict(params),
+                  series=np.asarray(series, np.float32), meta=dict(meta))
+        self._entries.append(e)
+        return e
+
+    # -- queries -------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def entries(self) -> Sequence[Entry]:
+        return tuple(self._entries)
+
+    def workloads(self) -> List[str]:
+        seen: List[str] = []
+        for e in self._entries:
+            if e.workload not in seen:
+                seen.append(e.workload)
+        return seen
+
+    def series_for(self, workload: str) -> List[Entry]:
+        return [e for e in self._entries if e.workload == workload]
+
+    def lookup(self, workload: str, params: Mapping[str, Any]) -> Optional[Entry]:
+        key = _params_key(params)
+        for e in self._entries:
+            if e.workload == workload and _params_key(e.params) == key:
+                return e
+        return None
+
+    def best_config(self, workload: str) -> Optional[Dict[str, Any]]:
+        """The stored best-known execution config for a workload, if any."""
+        best = None
+        for e in self.series_for(workload):
+            cfg = e.meta.get("best_config")
+            if cfg is None:
+                continue
+            score = e.meta.get("score", 0.0)
+            if best is None or score > best[0]:
+                best = (score, cfg)
+        return best[1] if best else None
+
+    def set_best_config(self, workload: str, config: Mapping[str, Any],
+                        score: float) -> None:
+        for e in self.series_for(workload):
+            e.meta["best_config"] = dict(config)
+            e.meta["score"] = float(score)
+
+    # -- persistence ----------------------------------------------------------
+    def save(self, path: str) -> None:
+        os.makedirs(path, exist_ok=True)
+        index = []
+        arrays = {}
+        for i, e in enumerate(self._entries):
+            key = f"s{i}"
+            arrays[key] = e.series
+            index.append({"workload": e.workload, "params": e.params,
+                          "meta": e.meta, "key": key})
+        # atomic: write into tmp files then rename (np.savez appends .npz)
+        fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp")
+        os.close(fd)
+        np.savez_compressed(tmp + ".npz", **arrays)
+        os.replace(tmp + ".npz", os.path.join(path, "series.npz"))
+        os.unlink(tmp)
+        fd, tmp = tempfile.mkstemp(dir=path, suffix=".json.tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump({"version": 1, "entries": index}, f, indent=1, default=str)
+        os.replace(tmp, os.path.join(path, "index.json"))
+
+    @classmethod
+    def load(cls, path: str) -> "ReferenceDB":
+        with open(os.path.join(path, "index.json")) as f:
+            index = json.load(f)
+        arrays = np.load(os.path.join(path, "series.npz"))
+        db = cls()
+        for rec in index["entries"]:
+            db.add(rec["workload"], rec["params"], arrays[rec["key"]],
+                   **rec.get("meta", {}))
+        return db

@@ -1,0 +1,182 @@
+"""Dynamic Time Warping (paper §3.1.2, Eq. 1-2).
+
+The paper's recurrence::
+
+    D(i, j) = d(x_i, y_j) + min(D(i, j-1), D(i-1, j), D(i-1, j-1))
+
+with ``d`` the pointwise Euclidean distance between utilization samples.
+
+Three implementations, all agreeing to float tolerance:
+
+* :func:`dtw_matrix` — pure-jnp, row-by-row ``lax.scan`` where each row is
+  solved with a **min-plus associative scan** (the in-row dependence
+  ``D[i,j] = min(m_j + d_j, D[i,j-1] + d_j)`` is an affine map in the
+  tropical semiring, hence associative).  Depth O(N log M) instead of
+  O(N·M); this is the TPU-friendly formulation and the ops-path default.
+* ``repro.kernels.dtw`` — Pallas wavefront kernel (anti-diagonal
+  parallelism across VPU lanes), validated against :mod:`ref` oracles.
+* a numpy O(N·M) double loop lives in ``repro/kernels/dtw/ref.py`` as the
+  oracle.
+
+Backtracking (to build the warped series Y' of Eq. 3) is data-dependent and
+O(N+M); it runs in numpy on the returned matrix.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "cost_matrix",
+    "dtw_matrix",
+    "dtw_distance",
+    "dtw_matrix_banded",
+    "backtrack",
+    "warp_to",
+    "dtw_warp",
+]
+
+_INF = jnp.float32(3.0e38)
+
+
+def cost_matrix(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Pairwise |x_i - y_j| (paper Eq. 2) -> [N, M]."""
+    return jnp.abs(x[:, None] - y[None, :]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# min-plus scan formulation
+# ---------------------------------------------------------------------------
+
+def _minplus_row(prev_row: jax.Array, d_row: jax.Array) -> jax.Array:
+    """Solve one DP row given the previous row.
+
+    m_j   = min(D[i-1, j], D[i-1, j-1])
+    D[i,j] = d[i,j] + min(m_j, D[i,j-1])
+           = min(s_j, D[i,j-1] + a_j)   with s_j = m_j + d_j, a_j = d_j.
+
+    The affine min-plus maps f_j(c) = min(c + a_j, s_j) compose
+    associatively: (f2 o f1)(c) = min(c + a1 + a2, min(s1 + a2, s2)).
+    """
+    shifted = jnp.concatenate([jnp.full((1,), _INF, prev_row.dtype), prev_row[:-1]])
+    m = jnp.minimum(prev_row, shifted)
+    s = m + d_row
+    a = d_row
+
+    def combine(f1, f2):  # f1 applied first
+        a1, s1 = f1
+        a2, s2 = f2
+        return a1 + a2, jnp.minimum(s1 + a2, s2)
+
+    a_acc, s_acc = jax.lax.associative_scan(combine, (a, s))
+    # initial carry c_{-1} = +inf  =>  D[i, j] = min(inf + a_acc, s_acc) = s_acc
+    del a_acc
+    return s_acc
+
+
+@jax.jit
+def dtw_matrix(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Full accumulated-cost matrix D — [N, M] (paper Eq. 1)."""
+    d = cost_matrix(x, y)
+
+    # Row 0: D[0, j] = cumsum(d[0, :j+1])
+    row0 = jnp.cumsum(d[0])
+
+    def step(prev_row, d_row):
+        row = _minplus_row(prev_row, d_row)
+        return row, row
+
+    _, rows = jax.lax.scan(step, row0, d[1:])
+    return jnp.concatenate([row0[None, :], rows], axis=0)
+
+
+@jax.jit
+def dtw_distance(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Similarity distance D(N, M) between two series."""
+    return dtw_matrix(x, y)[-1, -1]
+
+
+# ---------------------------------------------------------------------------
+# Sakoe-Chiba banded variant (beyond-paper: O(N*w) work)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("band",))
+def dtw_matrix_banded(x: jax.Array, y: jax.Array, band: int) -> jax.Array:
+    """DTW restricted to |i*M/N - j| <= band.  Returns full [N, M] matrix
+    with +inf outside the band (so backtracking still works)."""
+    n, m = x.shape[0], y.shape[0]
+    d = cost_matrix(x, y)
+    jj = jnp.arange(m)
+
+    def mask_row(i):
+        center = (i * (m - 1)) // max(n - 1, 1)
+        return (jnp.abs(jj - center) <= band)
+
+    d = jnp.where(jax.vmap(mask_row)(jnp.arange(n)), d, _INF)
+    row0 = jnp.where(mask_row(0), jnp.cumsum(d[0]), _INF)
+
+    def step(prev_row, d_row):
+        row = _minplus_row(prev_row, d_row)
+        row = jnp.where(d_row >= _INF, _INF, row)
+        return row, row
+
+    _, rows = jax.lax.scan(step, row0, d[1:])
+    return jnp.concatenate([row0[None, :], rows], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Backtracking / warping (numpy; O(N+M), data-dependent)
+# ---------------------------------------------------------------------------
+
+def backtrack(D: np.ndarray) -> np.ndarray:
+    """Minimum-distance path through D from (0,0) to (N-1,M-1).
+
+    Returns an int array [P, 2] of (i, j) pairs, monotonically
+    non-decreasing in both coordinates.
+    """
+    D = np.asarray(D)
+    n, m = D.shape
+    i, j = n - 1, m - 1
+    path = [(i, j)]
+    while i > 0 or j > 0:
+        if i == 0:
+            j -= 1
+        elif j == 0:
+            i -= 1
+        else:
+            candidates = (D[i - 1, j - 1], D[i - 1, j], D[i, j - 1])
+            k = int(np.argmin(candidates))
+            if k == 0:
+                i, j = i - 1, j - 1
+            elif k == 1:
+                i -= 1
+            else:
+                j -= 1
+        path.append((i, j))
+    return np.asarray(path[::-1], dtype=np.int64)
+
+
+def warp_to(y: np.ndarray, path: np.ndarray, n: int) -> np.ndarray:
+    """Build Y' (length n, aligned with X) from Y by repeating elements
+    along the DTW path (paper §3.1.2: "Y' is always made from Y by
+    repeating some of its elements based on D(X,Y)")."""
+    yp = np.empty(n, dtype=np.asarray(y).dtype)
+    for i, j in path:          # path is sorted by i; later pairs overwrite
+        yp[i] = y[j]
+    return yp
+
+
+def dtw_warp(x: np.ndarray, y: np.ndarray,
+             band: Optional[int] = None) -> Tuple[np.ndarray, float]:
+    """Full pipeline: DTW -> backtrack -> warped Y' and distance D(N,M)."""
+    x = jnp.asarray(x, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    D = np.asarray(dtw_matrix(x, yj) if band is None
+                   else dtw_matrix_banded(x, yj, band))
+    path = backtrack(D)
+    return warp_to(np.asarray(y), path, len(np.asarray(x))), float(D[-1, -1])

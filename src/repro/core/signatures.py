@@ -1,0 +1,177 @@
+"""Workload utilization signatures.
+
+The paper samples CPU utilization with SysStat at 1 Hz while a job runs.
+In this framework the equivalent observable is the *compute-utilization
+trace of one compiled step*: we walk the jaxpr of the step function in
+program order, assign every equation an estimated execution time on the
+target chip::
+
+    t_op = max(flops / peak_flops, bytes / hbm_bw)
+
+and a utilization value ``u_op = (flops/peak) / t_op`` (1.0 = perfectly
+compute-bound, ->0 = memory-bound), then sample the resulting
+piecewise-constant utilization function at a fixed number of points.  The
+series is then fed through the exact paper pipeline (Chebyshev de-noise,
+[0,1] normalization, DTW + correlation matching).
+
+``lax.scan`` bodies are expanded ``length`` times so the layer structure of
+a model shows up as the periodic pattern the paper's SysStat traces show
+for map/reduce waves.  The signature source is pluggable: on real hardware
+the same pipeline ingests per-step SysStat/xprof samples instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["ChipSpec", "TPU_V5E", "OpCost", "jaxpr_costs", "utilization_series",
+           "signature_of"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops: float        # bf16 FLOP/s per chip
+    hbm_bw: float            # bytes/s per chip
+    ici_bw: float            # bytes/s per link
+
+
+#: Target hardware for the whole repo (see system brief / EXPERIMENTS.md).
+TPU_V5E = ChipSpec(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+
+@dataclasses.dataclass
+class OpCost:
+    name: str
+    flops: float
+    bytes: float
+    depth: int = 0
+
+
+_TRANSCENDENTAL = {"exp", "log", "tanh", "logistic", "erf", "sin", "cos",
+                   "rsqrt", "sqrt", "pow", "cbrt", "log1p", "expm1", "erf_inv"}
+_INNER_JAXPR_PARAMS = ("jaxpr", "call_jaxpr", "body_jaxpr", "cond_jaxpr",
+                       "branches", "fun_jaxpr")
+
+
+def _aval_bytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape, dtype=np.float64)) * aval.dtype.itemsize
+    except Exception:
+        return 0.0
+
+
+def _aval_size(aval) -> float:
+    try:
+        return float(np.prod(aval.shape, dtype=np.float64))
+    except Exception:
+        return 0.0
+
+
+def _dot_flops(eqn) -> float:
+    (lhs, rhs) = (v.aval for v in eqn.invars[:2])
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    k = float(np.prod([lhs.shape[d] for d in lc], dtype=np.float64)) if lc else 1.0
+    out = _aval_size(eqn.outvars[0].aval)
+    return 2.0 * out * k
+
+
+def _conv_flops(eqn) -> float:
+    rhs = eqn.invars[1].aval
+    out = _aval_size(eqn.outvars[0].aval)
+    # per output element: 2 * (kernel spatial x in-channels)
+    k = float(np.prod(rhs.shape, dtype=np.float64)) / max(rhs.shape[-1], 1)
+    return 2.0 * out * k
+
+
+def _eqn_cost(eqn) -> Tuple[float, float]:
+    """(flops, bytes) for one non-container equation."""
+    name = eqn.primitive.name
+    in_bytes = sum(_aval_bytes(v.aval) for v in eqn.invars if hasattr(v, "aval"))
+    out_bytes = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+    out_size = sum(_aval_size(v.aval) for v in eqn.outvars)
+    if name == "dot_general":
+        flops = _dot_flops(eqn)
+    elif name == "conv_general_dilated":
+        flops = _conv_flops(eqn)
+    elif name in _TRANSCENDENTAL:
+        flops = 4.0 * out_size
+    elif name.startswith("reduce_") or name in ("argmax", "argmin"):
+        flops = sum(_aval_size(v.aval) for v in eqn.invars if hasattr(v, "aval"))
+    elif name in ("broadcast_in_dim", "reshape", "transpose", "convert_element_type",
+                  "slice", "dynamic_slice", "dynamic_update_slice", "concatenate",
+                  "gather", "scatter", "squeeze", "rev", "pad", "iota", "copy"):
+        flops = 0.0
+    else:
+        flops = out_size
+    return flops, in_bytes + out_bytes
+
+
+def jaxpr_costs(jaxpr, depth: int = 0, _out: List[OpCost] = None) -> List[OpCost]:
+    """Program-order per-op costs, expanding scan bodies ``length`` times."""
+    out = [] if _out is None else _out
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            body = eqn.params["jaxpr"].jaxpr
+            length = int(eqn.params["length"])
+            body_costs = jaxpr_costs(body, depth + 1)
+            # expand: the body repeats `length` times in program order
+            reps = min(length, 64)  # cap expansion; scale cost to keep totals exact
+            scale = length / reps
+            for _ in range(reps):
+                out.extend(OpCost(c.name, c.flops * scale, c.bytes * scale, c.depth)
+                           for c in body_costs)
+        elif name == "while":
+            body = eqn.params["body_jaxpr"].jaxpr
+            jaxpr_costs(body, depth + 1, out)
+        elif name == "cond":
+            branches = eqn.params["branches"]
+            if branches:
+                jaxpr_costs(branches[0].jaxpr, depth + 1, out)
+        elif name in ("pjit", "custom_vjp_call", "custom_jvp_call", "remat",
+                      "checkpoint", "custom_vjp_call_jaxpr", "closed_call"):
+            inner = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr") \
+                or eqn.params.get("fun_jaxpr")
+            if inner is not None:
+                jaxpr_costs(getattr(inner, "jaxpr", inner), depth, out)
+            else:
+                flops, nbytes = _eqn_cost(eqn)
+                out.append(OpCost(name, flops, nbytes, depth))
+        else:
+            flops, nbytes = _eqn_cost(eqn)
+            out.append(OpCost(name, flops, nbytes, depth))
+    return out
+
+
+def utilization_series(costs: Sequence[OpCost], samples: int = 512,
+                       chip: ChipSpec = TPU_V5E) -> np.ndarray:
+    """Piecewise-constant utilization trace sampled at ``samples`` points.
+
+    This is the framework analogue of the paper's 1 Hz SysStat CPU series.
+    """
+    if not costs:
+        return np.zeros(samples, np.float32)
+    t = np.array([max(c.flops / chip.peak_flops, c.bytes / chip.hbm_bw, 1e-12)
+                  for c in costs])
+    u = np.array([(c.flops / chip.peak_flops) / ti
+                  for c, ti in zip(costs, t)])
+    edges = np.concatenate([[0.0], np.cumsum(t)])
+    total = edges[-1]
+    sample_t = (np.arange(samples) + 0.5) * (total / samples)
+    idx = np.clip(np.searchsorted(edges, sample_t, side="right") - 1, 0, len(u) - 1)
+    return u[idx].astype(np.float32)
+
+
+def signature_of(fn: Callable, *args: Any, samples: int = 512,
+                 chip: ChipSpec = TPU_V5E, **kwargs: Any) -> np.ndarray:
+    """Trace ``fn(*args)`` abstractly (no execution, ShapeDtypeStructs are
+    fine) and return its utilization signature series."""
+    closed = jax.make_jaxpr(fn, **kwargs)(*args)
+    costs = jaxpr_costs(closed.jaxpr)
+    return utilization_series(costs, samples=samples, chip=chip)

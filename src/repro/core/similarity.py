@@ -1,0 +1,105 @@
+"""Similarity measurement (paper §3.1.3, Eq. 3) and the matching phase
+(paper Fig. 4-b).
+
+After DTW aligns reference series Y into Y' (same length as query X), the
+similarity is the correlation coefficient CORR(X, Y'); ``CORR >= 0.9`` is
+an acceptable match (threshold set empirically in the paper).  The matching
+phase compares the new application's series, per configuration-parameter
+set, with every database application's series for the *same* parameter set,
+and declares the application with the highest number of >=0.9 wins the most
+similar.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+from . import dtw as _dtw
+from . import filters as _filters
+
+__all__ = ["correlation", "similarity", "MatchResult", "match_series", "match_application"]
+
+#: Paper §3.1.3: acceptable-match threshold.
+MATCH_THRESHOLD = 0.9
+
+
+def correlation(x: np.ndarray, y: np.ndarray) -> float:
+    """Pearson correlation coefficient between equal-length series."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    if x.shape != y.shape:
+        raise ValueError(f"shape mismatch {x.shape} vs {y.shape}")
+    xc = x - x.mean()
+    yc = y - y.mean()
+    denom = np.sqrt((xc * xc).sum() * (yc * yc).sum())
+    if denom < 1e-12:
+        return 1.0 if np.allclose(x, y) else 0.0
+    return float((xc * yc).sum() / denom)
+
+
+def similarity(x: np.ndarray, y: np.ndarray, *, preprocess: bool = False,
+               band: Optional[int] = None) -> float:
+    """SIM(X, Y) in [0, 1]: DTW-align Y to X, then CORR(X, Y').
+
+    ``preprocess=True`` runs the paper's Chebyshev de-noise + [0,1]
+    normalization on both series first.
+    """
+    if preprocess:
+        x = np.asarray(_filters.preprocess(np.asarray(x, np.float32)))
+        y = np.asarray(_filters.preprocess(np.asarray(y, np.float32)))
+    yp, _ = _dtw.dtw_warp(x, y, band=band)
+    return float(np.clip(correlation(x, yp), 0.0, 1.0))
+
+
+@dataclasses.dataclass
+class MatchResult:
+    """Outcome of the matching phase for one query application."""
+    best: Optional[str]                 # app with most >=threshold wins
+    wins: Mapping[str, int]             # per-app count of matched param sets
+    scores: Mapping[str, Sequence[float]]  # per-app CORR per param set
+    threshold: float = MATCH_THRESHOLD
+
+
+def match_series(query: np.ndarray, references: Mapping[str, np.ndarray],
+                 *, preprocess: bool = True, band: Optional[int] = None
+                 ) -> Mapping[str, float]:
+    """Similarity of one query series against named reference series."""
+    return {name: similarity(query, ref, preprocess=preprocess, band=band)
+            for name, ref in references.items()}
+
+
+def match_application(query_series: Sequence[np.ndarray],
+                      reference_series: Mapping[str, Sequence[np.ndarray]],
+                      *, threshold: float = MATCH_THRESHOLD,
+                      preprocess: bool = True,
+                      band: Optional[int] = None) -> MatchResult:
+    """Paper Fig. 4-b: per parameter set j, score the query's series j
+    against every reference app's series j; an app scores a *win* when its
+    CORR is the highest of all apps AND >= threshold.  The app with the
+    most wins is the match."""
+    napps = {name: len(s) for name, s in reference_series.items()}
+    nsets = len(query_series)
+    for name, k in napps.items():
+        if k != nsets:
+            raise ValueError(f"{name} has {k} series, query has {nsets}")
+
+    scores = {name: [] for name in reference_series}
+    wins = {name: 0 for name in reference_series}
+    for j in range(nsets):
+        best_name, best_corr = None, -1.0
+        for name, series in reference_series.items():
+            c = similarity(query_series[j], series[j],
+                           preprocess=preprocess, band=band)
+            scores[name].append(c)
+            if c > best_corr:
+                best_name, best_corr = name, c
+        if best_name is not None and best_corr >= threshold:
+            wins[best_name] += 1
+
+    best = max(wins, key=lambda k: wins[k]) if wins else None
+    if best is not None and wins[best] == 0:
+        best = None
+    return MatchResult(best=best, wins=wins, scores=scores, threshold=threshold)

@@ -1,0 +1,132 @@
+"""AutoTuner — the paper's end goal as a framework feature.
+
+Given a *new* workload, the tuner (1) captures its utilization signature
+cheaply (abstract jaxpr trace; on hardware, a short profiled run on a small
+input — exactly the paper's "small set of data"), (2) matches it against
+the reference database with the paper's DTW + correlation pipeline, and
+(3) if the best match clears the 0.9 threshold, transfers that workload's
+best-known execution configuration (mesh layout, microbatch, remat policy,
+attention block size, ...) instead of running a parameter search.
+
+Hillclimbed configs discovered in EXPERIMENTS.md §Perf are recorded back
+into the database with :meth:`AutoTuner.record`, so tuning knowledge
+accumulates across workloads — e.g. kimi-k2 (MLA + MoE) matches
+deepseek-v2's signature and inherits its tuned sharding without search.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence
+
+import numpy as np
+
+from . import filters as _filters
+from . import wavelet as _wavelet
+from .similarity import MATCH_THRESHOLD, similarity as _sim
+from .database import ReferenceDB
+
+__all__ = ["TuneDecision", "AutoTuner"]
+
+
+@dataclasses.dataclass
+class TuneDecision:
+    workload: str
+    matched: Optional[str]            # workload id of the best DB match
+    corr: float                       # its correlation score
+    config: Optional[Dict[str, Any]]  # transferred exec config (None -> search)
+    scores: Dict[str, float]          # all candidate scores
+    used_wavelet_prefilter: bool = False
+
+
+class AutoTuner:
+    def __init__(self, db: ReferenceDB, *, threshold: float = MATCH_THRESHOLD,
+                 band: Optional[int] = None,
+                 wavelet_prefilter: int = 0,
+                 wavelet_coeffs: int = 64) -> None:
+        """``wavelet_prefilter``: if >0, rank candidates by the fast
+        wavelet-domain similarity first and run full DTW only on the top-k
+        (the paper's future-work scaling fix; beyond-paper feature)."""
+        self.db = db
+        self.threshold = threshold
+        self.band = band
+        self.wavelet_prefilter = wavelet_prefilter
+        self.wavelet_coeffs = wavelet_coeffs
+
+    # -- profiling -------------------------------------------------------------
+    @staticmethod
+    def preprocess(series: np.ndarray) -> np.ndarray:
+        """Paper pipeline: Chebyshev de-noise + [0,1] normalization."""
+        return np.asarray(_filters.preprocess(np.asarray(series, np.float32)))
+
+    def profile(self, workload: str, params: Mapping[str, Any],
+                series: np.ndarray, **meta: Any) -> None:
+        """Store a (de-noised) profiled series in the reference DB."""
+        self.db.add(workload, params, self.preprocess(series), **meta)
+
+    # -- matching ----------------------------------------------------------------
+    def match(self, workload: str, series: np.ndarray,
+              exclude: Sequence[str] = ()) -> TuneDecision:
+        q = self.preprocess(series)
+        candidates = [w for w in self.db.workloads()
+                      if w != workload and w not in exclude]
+
+        used_prefilter = False
+        if self.wavelet_prefilter and len(candidates) > self.wavelet_prefilter:
+            used_prefilter = True
+            wscores = []
+            for w in candidates:
+                best = max(_wavelet.wavelet_similarity(q, e.series, m=self.wavelet_coeffs)
+                           for e in self.db.series_for(w))
+                wscores.append((best, w))
+            wscores.sort(reverse=True)
+            candidates = [w for _, w in wscores[:self.wavelet_prefilter]]
+
+        scores: Dict[str, float] = {}
+        for w in candidates:
+            best = -1.0
+            for e in self.db.series_for(w):
+                c = _sim(q, e.series, preprocess=False,
+                                           band=self.band)
+                best = max(best, c)
+            scores[w] = best
+
+        matched, corr = None, -1.0
+        for w, c in scores.items():
+            if c > corr:
+                matched, corr = w, c
+
+        config = None
+        if matched is not None and corr >= self.threshold:
+            config = self.db.best_config(matched)
+        else:
+            matched = None if corr < self.threshold else matched
+        return TuneDecision(workload=workload, matched=matched, corr=max(corr, 0.0),
+                            config=config, scores=scores,
+                            used_wavelet_prefilter=used_prefilter)
+
+    # -- feedback ------------------------------------------------------------------
+    def record(self, workload: str, config: Mapping[str, Any], score: float,
+               series: Optional[np.ndarray] = None,
+               params: Optional[Mapping[str, Any]] = None) -> None:
+        """Record a tuned config (e.g. from a §Perf hillclimb) so future
+        workloads can inherit it via matching."""
+        if series is not None:
+            self.profile(workload, params or {}, series)
+        if not self.db.series_for(workload):
+            raise ValueError(f"no series stored for {workload}; pass series=")
+        self.db.set_best_config(workload, config, score)
+
+    def tune(self, workload: str, series: np.ndarray,
+             fallback: Optional[Callable[[], Mapping[str, Any]]] = None,
+             **profile_meta: Any) -> TuneDecision:
+        """Match; on success transfer config, else invoke the fallback
+        search (and record its outcome)."""
+        decision = self.match(workload, series)
+        if decision.config is None and fallback is not None:
+            cfg = dict(fallback())
+            self.profile(workload, profile_meta.pop("params", {}), series,
+                         **profile_meta)
+            self.db.set_best_config(workload, cfg, score=0.0)
+            decision = dataclasses.replace(decision, config=cfg)
+        return decision

@@ -1,0 +1,111 @@
+"""Haar wavelet compression of utilization series (the paper's §5 future
+plan, implemented here as a first-class beyond-paper feature).
+
+The paper notes DTW's quadratic cost makes cluster-scale matching (3N
+series per N-node cluster) expensive, and proposes representing each series
+by M wavelet coefficients so equal-length series can be compared with a
+plain distance instead of DTW.  We implement a Haar DWT, top-|coefficient|
+truncation, and the fast matcher; ``benchmarks/bench_wavelet.py`` measures
+the speed/fidelity trade-off against full DTW matching.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping
+
+import numpy as np
+
+__all__ = ["haar_dwt", "haar_idwt", "compress", "reconstruct",
+           "wavelet_distance", "wavelet_similarity", "match_series_wavelet"]
+
+_SQRT2 = np.sqrt(2.0)
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def haar_dwt(x: np.ndarray) -> np.ndarray:
+    """Full Haar decomposition.  Pads (edge) to a power of two.
+
+    Layout: [approx | level_k detail | ... | level_1 detail] — i.e. the
+    coarsest coefficients first.
+    """
+    x = np.asarray(x, np.float64)
+    n = _next_pow2(len(x))
+    if n != len(x):
+        x = np.pad(x, (0, n - len(x)), mode="edge")
+    out = []
+    cur = x
+    while len(cur) > 1:
+        even, odd = cur[0::2], cur[1::2]
+        out.append((even - odd) / _SQRT2)     # detail
+        cur = (even + odd) / _SQRT2           # approximation
+    out.append(cur)                            # final approx, length 1
+    return np.concatenate(out[::-1])
+
+
+def haar_idwt(c: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`haar_dwt` (returns the padded power-of-two length)."""
+    c = np.asarray(c, np.float64)
+    n = len(c)
+    cur = c[:1]
+    pos = 1
+    while pos < n:
+        detail = c[pos:pos + len(cur)]
+        even = (cur + detail) / _SQRT2
+        odd = (cur - detail) / _SQRT2
+        nxt = np.empty(2 * len(cur))
+        nxt[0::2], nxt[1::2] = even, odd
+        pos += len(cur)
+        cur = nxt
+    return cur
+
+
+def compress(x: np.ndarray, m: int) -> np.ndarray:
+    """Keep the M highest-energy coefficients (others zeroed), as the paper
+    proposes; returns the full-length sparse coefficient vector so distance
+    computation stays a plain vector op."""
+    c = haar_dwt(x)
+    if m >= len(c):
+        return c
+    keep = np.argsort(np.abs(c))[::-1][:m]
+    out = np.zeros_like(c)
+    out[keep] = c[keep]
+    return out
+
+
+def reconstruct(c: np.ndarray, length: int) -> np.ndarray:
+    return haar_idwt(c)[:length]
+
+
+def wavelet_distance(cx: np.ndarray, cy: np.ndarray) -> float:
+    """Plain Euclidean distance between (equal-length) coefficient vectors —
+    the paper's replacement for DTW on compressed series."""
+    n = max(len(cx), len(cy))
+    cx = np.pad(cx, (0, n - len(cx)))
+    cy = np.pad(cy, (0, n - len(cy)))
+    return float(np.linalg.norm(cx - cy))
+
+
+def wavelet_similarity(x: np.ndarray, y: np.ndarray, m: int = 64) -> float:
+    """Similarity in [0, 1] from compressed-domain correlation."""
+    n = max(_next_pow2(len(x)), _next_pow2(len(y)))
+    xp = np.pad(np.asarray(x, np.float64), (0, n - len(x)), mode="edge")
+    yp = np.pad(np.asarray(y, np.float64), (0, n - len(y)), mode="edge")
+    cx, cy = compress(xp, m), compress(yp, m)
+    num = float((cx * cy).sum())
+    den = float(np.linalg.norm(cx) * np.linalg.norm(cy))
+    if den < 1e-12:
+        return 1.0 if np.allclose(cx, cy) else 0.0
+    return float(np.clip(num / den, 0.0, 1.0))
+
+
+def match_series_wavelet(query: np.ndarray,
+                         references: Mapping[str, np.ndarray],
+                         m: int = 64) -> Mapping[str, float]:
+    return {name: wavelet_similarity(query, ref, m=m)
+            for name, ref in references.items()}

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticCorpus, FileCorpus, DataPipeline
+
+__all__ = ["SyntheticCorpus", "FileCorpus", "DataPipeline"]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each subpackage ships the kernel (pl.pallas_call + explicit BlockSpec VMEM
+tiling), a jitted wrapper (ops.py) and a pure-numpy oracle (ref.py):
+
+* ``dtw``       — the paper's DP, row-parallel min-plus wavefront
+* ``iir``       — batched Chebyshev de-noise (direct-form II transposed)
+* ``attention`` — causal GQA flash attention (online softmax)
+* ``gla``       — chunked gated-linear-attention scan (Mamba2/mLSTM core)
+"""
+
+from . import dtw, iir, attention, gla
+from .common import default_interpret
+
+__all__ = ["dtw", "iir", "attention", "gla", "default_interpret"]

@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: causal flash attention (GQA) forward.
+
+One grid program per (batch*kv_head, q-block): q/k/v tiles live in VMEM,
+the online-softmax state (m, l, acc) is carried through a ``fori_loop``
+over kv blocks, and fully-masked kv blocks beyond the causal frontier are
+skipped by bounding the loop at the q-block's last row — the causal-waste
+saving that the jnp oracle path (`models.attention._blockwise_attention`)
+cannot express with a static ``lax.scan``.
+
+Block sizes default to (128, 128): MXU-aligned on both matmul dims.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_kernel_call"]
+
+_NEG = -1.0e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
+                  seq_k: int, scale: float, causal: bool, groups: int):
+    """q block: [G, bq, dh]; k/v: full [T, dh] for this kv head."""
+    qi = pl.program_id(1)
+    q = q_ref[0].swapaxes(0, 1).astype(jnp.float32) * scale   # [G, bq, dh]
+    G, _, dh = q.shape
+    dv = v_ref.shape[-1]
+
+    nk = seq_k // bk
+    q_start = qi * bq
+    # causal frontier: kv blocks strictly above the diagonal are skipped
+    last = jnp.minimum(nk, (q_start + bq + bk - 1) // bk) if causal else nk
+
+    def body(ki, acc):
+        m, l, o = acc
+        k = k_ref[0, pl.dslice(ki * bk, bk)].astype(jnp.float32)   # [bk, dh]
+        v = v_ref[0, pl.dslice(ki * bk, bk)].astype(jnp.float32)   # [bk, dv]
+        s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())))    # [G,bq,bk]
+        if causal:
+            si = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            ti = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where((ti <= si)[None], s, _NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jax.lax.dot_general(
+            p, v, (((2,), (0,)), ((), ())))
+        return m_new, l_new, o_new
+
+    init = (jnp.full((G, bq), _NEG, jnp.float32),
+            jnp.zeros((G, bq), jnp.float32),
+            jnp.zeros((G, bq, dv), jnp.float32))
+    m, l, o = jax.lax.fori_loop(0, last, body, init)
+    out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(o_ref.dtype)
+    o_ref[0] = out.swapaxes(0, 1)                     # [bq, G, dv]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bk", "causal", "interpret"))
+def flash_attention_kernel_call(q, k, v, *, bq: int = 128, bk: int = 128,
+                                causal: bool = True, interpret: bool = True):
+    """q: [B, H, S, dh]; k/v: [B, KV, T, dh] -> o [B, H, S, dh].
+
+    S and T must be multiples of bq/bk (pad upstream); H % KV == 0.
+    """
+    B, H, S, dh = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    dv = v.shape[-1]
+    scale = dh ** -0.5
+    nq = S // bq
+
+    qg = q.reshape(B, KV, G, S, dh).transpose(0, 1, 3, 2, 4) \
+          .reshape(B * KV, S, G, dh)
+    kf = k.reshape(B * KV, T, dh)
+    vf = v.reshape(B * KV, T, dv)
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, seq_k=T,
+                               scale=scale, causal=causal, groups=G)
+
+    o = pl.pallas_call(
+        kernel,
+        grid=(B * KV, nq),
+        in_specs=[
+            pl.BlockSpec((1, bq, G, dh), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, T, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, T, dv), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, G, dv), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, S, G, dv), q.dtype),
+        interpret=interpret,
+    )(qg, kf, vf)
+    return o.reshape(B, KV, S, G, dv).transpose(0, 1, 3, 2, 4) \
+            .reshape(B, H, S, dv)

@@ -1,0 +1,17 @@
+"""Jitted public API for the flash-attention kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from ..common import default_interpret
+from .kernel import flash_attention_kernel_call
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(q, k, v, *, bq: int = 128, bk: int = 128,
+                    causal: bool = True, interpret: Optional[bool] = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return flash_attention_kernel_call(q, k, v, bq=bq, bk=bk, causal=causal,
+                                       interpret=interpret)

@@ -1,0 +1,14 @@
+"""Shared kernel utilities."""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["default_interpret"]
+
+
+def default_interpret() -> bool:
+    """Pallas kernels target TPU; on CPU hosts (this container) they run in
+    interpret mode, which executes the kernel body in Python for
+    correctness validation against the ref.py oracles."""
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,4 @@
+from .ops import dtw_batched, dtw_distances
+from .ref import dtw_matrix_ref
+
+__all__ = ["dtw_batched", "dtw_distances", "dtw_matrix_ref"]

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: batched DTW accumulated-cost matrix.
+
+TPU adaptation of the paper's CPU DP (DESIGN.md §2): the recurrence
+
+    D[i, j] = d[i, j] + min(D[i-1, j], D[i, j-1], D[i-1, j-1])
+
+is solved **row-parallel** — the in-row dependency is a min-plus (tropical
+semiring) affine recurrence
+
+    c_j = min(s_j, c_{j-1} + a_j),   s_j = min(D[i-1,j], D[i-1,j-1]) + d_j,
+                                     a_j = d_j
+
+whose maps compose associatively, so each row is a Hillis-Steele scan over
+the VPU lanes (log2(M) shift+min steps) and rows advance sequentially.
+One grid program per reference series (the matching phase compares one
+query against the whole reference DB); the full D matrix stays in a VMEM
+block and is written out for host-side backtracking (paper Eq. 3 needs the
+warped series Y').
+
+VMEM budget: the [N, M] f32 block must fit alongside the row scratch —
+N, M <= 1024 keeps it under 4 MiB, the practical size after the wavelet
+compression the paper proposes for cluster-scale series (its §5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = ["dtw_matrix_kernel"]
+
+_INF = 3.0e38  # plain float: jnp scalars become captured consts in Pallas
+
+
+def _minplus_scan(a: jax.Array, s: jax.Array, m_len: int) -> jax.Array:
+    """Inclusive scan of min-plus affine maps f_j(c) = min(c + a_j, s_j)
+    over the last axis; returns c_j = (f_j o ... o f_0)(+inf) = s-part."""
+    n_steps = int(np.ceil(np.log2(max(m_len, 2))))
+    # identity element: (a=0, s=+inf)
+    for t in range(n_steps):
+        off = 1 << t
+        a_l = jnp.pad(a, (off, 0), constant_values=0.0)[:-off]
+        s_l = jnp.pad(s, (off, 0), constant_values=_INF)[:-off]
+        # compose: left map first, then right (current) map
+        s = jnp.minimum(s_l + a, s)
+        a = a_l + a
+    return s
+
+
+def _dtw_kernel(x_ref, y_ref, d_ref, *, n: int, m: int):
+    """x: [N] query; y: [M] one reference; out D: [N, M]."""
+    x = x_ref[...]
+    y = y_ref[0]
+
+    jj = jax.lax.iota(jnp.int32, m)
+
+    def row(i, prev):
+        d = jnp.abs(x[i] - y)                                  # [M]
+        prev_shift = jnp.pad(prev, (1, 0), constant_values=_INF)[:-1]
+        mrow = jnp.minimum(prev, prev_shift)
+        s = jnp.where((i == 0) & (jj == 0), d, mrow + d)
+        s = jnp.where((i == 0) & (jj > 0), _INF, s)            # row0: only c_{-1} path
+        cur = _minplus_scan(d, s, m)
+        d_ref[0, i, :] = cur
+        return cur
+
+    jax.lax.fori_loop(0, n, row, jnp.full((m,), _INF, jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _dtw_call(x, ys, interpret: bool):
+    n = x.shape[0]
+    k, m = ys.shape
+    kernel = functools.partial(_dtw_kernel, n=n, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(k,),
+        in_specs=[pl.BlockSpec((n,), lambda i: (0,)),
+                  pl.BlockSpec((1, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n, m), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, n, m), jnp.float32),
+        interpret=interpret,
+    )(x, ys)
+
+
+def dtw_matrix_kernel(x, ys, interpret: bool = True):
+    """x: [N] f32; ys: [K, M] f32 -> D [K, N, M]."""
+    x = jnp.asarray(x, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    return _dtw_call(x, ys, interpret)

@@ -1,0 +1,25 @@
+"""Jitted public API for the batched DTW kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import default_interpret
+from .kernel import dtw_matrix_kernel
+
+__all__ = ["dtw_batched", "dtw_distances"]
+
+
+def dtw_batched(x, ys, interpret: Optional[bool] = None):
+    """Query x [N] against references ys [K, M] -> D matrices [K, N, M]."""
+    interpret = default_interpret() if interpret is None else interpret
+    return dtw_matrix_kernel(x, ys, interpret=interpret)
+
+
+def dtw_distances(x, ys, interpret: Optional[bool] = None):
+    """-> similarity distances D(N, M) per reference, shape [K]."""
+    D = dtw_batched(x, ys, interpret=interpret)
+    return D[:, -1, -1]

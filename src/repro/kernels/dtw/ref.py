@@ -1,0 +1,26 @@
+"""Pure-numpy O(N*M) oracle for the DTW kernel (paper Eq. 1-2)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["dtw_matrix_ref"]
+
+
+def dtw_matrix_ref(x: np.ndarray, y: np.ndarray) -> np.ndarray:
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    n, m = len(x), len(y)
+    D = np.empty((n, m), np.float64)
+    for i in range(n):
+        for j in range(m):
+            d = abs(x[i] - y[j])
+            if i == 0 and j == 0:
+                D[i, j] = d
+            elif i == 0:
+                D[i, j] = D[i, j - 1] + d
+            elif j == 0:
+                D[i, j] = D[i - 1, j] + d
+            else:
+                D[i, j] = d + min(D[i - 1, j], D[i, j - 1], D[i - 1, j - 1])
+    return D

@@ -1,0 +1,4 @@
+from .ops import gla_scan
+from .ref import gla_ref
+
+__all__ = ["gla_scan", "gla_ref"]

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: chunked gated linear attention (SSD / mLSTM core).
+
+Per head the recurrence  S_t = a_t S_{t-1} + k_t^T v_t,  o_t = q_t S_t
+is evaluated chunk-parallel: one grid program per (batch*head), a
+``fori_loop`` over chunks carrying the [dk, dv] state in f32; each chunk
+does three MXU matmuls (intra-chunk scores, inter-chunk read, state
+update) plus VPU decay weighting — the same math as
+``repro.models.ssm.gla_chunked`` and the ``ref.py`` step oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["gla_kernel_call"]
+
+
+def _gla_kernel(q_ref, k_ref, v_ref, g_ref, o_ref, s_ref, *,
+                chunk: int, seq: int):
+    """q/k: [S, dk]; v: [S, dv]; g: [S] (within-chunk cumsum of log_a)."""
+    dk = q_ref.shape[-1]
+    dv = v_ref.shape[-1]
+    nc = seq // chunk
+
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = ii >= jj
+
+    def body(ci, state):
+        sl = pl.dslice(ci * chunk, chunk)
+        qb = q_ref[0, sl].astype(jnp.float32)            # [L, dk]
+        kb = k_ref[0, sl].astype(jnp.float32)
+        vb = v_ref[0, sl].astype(jnp.float32)
+        gb = g_ref[0, sl].astype(jnp.float32)            # [L]
+
+        scores = jax.lax.dot_general(qb, kb, (((1,), (1,)), ((), ())))
+        decay = jnp.exp(gb[:, None] - gb[None, :])
+        scores = jnp.where(causal, scores * decay, 0.0)
+        o = jax.lax.dot_general(scores, vb, (((1,), (0,)), ((), ())))
+        o = o + jnp.exp(gb)[:, None] * jax.lax.dot_general(
+            qb, state, (((1,), (0,)), ((), ())))
+        o_ref[0, sl] = o.astype(o_ref.dtype)
+
+        w = jnp.exp(gb[-1] - gb)                         # [L]
+        state = (jnp.exp(gb[-1]) * state
+                 + jax.lax.dot_general(kb * w[:, None], vb,
+                                       (((0,), (0,)), ((), ()))))
+        return state
+
+    final = jax.lax.fori_loop(0, nc, body, jnp.zeros((dk, dv), jnp.float32))
+    s_ref[0] = final
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def gla_kernel_call(q, k, v, log_a, *, chunk: int = 128,
+                    interpret: bool = True):
+    """q,k: [B,H,S,dk]; v: [B,H,S,dv]; log_a: [B,H,S] (<=0).
+    Returns (o [B,H,S,dv], final_state [B,H,dk,dv]).
+    S must be a multiple of ``chunk`` (pad upstream)."""
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, "pad S to a multiple of chunk"
+    # within-chunk inclusive cumsum of log_a
+    g = jnp.cumsum(log_a.reshape(B, H, nc, chunk).astype(jnp.float32),
+                   axis=-1).reshape(B * H, S)
+    qf = q.reshape(B * H, S, dk)
+    kf = k.reshape(B * H, S, dk)
+    vf = v.reshape(B * H, S, dv)
+
+    kernel = functools.partial(_gla_kernel, chunk=chunk, seq=S)
+    o, s = pl.pallas_call(
+        kernel,
+        grid=(B * H,),
+        in_specs=[pl.BlockSpec((1, S, dk), lambda b: (b, 0, 0)),
+                  pl.BlockSpec((1, S, dk), lambda b: (b, 0, 0)),
+                  pl.BlockSpec((1, S, dv), lambda b: (b, 0, 0)),
+                  pl.BlockSpec((1, S), lambda b: (b, 0))],
+        out_specs=[pl.BlockSpec((1, S, dv), lambda b: (b, 0, 0)),
+                   pl.BlockSpec((1, dk, dv), lambda b: (b, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B * H, S, dv), v.dtype),
+                   jax.ShapeDtypeStruct((B * H, dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf, g)
+    return o.reshape(B, H, S, dv), s.reshape(B, H, dk, dv)

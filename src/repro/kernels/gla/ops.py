@@ -1,0 +1,16 @@
+"""Jitted public API for the GLA chunked-scan kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from ..common import default_interpret
+from .kernel import gla_kernel_call
+
+__all__ = ["gla_scan"]
+
+
+def gla_scan(q, k, v, log_a, *, chunk: int = 128,
+             interpret: Optional[bool] = None):
+    interpret = default_interpret() if interpret is None else interpret
+    return gla_kernel_call(q, k, v, log_a, chunk=chunk, interpret=interpret)

@@ -1,0 +1,4 @@
+from .ops import lfilter_batched
+from .ref import lfilter_ref
+
+__all__ = ["lfilter_batched", "lfilter_ref"]

@@ -1,0 +1,23 @@
+"""Jitted public API for the batched IIR kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..common import default_interpret
+from .kernel import iir_kernel_call
+
+__all__ = ["lfilter_batched"]
+
+
+def lfilter_batched(b, a, x, interpret: Optional[bool] = None):
+    """Filter a batch of series [B, T] along time (normalizes by a[0])."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64) / a[0]
+    a = a / a[0]
+    interpret = default_interpret() if interpret is None else interpret
+    import jax.numpy as jnp
+    return iir_kernel_call(jnp.asarray(b), jnp.asarray(a), x,
+                           interpret=interpret)

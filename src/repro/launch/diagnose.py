@@ -1,0 +1,90 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf diagnostics for a dry-run cell: top collectives and top
+byte-traffic instructions, with while-loop trip multipliers.
+
+    PYTHONPATH=src python -m repro.launch.diagnose --arch X --shape Y \
+        [--multi-pod] [--top 15] [--bytes]
+"""
+
+import argparse
+import re
+
+from ..core import hlocost
+
+
+def walk_costs(hlo: str):
+    comps, entry = hlocost._parse_computations(hlo)
+    an = hlocost._Analyzer(comps)
+    coll_rows, byte_rows = [], []
+
+    def walk(name, mult):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                trips = an._trip_count(mc.group(1)) if mc else 1.0
+                if mb:
+                    walk(mb.group(1), mult * trips)
+            elif ins.opcode in ("call", "conditional"):
+                for c in ins.callees:
+                    walk(c, mult)
+            else:
+                c = an._instr_cost(comp, ins, False)
+                m = re.search(r'op_name="([^"]*)"', ins.line)
+                op_name = m.group(1)[-100:] if m else "?"
+                base = ins.opcode.replace("-start", "").replace("-done", "")
+                if c.collective_bytes:
+                    coll_rows.append((sum(c.collective_bytes.values()) * mult,
+                                      mult, base, op_name))
+                elif c.bytes > 0:
+                    byte_rows.append((c.bytes * mult, mult, ins.opcode,
+                                      op_name))
+    walk(entry, 1.0)
+    coll_rows.sort(reverse=True)
+    byte_rows.sort(reverse=True)
+    return coll_rows, byte_rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--bytes", action="store_true")
+    ap.add_argument("--exec-json", default=None)
+    args = ap.parse_args()
+
+    import json as _json
+    from ..configs import exec_default
+    from ..sharding import rules
+    from .dryrun import build_cell
+    from .mesh import make_production_mesh
+
+    ex = None
+    if args.exec_json:
+        base = exec_default(args.arch, args.shape).as_dict()
+        base.update(_json.loads(args.exec_json))
+        ex = rules.ExecConfig.from_dict(base)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    fn, cell_args, meta = build_cell(args.arch, args.shape, mesh, ex)
+    hlo = fn.lower(*cell_args).compile().as_text()
+    coll_rows, byte_rows = walk_costs(hlo)
+
+    print(f"== collectives (total {sum(r[0] for r in coll_rows):.3e} B/chip)")
+    for b, mult, op, name in coll_rows[:args.top]:
+        print(f"  {b:.2e} x{mult:5.0f} {op:18s} {name}")
+    if args.bytes:
+        print(f"== HBM traffic (total {sum(r[0] for r in byte_rows):.3e} B/chip)")
+        for b, mult, op, name in byte_rows[:args.top]:
+            print(f"  {b:.2e} x{mult:5.0f} {op:18s} {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Single-host serving driver: batched prefill + greedy decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-vl-2b --smoke \
+        --batch 4 --prompt-len 64 --max-new 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from .. import configs as cfglib
+from ..models import model as model_lib
+from ..serve import ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minitron-4b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = cfglib.smoke_config(args.arch) if args.smoke else cfglib.get(args.arch)
+    cfg = dataclasses.replace(cfg, param_dtype="float32", dtype="float32")
+    params = model_lib.init(jax.random.PRNGKey(0), cfg)
+    print(f"[serve] {cfg.name}: {model_lib.param_count(params)/1e6:.1f}M params")
+
+    engine = ServeEngine(params, cfg,
+                         max_len=args.prompt_len + args.max_new,
+                         temperature=args.temperature)
+    rng = np.random.default_rng(0)
+    shape = (args.batch, args.prompt_len)
+    if cfg.num_codebooks > 1:
+        shape = shape + (cfg.num_codebooks,)
+    prompts = rng.integers(0, cfg.vocab_size, size=shape).astype(np.int32)
+
+    t0 = time.time()
+    out = engine.generate(prompts, max_new=args.max_new)
+    dt = time.time() - t0
+    n_tok = out.shape[0] * out.shape[1]
+    print(f"[serve] generated {out.shape} tokens in {dt:.2f}s "
+          f"({n_tok/dt:.0f} tok/s incl. prefill+compile)")
+    print(f"[serve] sample continuation: {out[0].reshape(out.shape[1], -1)[:8, 0]}")
+
+
+if __name__ == "__main__":
+    main()

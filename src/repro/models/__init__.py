@@ -1,0 +1,8 @@
+from .config import ModelConfig, segments
+from . import layers, attention, moe, ssm, model
+from .model import (init, make_cache, forward, loss_fn, prefill, decode_step,
+                    param_count, active_param_count)
+
+__all__ = ["ModelConfig", "segments", "layers", "attention", "moe", "ssm",
+           "model", "init", "make_cache", "forward", "loss_fn", "prefill",
+           "decode_step", "param_count", "active_param_count"]

@@ -1,0 +1,291 @@
+"""Attention blocks: GQA (with RoPE / M-RoPE) and MLA (DeepSeek-V2/V3,
+Kimi-K2 family), each with a training/prefill path and a KV-cache decode
+path.
+
+Long-sequence prefill uses a blockwise online-softmax attention
+(``flash``-style double ``lax.scan``) so the full [S, S] score matrix is
+never materialised — required for the 32k-prefill dry-run cells to fit
+HBM.  The Pallas kernel in ``repro.kernels.attention`` implements the same
+math for TPU; this file's jnp path is the oracle and the GSPMD lowering
+used by the dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Dtypes, dense, dense_init, mrope, rmsnorm, rmsnorm_init, rope
+
+__all__ = ["gqa_init", "gqa_apply", "mla_init", "mla_apply", "attention"]
+
+_NEG = -1e30
+
+
+def _apply_rope(cfg: ModelConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    if cfg.rope_kind == "rope":
+        return rope(x, positions, cfg.rope_theta)
+    if cfg.rope_kind == "mrope":
+        return mrope(x, positions, cfg.mrope_sections, cfg.rope_theta)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# core attention math (q: [B, S, H, dh]; k/v: [B, T, KV, dh])
+# ---------------------------------------------------------------------------
+
+def _plain_attention(q, k, v, *, causal: bool, q_offset, scale: float,
+                     kv_len: Optional[jax.Array] = None) -> jax.Array:
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    dv = v.shape[-1]
+    qg = q.reshape(B, S, KV, G, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    ti = jnp.arange(T)
+    if causal:
+        si = jnp.arange(S) + q_offset
+        scores = jnp.where(ti[None, :] <= si[:, None], scores, _NEG)
+    if kv_len is not None:
+        scores = jnp.where(ti < kv_len, scores, _NEG)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H, dv)
+
+
+def _blockwise_attention(q, k, v, *, causal: bool, q_offset, scale: float,
+                         block_q: int, block_kv: int,
+                         kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Online-softmax attention; O(block_q x block_kv) live scores."""
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    dv = v.shape[-1]
+    bq, bk = min(block_q, S), min(block_kv, T)
+    nq, nk = -(-S // bq), -(-T // bk)
+    Sp, Tp = nq * bq, nk * bk
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    qb = qp.reshape(B, nq, bq, KV, G, dh)
+    kb = kp.reshape(B, nk, bk, KV, dh)
+    vb = vp.reshape(B, nk, bk, KV, dv)
+
+    tvalid = jnp.arange(Tp).reshape(nk, bk) < (T if kv_len is None else kv_len)
+
+    # Each (q-block x kv-block) tile is checkpointed: its backward
+    # recomputes scores/probabilities from (q, k) instead of stacking
+    # per-step residuals across both scans — without this the saved
+    # masks/probs are O(S*T/blocks) per layer and dominate HBM.
+    @jax.checkpoint
+    @jax.named_scope("flash_tile")
+    def kv_tile(acc, qblk, kblk, vblk, si, ki):
+        m, l, o = acc
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qblk, kblk)
+        s = s.astype(jnp.float32) * scale                    # [B,KV,G,bq,bk]
+        mask = tvalid[ki][None, :]
+        if causal:
+            ti = ki * bk + jnp.arange(bk)
+            mask = mask & (ti[None, :] <= si[:, None])
+        s = jnp.where(mask[None, None, None], s, _NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bkgqt,btkd->bkgqd", p.astype(vblk.dtype), vblk).astype(jnp.float32)
+        return m_new, l_new, o_new
+
+    def q_block(carry, qi):
+        qblk = qb[:, qi]                                     # [B,bq,KV,G,dh]
+        si = qi * bq + jnp.arange(bq) + q_offset
+
+        def kv_block(acc, ki):
+            return kv_tile(acc, qblk, kb[:, ki], vb[:, ki], si, ki), None
+
+        init = (jnp.full((B, KV, G, bq), _NEG, jnp.float32),
+                jnp.zeros((B, KV, G, bq), jnp.float32),
+                jnp.zeros((B, KV, G, bq, dv), jnp.float32))
+        (m, l, o), _ = jax.lax.scan(kv_block, init, jnp.arange(nk))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        return carry, o.astype(q.dtype)                      # [B,KV,G,bq,dv]
+
+    _, outs = jax.lax.scan(q_block, (), jnp.arange(nq))      # [nq,B,KV,G,bq,dv]
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 4, 2, 3, 5)  # B,nq,bq,KV,G,dv
+    return out.reshape(B, Sp, H, dv)[:, :S]
+
+
+def attention(q, k, v, cfg: ModelConfig, *, causal: bool = True, q_offset=0,
+              scale: Optional[float] = None,
+              kv_len: Optional[jax.Array] = None) -> jax.Array:
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    use_blockwise = (q.shape[1] >= cfg.blockwise_attn_threshold
+                     or k.shape[1] >= cfg.blockwise_attn_threshold)
+    if use_blockwise and q.shape[1] > 1:
+        return _blockwise_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                    scale=scale, block_q=cfg.attn_block_q,
+                                    block_kv=cfg.attn_block_kv, kv_len=kv_len)
+    return _plain_attention(q, k, v, causal=causal, q_offset=q_offset,
+                            scale=scale, kv_len=kv_len)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig) -> Dict:
+    pd = Dtypes.param(cfg)
+    H, KV, dh, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], D, H * dh, pd),
+            "wk": dense_init(ks[1], D, KV * dh, pd),
+            "wv": dense_init(ks[2], D, KV * dh, pd),
+            "wo": dense_init(ks[3], H * dh, D, pd)}
+
+
+def gqa_apply(p, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+              cache: Optional[Dict] = None, cache_pos=None,
+              shard=lambda x, k: x) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: [B, S, D].  With a cache: append K/V at ``cache_pos`` and attend
+    over the filled prefix (decode/prefill-with-cache)."""
+    B, S, D = x.shape
+    H, KV, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = shard(dense(p["wq"], x).reshape(B, S, H, dh), "heads")
+    k = shard(dense(p["wk"], x).reshape(B, S, KV, dh), "heads")
+    v = shard(dense(p["wv"], x).reshape(B, S, KV, dh), "heads")
+    q = _apply_rope(cfg, q, positions)
+    k = _apply_rope(cfg, k, positions)
+
+    if cache is None:
+        out = attention(q, k, v, cfg, causal=True, q_offset=0)
+        new_cache = None
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, cache_pos, 0, 0))
+        kv_len = cache_pos + S
+        out = attention(q, ck.astype(q.dtype), cv.astype(q.dtype), cfg,
+                        causal=True, q_offset=cache_pos, kv_len=kv_len)
+        new_cache = {"k": ck, "v": cv}
+    return dense(p["wo"], out.reshape(B, S, H * dh)), new_cache
+
+
+def gqa_cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    dt = Dtypes.compute(cfg)
+    return {"k": jax.ShapeDtypeStruct(shape, dt),
+            "v": jax.ShapeDtypeStruct(shape, dt)}
+
+
+# ---------------------------------------------------------------------------
+# MLA block (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig) -> Dict:
+    pd = Dtypes.param(cfg)
+    D, H = cfg.d_model, cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kl = cfg.kv_lora_rank
+    ks = jax.random.split(key, 8)
+    p: Dict = {}
+    if cfg.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], D, cfg.q_lora_rank, pd)
+        p["q_norm"] = rmsnorm_init(cfg.q_lora_rank, pd)
+        p["wq_b"] = dense_init(ks[1], cfg.q_lora_rank, H * (dn + dr), pd)
+    else:
+        p["wq"] = dense_init(ks[0], D, H * (dn + dr), pd)
+    p["wkv_a"] = dense_init(ks[2], D, kl + dr, pd)      # -> [c_kv | k_rope]
+    p["kv_norm"] = rmsnorm_init(kl, pd)
+    p["wk_b"] = dense_init(ks[3], kl, H * dn, pd)
+    p["wv_b"] = dense_init(ks[4], kl, H * dv, pd)
+    p["wo"] = dense_init(ks[5], H * dv, D, pd)
+    return p
+
+
+def _mla_qkv(p, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        q = dense(p["wq_b"], rmsnorm(p["q_norm"], dense(p["wq_a"], x),
+                                     cfg.norm_eps))
+    else:
+        q = dense(p["wq"], x)
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv = dense(p["wkv_a"], x)
+    c_kv = rmsnorm(p["kv_norm"], kv[..., :cfg.kv_lora_rank], cfg.norm_eps)
+    k_rope = rope(kv[..., cfg.kv_lora_rank:].reshape(B, S, 1, dr), positions,
+                  cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(p, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+              cache: Optional[Dict] = None, cache_pos=None,
+              shard=lambda x, k: x) -> Tuple[jax.Array, Optional[Dict]]:
+    """MLA with compressed-latent cache.
+
+    Train/prefill: decompress K/V per head and run blockwise attention.
+    Decode (S small): *absorbed* form — queries are pulled into the latent
+    space (q~ = q_nope @ W_kb) so attention runs against the [T, kv_lora]
+    latent cache directly; this is MLA's serving advantage and is what the
+    decode dry-run cells measure.
+    """
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kl = cfg.kv_lora_rank
+    scale = (dn + dr) ** -0.5
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, positions)
+    q_nope = shard(q_nope, "heads")
+
+    if cache is not None:
+        cc = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_pos, 0))
+        cr = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            (0, cache_pos, 0))
+        new_cache = {"c_kv": cc, "k_rope": cr}
+        kv_len = cache_pos + S
+    else:
+        cc, cr, new_cache, kv_len = c_kv, k_rope, None, None
+
+    wk_b = p["wk_b"]["w"].astype(x.dtype).reshape(kl, H, dn)
+    wv_b = p["wv_b"]["w"].astype(x.dtype).reshape(kl, H, dv)
+
+    if S == 1 and cache is not None:
+        # absorbed decode: scores over the latent cache, no K/V expansion
+        q_lat = jnp.einsum("bshd,lhd->bshl", q_nope, wk_b)        # [B,1,H,kl]
+        s_lat = jnp.einsum("bshl,btl->bhst", q_lat, cc.astype(x.dtype))
+        s_pe = jnp.einsum("bshd,btd->bhst", q_rope, cr.astype(x.dtype))
+        s = (s_lat + s_pe).astype(jnp.float32) * scale
+        ti = jnp.arange(cc.shape[1])
+        s = jnp.where(ti[None, None, None, :] < kv_len, s, _NEG)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o_lat = jnp.einsum("bhst,btl->bshl", w, cc.astype(x.dtype))
+        out = jnp.einsum("bshl,lhd->bshd", o_lat, wv_b)           # [B,1,H,dv]
+    else:
+        T = cc.shape[1]
+        k_nope = shard(jnp.einsum("btl,lhd->bthd", cc.astype(x.dtype), wk_b),
+                       "heads")
+        v = shard(jnp.einsum("btl,lhd->bthd", cc.astype(x.dtype), wv_b),
+                  "heads")
+        k_pe = jnp.broadcast_to(cr.astype(x.dtype)[:, :, None, :], (B, T, H, dr))
+        k = jnp.concatenate([k_nope, k_pe], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = attention(q, k, v, cfg, causal=True,
+                        q_offset=0 if cache is None else cache_pos,
+                        scale=scale, kv_len=kv_len)
+    return dense(p["wo"], out.reshape(B, S, H * dv)), new_cache
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    dt = Dtypes.compute(cfg)
+    return {"c_kv": jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank), dt),
+            "k_rope": jax.ShapeDtypeStruct((batch, max_len, cfg.qk_rope_head_dim), dt)}

@@ -1,0 +1,358 @@
+"""Decoder-only LM assembly: scan-over-layers segments, heterogeneous block
+patterns, KV/SSM caches, train loss, prefill and decode.
+
+Params layout::
+
+    {"embed": {...}, "final_norm": {...},
+     "shared_attn": {...}?                      # zamba2 shared block
+     "segments": [ {kind_name: stacked-params [repeats, ...], ...}, ... ]}
+
+Caches mirror segments: ``cache["segments"][i][kind_name]`` is a pytree
+stacked on the leading ``repeats`` axis, scanned alongside the params.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .config import ModelConfig, Segment, segments
+from .layers import (Dtypes, cross_entropy, embed, embed_init, mlp, mlp_init,
+                     rmsnorm, rmsnorm_init, unembed)
+
+__all__ = ["init", "make_cache", "forward", "loss_fn", "prefill",
+           "decode_step", "param_count", "active_param_count"]
+
+ShardFn = Callable[[jax.Array, str], jax.Array]
+_id_shard: ShardFn = lambda x, kind: x
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, kind: str, cfg: ModelConfig) -> Dict:
+    if kind in ("attn", "attn_dense", "attn_moe"):
+        ks = jax.random.split(key, 4)
+        p = {"ln1": rmsnorm_init(cfg.d_model, Dtypes.param(cfg)),
+             "ln2": rmsnorm_init(cfg.d_model, Dtypes.param(cfg))}
+        if cfg.attn_kind == "mla":
+            p["attn"] = attn_mod.mla_init(ks[0], cfg)
+        else:
+            p["attn"] = attn_mod.gqa_init(ks[0], cfg)
+        if kind == "attn_moe":
+            p["moe"] = moe_mod.moe_init(ks[1], cfg)
+        else:
+            p["mlp"] = mlp_init(ks[1], cfg)
+        return p
+    if kind == "mamba2":
+        return {"ln": rmsnorm_init(cfg.d_model, Dtypes.param(cfg)),
+                "mix": ssm_mod.mamba2_init(key, cfg)}
+    if kind == "mlstm":
+        return {"ln": rmsnorm_init(cfg.d_model, Dtypes.param(cfg)),
+                "mix": ssm_mod.mlstm_init(key, cfg)}
+    if kind == "slstm":
+        return {"ln": rmsnorm_init(cfg.d_model, Dtypes.param(cfg)),
+                "mix": ssm_mod.slstm_init(key, cfg)}
+    if kind == "shared_attn":
+        return {}  # weights live in params["shared_attn"]
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def _shared_attn_init(key, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 2)
+    return {"ln1": rmsnorm_init(cfg.d_model, Dtypes.param(cfg)),
+            "ln2": rmsnorm_init(cfg.d_model, Dtypes.param(cfg)),
+            "attn": attn_mod.gqa_init(ks[0], cfg),
+            "mlp": mlp_init(ks[1], cfg)}
+
+
+def init(key, cfg: ModelConfig) -> Dict:
+    keys = jax.random.split(key, 3 + len(segments(cfg)))
+    params: Dict[str, Any] = {"embed": embed_init(keys[0], cfg),
+                              "final_norm": rmsnorm_init(cfg.d_model,
+                                                         Dtypes.param(cfg))}
+    if any("shared_attn" in s.kinds for s in segments(cfg)):
+        params["shared_attn"] = _shared_attn_init(keys[1], cfg)
+
+    segs = []
+    for si, seg in enumerate(segments(cfg)):
+        kseg = jax.random.split(keys[2 + si], seg.repeats * len(seg.kinds))
+        kseg = kseg.reshape(seg.repeats, len(seg.kinds), 2)
+        seg_params = {}
+        for ki, kind in enumerate(seg.kinds):
+            name = f"{ki}_{kind}"
+            stacked = jax.vmap(lambda k, kind=kind: _block_init(k, kind, cfg)
+                               )(kseg[:, ki])
+            seg_params[name] = stacked
+        segs.append(seg_params)
+    params["segments"] = segs
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _block_cache_spec(kind: str, cfg: ModelConfig, batch: int, max_len: int):
+    if kind in ("attn", "attn_dense", "attn_moe"):
+        if cfg.attn_kind == "mla":
+            return attn_mod.mla_cache_spec(cfg, batch, max_len)
+        return attn_mod.gqa_cache_spec(cfg, batch, max_len)
+    if kind == "shared_attn":
+        return attn_mod.gqa_cache_spec(cfg, batch, max_len)
+    if kind == "mamba2":
+        return ssm_mod.mamba2_state_spec(cfg, batch)
+    if kind == "mlstm":
+        return ssm_mod.mlstm_state_spec(cfg, batch)
+    if kind == "slstm":
+        return ssm_mod.slstm_state_spec(cfg, batch)
+    raise ValueError(kind)
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               concrete: bool = False) -> Dict:
+    """Cache pytree of ShapeDtypeStructs (``concrete=False``) or zeros."""
+    def stack(spec, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec)
+
+    segs = []
+    for seg in segments(cfg):
+        seg_cache = {}
+        for ki, kind in enumerate(seg.kinds):
+            spec = _block_cache_spec(kind, cfg, batch, max_len)
+            seg_cache[f"{ki}_{kind}"] = stack(spec, seg.repeats)
+        segs.append(seg_cache)
+    cache = {"segments": segs}
+    if concrete:
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_block(kind: str, p, x, cfg: ModelConfig, positions, cache,
+                 cache_pos, shared_params, mesh, data_axes, shard: ShardFn):
+    """-> (x, new_cache, aux)"""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "attn_dense", "attn_moe"):
+        apply_attn = (attn_mod.mla_apply if cfg.attn_kind == "mla"
+                      else attn_mod.gqa_apply)
+        h, new_attn_cache = apply_attn(p["attn"],
+                                       rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                       cfg, positions, cache, cache_pos,
+                                       shard=shard)
+        x = shard(x + h, "resid")
+        h2_in = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if kind == "attn_moe":
+            h2, aux = moe_mod.moe_apply(p["moe"], h2_in, cfg, mesh=mesh,
+                                        data_axes=data_axes,
+                                        expert_tp=cfg.moe_expert_tp)
+        else:
+            h2 = mlp(p["mlp"], h2_in, cfg, shard=shard)
+        x = shard(x + h2, "resid")
+        return x, new_attn_cache, aux
+    if kind == "shared_attn":
+        sp = shared_params
+        h, new_cache = attn_mod.gqa_apply(sp["attn"],
+                                          rmsnorm(sp["ln1"], x, cfg.norm_eps),
+                                          cfg, positions, cache, cache_pos,
+                                          shard=shard)
+        x = shard(x + h, "resid")
+        x = shard(x + mlp(sp["mlp"], rmsnorm(sp["ln2"], x, cfg.norm_eps), cfg,
+                          shard=shard), "resid")
+        return x, new_cache, aux
+    if kind == "slstm":
+        h, new_cache = ssm_mod.slstm_apply(
+            p["mix"], rmsnorm(p["ln"], x, cfg.norm_eps), cfg, cache)
+    else:
+        mix = {"mamba2": ssm_mod.mamba2_apply,
+               "mlstm": ssm_mod.mlstm_apply}[kind]
+        h, new_cache = mix(p["mix"], rmsnorm(p["ln"], x, cfg.norm_eps), cfg,
+                           cache, shard=shard)
+    x = shard(x + h, "resid")
+    return x, new_cache, aux
+
+
+def _remat_wrap(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def _run_segments(params, x, cfg: ModelConfig, positions, caches, cache_pos,
+                  mesh, data_axes, shard: ShardFn):
+    """Scan every segment.  ``caches`` None for training."""
+    shared = params.get("shared_attn")
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: List[Any] = []
+
+    for si, seg in enumerate(segments(cfg)):
+        seg_params = params["segments"][si]
+        seg_cache = None if caches is None else caches["segments"][si]
+
+        def body(x, layer_inputs, seg=seg):
+            lp, lc = layer_inputs
+            # re-assert the carry sharding at body entry: under remat the
+            # saved per-layer residual is the body *input*, and without a
+            # constraint XLA stores it replicated (measured 56 GB of the
+            # kimi train_4k temp footprint)
+            x = shard(x, "resid")
+            aux_sum = jnp.zeros((), jnp.float32)
+            new_lc = {} if lc is not None else None
+            for ki, kind in enumerate(seg.kinds):
+                name = f"{ki}_{kind}"
+                blk_cache = None if lc is None else lc[name]
+                x, nc, aux = _apply_block(kind, lp[name], x, cfg, positions,
+                                          blk_cache, cache_pos, shared, mesh,
+                                          data_axes, shard)
+                aux_sum = aux_sum + aux
+                if new_lc is not None:
+                    new_lc[name] = nc
+            return x, (new_lc, aux_sum)
+
+        body = _remat_wrap(body, cfg)
+
+        if seg.repeats == 1 or not cfg.scan_layers:
+            # unrolled path
+            outs = []
+            for r in range(seg.repeats):
+                lp = jax.tree.map(lambda a: a[r], seg_params)
+                lc = (None if seg_cache is None
+                      else jax.tree.map(lambda a: a[r], seg_cache))
+                x, (nlc, aux) = body(x, (lp, lc))
+                aux_total = aux_total + aux
+                outs.append(nlc)
+            if seg_cache is not None:
+                new_caches.append(jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *outs))
+            else:
+                new_caches.append(None)
+        else:
+            def scan_body(x, layer_inputs):
+                x, (nlc, aux) = body(x, layer_inputs)
+                return x, (nlc, aux)
+
+            x, (nlc_stacked, auxs) = jax.lax.scan(
+                scan_body, x, (seg_params, seg_cache))
+            aux_total = aux_total + auxs.sum()
+            new_caches.append(nlc_stacked)
+    return x, new_caches, aux_total
+
+
+def _default_positions(cfg: ModelConfig, batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope_kind == "mrope":
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+def forward(params, tokens: jax.Array, cfg: ModelConfig, *,
+            positions: Optional[jax.Array] = None,
+            extra_embeds: Optional[jax.Array] = None,
+            mesh=None, data_axes=("data",), shard: ShardFn = _id_shard
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Training/scoring forward pass -> (logits [B,S,V*nb], aux_loss)."""
+    B, S = tokens.shape[:2]
+    x = embed(params["embed"], tokens, cfg)
+    if extra_embeds is not None:     # modality stub: precomputed embeddings
+        x = x + extra_embeds.astype(x.dtype)
+    x = shard(x, "resid")
+    if positions is None:
+        positions = _default_positions(cfg, B, S)
+    x, _, aux = _run_segments(params, x, cfg, positions, None, None, mesh,
+                              data_axes, shard)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = shard(unembed(params["embed"], x, cfg), "logits")
+    return logits, aux
+
+
+def loss_fn(params, batch: Dict, cfg: ModelConfig, *, mesh=None,
+            data_axes=("data",), shard: ShardFn = _id_shard) -> Tuple[jax.Array, Dict]:
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          positions=batch.get("positions"),
+                          extra_embeds=batch.get("extra_embeds"),
+                          mesh=mesh, data_axes=data_axes, shard=shard)
+    labels = batch["labels"]
+    if labels.ndim == 3:             # musicgen: [B,S,nb] codebook targets
+        nb = labels.shape[-1]
+        logits = logits.reshape(logits.shape[:2] + (nb, cfg.vocab_size))
+    ce = cross_entropy(logits, labels, batch.get("mask"))
+    loss = ce + cfg.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def prefill(params, tokens: jax.Array, cache: Dict, cfg: ModelConfig, *,
+            positions=None, extra_embeds=None, mesh=None,
+            data_axes=("data",), shard: ShardFn = _id_shard):
+    """Process the prompt, fill the cache.  Returns (last_logits, cache)."""
+    B, S = tokens.shape[:2]
+    x = embed(params["embed"], tokens, cfg)
+    if extra_embeds is not None:
+        x = x + extra_embeds.astype(x.dtype)
+    x = shard(x, "resid")
+    if positions is None:
+        positions = _default_positions(cfg, B, S)
+    x, new_caches, _ = _run_segments(params, x, cfg, positions, cache,
+                                     jnp.int32(0), mesh, data_axes, shard)
+    x = rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg)[:, 0]
+    return logits, {"segments": new_caches}
+
+
+def decode_step(params, token: jax.Array, cache: Dict, pos: jax.Array,
+                cfg: ModelConfig, *, mesh=None, data_axes=("data",),
+                shard: ShardFn = _id_shard):
+    """One decode step.  token: [B] (or [B, nb]); pos: scalar int32.
+    Returns (logits [B, V*nb], new_cache)."""
+    tok = token[:, None] if token.ndim == 1 else token[:, None, :]
+    B = tok.shape[0]
+    x = embed(params["embed"], tok, cfg)
+    x = shard(x, "resid")
+    positions = _default_positions(cfg, B, 1, offset=pos)
+    x, new_caches, _ = _run_segments(params, x, cfg, positions, cache, pos,
+                                     mesh, data_axes, shard)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg)[:, 0]
+    return logits, {"segments": new_caches}
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def active_param_count(params, cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top_k + shared experts only)."""
+    total = param_count(params)
+    if not cfg.is_moe:
+        return total
+    def expert_size(tree):
+        return sum(int(x.size) for x in jax.tree.leaves(tree))
+    routed = 0
+    for seg in params["segments"]:
+        for name, blk in seg.items():
+            if "moe" in blk:
+                routed += expert_size(blk["moe"]["experts"])
+    active_frac = cfg.top_k / cfg.num_experts
+    return int(total - routed + routed * active_frac)

@@ -1,0 +1,369 @@
+"""Recurrent / state-space blocks: a shared chunked gated-linear-attention
+(GLA) core, Mamba2 (SSD), mLSTM (xLSTM matrix memory) and sLSTM blocks.
+
+Both Mamba2 and mLSTM are instances of the same per-head recurrence::
+
+    S_t = a_t * S_{t-1} + k_t^T v_t          (state  [d_k, d_v])
+    o_t = q_t @ S_t
+
+with per-step scalar decay ``a_t = exp(log_a_t) <= 1``:
+  * Mamba2 (SSD): q=C, k=B, v=dt*x, log_a = -dt*exp(A_log)   (d_k=N, d_v=P)
+  * mLSTM:        q,k,v projections, log_a = log sigmoid(f~), v scaled by
+                  the input gate; a normalizer channel is appended to v so
+                  h = (q S)/max(|q n|, 1) comes out of the same scan.
+
+:func:`gla_chunked` evaluates the recurrence chunk-parallel (intra-chunk
+attention-like matmuls + inter-chunk state carry), which is the MXU-
+friendly form; ``repro.kernels.gla`` is the Pallas TPU kernel of the same
+math and ``repro/kernels/gla/ref.py`` the step-by-step oracle.
+
+Faithfulness notes (DESIGN.md §8): mLSTM uses sigmoid (not exponential)
+input gating — the normalized-GLA simplification — so the chunked form is
+exact; sLSTM keeps the paper's exponential gating with the m_t stabilizer
+state and runs as a true sequential scan.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Dtypes, dense, dense_init, rmsnorm, rmsnorm_init
+
+__all__ = ["gla_chunked", "gla_step", "mamba2_init", "mamba2_apply",
+           "mlstm_init", "mlstm_apply", "slstm_init", "slstm_apply"]
+
+
+# ---------------------------------------------------------------------------
+# chunked GLA core
+# ---------------------------------------------------------------------------
+
+def gla_chunked(q: jax.Array, k: jax.Array, v: jax.Array, log_a: jax.Array,
+                chunk: int, initial_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """q,k: [B,H,S,dk]; v: [B,H,S,dv]; log_a: [B,H,S] (<= 0).
+
+    Returns (o [B,H,S,dv], final_state [B,H,dk,dv] float32).
+    """
+    B, H, S, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, S)
+    nc = -(-S // L)
+    pad = nc * L - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, 0), (0, pad)))
+
+    qc = q.reshape(B, H, nc, L, dk)
+    kc = k.reshape(B, H, nc, L, dk)
+    vc = v.reshape(B, H, nc, L, dv)
+    g = jnp.cumsum(log_a.reshape(B, H, nc, L).astype(jnp.float32), axis=-1)
+
+    S0 = (jnp.zeros((B, H, dk, dv), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    ii = jnp.arange(L)
+    causal = ii[:, None] >= ii[None, :]
+
+    @jax.checkpoint
+    @jax.named_scope("gla_chunk")
+    def chunk_step(state, inputs):
+        qb, kb, vb, gb = inputs                        # [B,H,L,*], gb [B,H,L]
+        # intra-chunk
+        scores = jnp.einsum("bhid,bhjd->bhij", qb, kb).astype(jnp.float32)
+        decay = jnp.exp(gb[..., :, None] - gb[..., None, :])
+        scores = jnp.where(causal, scores * decay, 0.0)
+        o = jnp.einsum("bhij,bhjd->bhid", scores.astype(vb.dtype), vb)
+        # inter-chunk
+        o = o + (jnp.exp(gb)[..., None]
+                 * jnp.einsum("bhid,bhdv->bhiv", qb.astype(jnp.float32),
+                              state)).astype(o.dtype)
+        # state update
+        w = jnp.exp(gb[..., -1:] - gb)                 # [B,H,L]
+        ks = kb.astype(jnp.float32) * w[..., None]
+        state = (jnp.exp(gb[..., -1])[..., None, None] * state
+                 + jnp.einsum("bhld,bhlv->bhdv", ks, vb.astype(jnp.float32)))
+        return state, o
+
+    xs = (jnp.moveaxis(qc, 2, 0), jnp.moveaxis(kc, 2, 0),
+          jnp.moveaxis(vc, 2, 0), jnp.moveaxis(g, 2, 0))
+    final, oc = jax.lax.scan(chunk_step, S0, xs)
+    o = jnp.moveaxis(oc, 0, 2).reshape(B, H, nc * L, dv)[:, :, :S]
+    return o, final
+
+
+def gla_step(q, k, v, log_a, state):
+    """One decode step.  q,k: [B,H,dk]; v: [B,H,dv]; log_a: [B,H];
+    state: [B,H,dk,dv] -> (o [B,H,dv], new state)."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    state = a * state + jnp.einsum("bhd,bhv->bhdv", k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    o = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), state)
+    return o.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_head_dim
+    return d_inner, heads, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def mamba2_init(key, cfg: ModelConfig) -> Dict:
+    pd = Dtypes.param(cfg)
+    D = cfg.d_model
+    d_inner, H, N, P_ = _mamba_dims(cfg)
+    conv_ch = d_inner + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * d_inner + 2 * N + H, pd),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32)
+                   * 0.1).astype(pd),
+        "conv_b": jnp.zeros((conv_ch,), pd),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, pd),
+        "out_proj": dense_init(ks[2], d_inner, D, pd),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """x: [B,S,C]; w: [K,C] depthwise causal conv.  Returns (y, new_state)
+    where state is the trailing K-1 inputs."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else jnp.zeros_like(x[:, :0])
+    return y + b.astype(x.dtype), new_state
+
+
+def mamba2_apply(p, x: jax.Array, cfg: ModelConfig,
+                 state: Optional[Dict] = None, shard=lambda x, k: x
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: [B,S,D].  ``state`` = {"conv": [B,K-1,C], "ssm": [B,H,N,P]}."""
+    B, S, D = x.shape
+    d_inner, H, N, P_ = _mamba_dims(cfg)
+    zxbcdt = dense(p["in_proj"], x)
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                        None if state is None else state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # [B,S,H]
+    A = -jnp.exp(p["A_log"])                                        # [H]
+    log_a = (dt * A).transpose(0, 2, 1)                              # [B,H,S]
+
+    xh = shard(xin.reshape(B, S, H, P_).transpose(0, 2, 1, 3),
+               "heads_bhs")                                          # [B,H,S,P]
+    v = xh * dt.transpose(0, 2, 1)[..., None].astype(xh.dtype)
+    k = jnp.broadcast_to(Bc[:, None], (B, H, S, N)).astype(xh.dtype)
+    q = jnp.broadcast_to(Cc[:, None], (B, H, S, N)).astype(xh.dtype)
+
+    if state is None:
+        o, final = gla_chunked(q, k, v, log_a, cfg.gla_chunk)
+        new_state = None
+    elif S == 1:
+        o, final = gla_step(q[:, :, 0], k[:, :, 0], v[:, :, 0], log_a[..., 0],
+                            state["ssm"])
+        o = o[:, :, None]
+        new_state = {"conv": conv_state, "ssm": final}
+    else:
+        o, final = gla_chunked(q, k, v, log_a, cfg.gla_chunk,
+                               initial_state=state["ssm"])
+        new_state = {"conv": conv_state, "ssm": final}
+
+    o = o + p["D"].astype(o.dtype)[None, :, None, None] * xh
+    y = o.transpose(0, 2, 1, 3).reshape(B, S, d_inner)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)
+    return out, new_state
+
+
+def mamba2_state_spec(cfg: ModelConfig, batch: int):
+    d_inner, H, N, P_ = _mamba_dims(cfg)
+    conv_ch = d_inner + 2 * N
+    dt = Dtypes.compute(cfg)
+    return {"conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_ch), dt),
+            "ssm": jax.ShapeDtypeStruct((batch, H, N, P_), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig) -> Dict:
+    pd = Dtypes.param(cfg)
+    D = cfg.d_model
+    d_inner = cfg.ssm_expand * D
+    H = cfg.num_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], D, 2 * d_inner, pd),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, d_inner), jnp.float32)
+                   * 0.1).astype(pd),
+        "conv_b": jnp.zeros((d_inner,), pd),
+        "wq": dense_init(ks[2], d_inner, d_inner, pd),
+        "wk": dense_init(ks[3], d_inner, d_inner, pd),
+        "wv": dense_init(ks[4], d_inner, d_inner, pd),
+        "w_gates": dense_init(ks[5], d_inner, 2 * H, pd),   # i~, f~ per head
+        "norm": rmsnorm_init(d_inner, pd),
+        "down_proj": dense_init(ks[6], d_inner, D, pd),
+    }
+
+
+def mlstm_apply(p, x: jax.Array, cfg: ModelConfig,
+                state: Optional[Dict] = None, shard=lambda x, k: x
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, D = x.shape
+    d_inner = cfg.ssm_expand * D
+    H = cfg.num_heads
+    dh = d_inner // H
+    u, z = jnp.split(dense(p["up_proj"], x), 2, axis=-1)
+    c, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"],
+                                 None if state is None else state["conv"])
+    c = jax.nn.silu(c)
+
+    def heads(t):
+        return shard(t.reshape(B, S, H, dh).transpose(0, 2, 1, 3),
+                     "heads_bhs")
+
+    q = heads(dense(p["wq"], c)) * (dh ** -0.5)
+    k = heads(dense(p["wk"], c)) * (dh ** -0.5)
+    v = heads(dense(p["wv"], u))
+    gates = dense(p["w_gates"], u).astype(jnp.float32)       # [B,S,2H]
+    i_g = jax.nn.sigmoid(gates[..., :H]).transpose(0, 2, 1)  # [B,H,S]
+    log_f = jax.nn.log_sigmoid(gates[..., H:]).transpose(0, 2, 1)
+
+    # normalizer as a separate dv=1 scan: keeping it as a concatenated
+    # channel makes dv = dh+1, which breaks model-axis divisibility of
+    # every value/state/output tensor (measured +20 GB temp on xlstm
+    # train_4k from the resulting SPMD full-remat copies)
+    v_num = shard(v * i_g[..., None].astype(v.dtype), "heads_bhs")
+    v_den = i_g[..., None].astype(v.dtype)
+
+    if state is None:
+        o_num, fin_n = gla_chunked(q, k, v_num, log_f, cfg.gla_chunk)
+        o_den, fin_d = gla_chunked(q, k, v_den, log_f, cfg.gla_chunk)
+        new_state = None
+    elif S == 1:
+        o_num, fin_n = gla_step(q[:, :, 0], k[:, :, 0], v_num[:, :, 0],
+                                log_f[..., 0], state["ssm"][..., :dh])
+        o_den, fin_d = gla_step(q[:, :, 0], k[:, :, 0], v_den[:, :, 0],
+                                log_f[..., 0], state["ssm"][..., dh:])
+        o_num, o_den = o_num[:, :, None], o_den[:, :, None]
+        new_state = {"conv": conv_state,
+                     "ssm": jnp.concatenate([fin_n, fin_d], axis=-1)}
+    else:
+        o_num, fin_n = gla_chunked(q, k, v_num, log_f, cfg.gla_chunk,
+                                   initial_state=state["ssm"][..., :dh])
+        o_den, fin_d = gla_chunked(q, k, v_den, log_f, cfg.gla_chunk,
+                                   initial_state=state["ssm"][..., dh:])
+        new_state = {"conv": conv_state,
+                     "ssm": jnp.concatenate([fin_n, fin_d], axis=-1)}
+
+    num, den = o_num, o_den[..., 0]
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None].astype(num.dtype)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, d_inner)
+    h = rmsnorm(p["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    return dense(p["down_proj"], h), new_state
+
+
+def mlstm_state_spec(cfg: ModelConfig, batch: int):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.num_heads
+    dh = d_inner // H
+    dt = Dtypes.compute(cfg)
+    return {"conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, d_inner), dt),
+            "ssm": jax.ShapeDtypeStruct((batch, H, dh, dh + 1), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (scalar LSTM with exponential gating + stabilizer)
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig) -> Dict:
+    pd = Dtypes.param(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 2)
+    return {"w_in": dense_init(ks[0], D, 4 * D, pd),
+            "r": (jax.random.normal(ks[1], (4, D), jnp.float32) * 0.02).astype(pd),
+            "out_norm": rmsnorm_init(D, pd)}
+
+
+def _slstm_cell(p, zifo, h_prev, c_prev, n_prev, m_prev):
+    """One step.  zifo: [B, 4D] pre-activations (input part)."""
+    D = h_prev.shape[-1]
+    r = p["r"].astype(jnp.float32)
+    hp = h_prev.astype(jnp.float32)
+    z_, i_, f_, o_ = jnp.split(zifo.astype(jnp.float32), 4, axis=-1)
+    z_ = z_ + r[0] * hp
+    i_ = i_ + r[1] * hp
+    f_ = f_ + r[2] * hp
+    o_ = o_ + r[3] * hp
+    m = jnp.maximum(f_ + m_prev, i_)
+    i_g = jnp.exp(i_ - m)
+    f_g = jnp.exp(f_ + m_prev - m)
+    c = f_g * c_prev + i_g * jnp.tanh(z_)
+    n = f_g * n_prev + i_g
+    h = jax.nn.sigmoid(o_) * c / jnp.maximum(n, 1.0)
+    return h, c, n, m
+
+
+def slstm_apply(p, x: jax.Array, cfg: ModelConfig,
+                state: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, D = x.shape
+    zifo = dense(p["w_in"], x)                                # [B,S,4D]
+    if state is None:
+        zero = jnp.zeros((B, D), jnp.float32)
+        carry0 = (zero, zero, zero, zero)
+    else:
+        carry0 = (state["h"], state["c"], state["n"], state["m"])
+
+    def step(carry, zt):
+        h, c, n, m = carry
+        h, c, n, m = _slstm_cell(p, zt, h, c, n, m)
+        return (h, c, n, m), h
+
+    # time chunking: the inner scan is checkpointed so AD stores residuals
+    # per *chunk*, not per step (S x [B,4D] f32 residuals otherwise)
+    CH = 128
+    if S % CH == 0 and S > CH:
+        zc = jnp.moveaxis(zifo, 1, 0).reshape(S // CH, CH, B, 4 * D)
+
+        @jax.checkpoint
+        def chunk(carry, zch):
+            return jax.lax.scan(step, carry, zch)
+
+        (h, c, n, m), hs = jax.lax.scan(chunk, carry0, zc)
+        hs = hs.reshape(S, B, D)
+    else:
+        (h, c, n, m), hs = jax.lax.scan(step, carry0,
+                                        jnp.moveaxis(zifo, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    y = rmsnorm(p["out_norm"], y, cfg.norm_eps)
+    new_state = None if state is None else {"h": h, "c": c, "n": n, "m": m}
+    return y, new_state
+
+
+def slstm_state_spec(cfg: ModelConfig, batch: int):
+    D = cfg.d_model
+    s = jax.ShapeDtypeStruct((batch, D), jnp.float32)
+    return {"h": s, "c": s, "n": s, "m": s}

@@ -1,0 +1,3 @@
+from .simulator import APPS, JobParams, simulate_cpu_series, paper_param_sets
+
+__all__ = ["APPS", "JobParams", "simulate_cpu_series", "paper_param_sets"]

@@ -1,0 +1,5 @@
+from .fault import (HeartbeatTracker, StragglerDetector, ElasticController,
+                    RescaleDecision, WorkerState)
+
+__all__ = ["HeartbeatTracker", "StragglerDetector", "ElasticController",
+           "RescaleDecision", "WorkerState"]

@@ -1,0 +1,140 @@
+"""Fault-tolerance runtime: heartbeats, straggler detection, elastic
+rescale decisions.
+
+The control plane is deterministic and clock-injected so every policy is
+unit-testable without real failures:
+
+* :class:`HeartbeatTracker` — workers report (worker_id, step, t); a worker
+  whose last heartbeat is older than ``timeout`` is declared dead.
+* :class:`StragglerDetector` — per-step durations; a worker consistently
+  slower than ``factor`` x the median over a sliding window is flagged
+  (the mitigation at the training-loop level is to drop it from the mesh
+  at the next rescale point, since TPU SPMD steps are synchronous — the
+  MapReduce-style "speculative re-execution" maps to re-sharding, see
+  DESIGN.md).
+* :class:`ElasticController` — given alive workers, picks the largest
+  usable mesh (keeps the ``model`` axis fixed, shrinks/grows ``data`` to
+  the largest power-of-two of alive hosts) and emits a
+  :class:`RescaleDecision`; the train loop then checkpoints, rebuilds the
+  mesh, and restores — restore-onto-new-mesh is native to
+  ``repro.checkpoint``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict, deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+__all__ = ["WorkerState", "HeartbeatTracker", "StragglerDetector",
+           "RescaleDecision", "ElasticController"]
+
+
+@dataclasses.dataclass
+class WorkerState:
+    worker_id: int
+    last_step: int = -1
+    last_time: float = 0.0
+    alive: bool = True
+
+
+class HeartbeatTracker:
+    def __init__(self, timeout: float = 60.0):
+        self.timeout = timeout
+        self.workers: Dict[int, WorkerState] = {}
+
+    def beat(self, worker_id: int, step: int, now: float) -> None:
+        w = self.workers.setdefault(worker_id, WorkerState(worker_id))
+        w.last_step = max(w.last_step, step)
+        w.last_time = now
+        w.alive = True
+
+    def sweep(self, now: float) -> List[int]:
+        """Mark timed-out workers dead; return newly-dead ids."""
+        dead = []
+        for w in self.workers.values():
+            if w.alive and now - w.last_time > self.timeout:
+                w.alive = False
+                dead.append(w.worker_id)
+        return sorted(dead)
+
+    def alive_workers(self) -> List[int]:
+        return sorted(w.worker_id for w in self.workers.values() if w.alive)
+
+
+class StragglerDetector:
+    def __init__(self, window: int = 16, factor: float = 1.5,
+                 min_samples: int = 4):
+        self.window = window
+        self.factor = factor
+        self.min_samples = min_samples
+        self._durations: Dict[int, Deque[float]] = defaultdict(
+            lambda: deque(maxlen=window))
+
+    def record(self, worker_id: int, step_duration: float) -> None:
+        self._durations[worker_id].append(step_duration)
+
+    def _median_of_medians(self) -> Optional[float]:
+        meds = []
+        for d in self._durations.values():
+            if len(d) >= self.min_samples:
+                s = sorted(d)
+                meds.append(s[len(s) // 2])
+        if not meds:
+            return None
+        meds.sort()
+        return meds[len(meds) // 2]
+
+    def stragglers(self) -> List[int]:
+        base = self._median_of_medians()
+        if base is None:
+            return []
+        out = []
+        for wid, d in self._durations.items():
+            if len(d) < self.min_samples:
+                continue
+            s = sorted(d)
+            if s[len(s) // 2] > self.factor * base:
+                out.append(wid)
+        return sorted(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class RescaleDecision:
+    should_rescale: bool
+    new_data_parallel: int
+    dropped_workers: Sequence[int]
+    reason: str
+
+
+class ElasticController:
+    """Chooses the data-parallel degree from the alive/non-straggler set.
+
+    ``model_parallel`` stays fixed (changing TP degree means re-sharding
+    every weight — only worth it on large permanent shrinkage); the data
+    axis snaps to the largest power of two <= usable hosts, matching the
+    divisibility guards in ``repro.sharding.rules``.
+    """
+
+    def __init__(self, model_parallel: int, min_data_parallel: int = 1):
+        self.model_parallel = model_parallel
+        self.min_data_parallel = min_data_parallel
+
+    @staticmethod
+    def _pow2_floor(n: int) -> int:
+        p = 1
+        while p * 2 <= n:
+            p *= 2
+        return p
+
+    def decide(self, current_data_parallel: int, alive: Sequence[int],
+               stragglers: Sequence[int] = ()) -> RescaleDecision:
+        usable = [w for w in alive if w not in set(stragglers)]
+        target = max(self.min_data_parallel, self._pow2_floor(len(usable)))
+        if target == current_data_parallel:
+            return RescaleDecision(False, current_data_parallel, (),
+                                   "stable")
+        dropped = tuple(sorted(set(alive) - set(usable)))
+        reason = ("shrink: dead/straggler workers" if
+                  target < current_data_parallel else "grow: workers joined")
+        return RescaleDecision(True, target, dropped, reason)

@@ -1,0 +1,3 @@
+from .engine import make_prefill_step, make_decode_step, ServeEngine
+
+__all__ = ["make_prefill_step", "make_decode_step", "ServeEngine"]

@@ -1,0 +1,89 @@
+"""Serving: prefill/decode step builders and a small batched engine.
+
+The decode step mutates (donates) the KV/SSM cache; both steps carry the
+activation-sharding callback so caches stay sequence- or batch-sharded per
+``repro.sharding.rules.cache_specs``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import model as model_lib
+from ..models.config import ModelConfig
+
+__all__ = ["make_prefill_step", "make_decode_step", "ServeEngine"]
+
+
+def make_prefill_step(cfg: ModelConfig, mesh=None, data_axes=("data",),
+                      shard=model_lib._id_shard) -> Callable:
+    def prefill_step(params, tokens, cache, extra_embeds=None, positions=None):
+        return model_lib.prefill(params, tokens, cache, cfg,
+                                 extra_embeds=extra_embeds,
+                                 positions=positions, mesh=mesh,
+                                 data_axes=data_axes, shard=shard)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None, data_axes=("data",),
+                     shard=model_lib._id_shard) -> Callable:
+    def decode_one(params, token, cache, pos):
+        return model_lib.decode_step(params, token, cache, pos, cfg,
+                                     mesh=mesh, data_axes=data_axes,
+                                     shard=shard)
+    return decode_one
+
+
+class ServeEngine:
+    """Minimal batched greedy/temperature serving loop (single host).
+
+    Continuous-batching style: a fixed slot count; each generate() call
+    prefils a batch and decodes until all sequences emit EOS or hit
+    ``max_new``.  This is the runnable example path, not the dry-run path.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, max_len: int = 2048,
+                 temperature: float = 0.0, eos_id: Optional[int] = None):
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+
+    def generate(self, tokens: np.ndarray, max_new: int = 32,
+                 key: Optional[jax.Array] = None) -> np.ndarray:
+        B, S = tokens.shape[:2]
+        assert S + max_new <= self.max_len
+        cache = model_lib.make_cache(self.cfg, B, self.max_len, concrete=True)
+        logits, cache = self._prefill(self.params, jnp.asarray(tokens), cache)
+        out = []
+        tok = self._sample(logits, key)
+        out.append(np.asarray(tok))
+        done = np.zeros(B, bool)
+        for i in range(max_new - 1):
+            logits, cache = self._decode(self.params, tok, cache,
+                                         jnp.int32(S + i))
+            tok = self._sample(logits, key)
+            t = np.asarray(tok)
+            if self.eos_id is not None:
+                done |= (t.reshape(B, -1)[:, 0] == self.eos_id)
+            out.append(t)
+            if self.eos_id is not None and done.all():
+                break
+        return np.stack(out, axis=1)
+
+    def _sample(self, logits, key):
+        cfg = self.cfg
+        if cfg.num_codebooks > 1:
+            logits = logits.reshape(logits.shape[0], cfg.num_codebooks,
+                                    cfg.vocab_size)
+        if self.temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.temperature,
+                                      axis=-1).astype(jnp.int32)

@@ -1,0 +1,294 @@
+"""Sharding rules: map parameter/cache/batch pytrees to PartitionSpecs.
+
+Layout (Megatron-TP x DP, optional FSDP and sequence-parallel residuals):
+
+* column-parallel projections  [d_in, d_out] -> (fsdp, "model")
+* row-parallel projections     [d_in, d_out] -> ("model", fsdp)
+* embedding table [V, D] -> ("model", fsdp);  unembed [D, V] -> (fsdp, "model")
+* expert weights [E, a, b] -> ("model", fsdp, None)   (EP over "model")
+* KV caches: batch over data axes when divisible, else sequence over data
+  (long-context decode with batch=1); kv-heads/latent dim over "model".
+
+Every axis assignment is guarded by divisibility — a dimension that does
+not divide the mesh axis stays replicated, so every (arch x shape x mesh)
+cell lowers without manual per-arch spec tables.  ``ExecConfig`` carries
+the execution parameters the paper's AutoTuner transfers between matched
+workloads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+__all__ = ["ExecConfig", "param_specs", "cache_specs", "batch_specs",
+           "opt_state_specs", "make_shard_fn", "logical_batch_axes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    """Tunable execution parameters (the framework analogue of the paper's
+    {M, R, FS, I} — what the AutoTuner profiles over and transfers)."""
+    fsdp: bool = False                 # shard params over data axes too
+    zero1: bool = True                 # shard optimizer state over data axes
+    remat: str = "none"                # "none" | "dots" | "full"
+    seq_shard_activations: bool = False  # Megatron sequence parallelism
+    microbatch: int = 1                # gradient-accumulation steps
+    optim_dtype: str = "float32"       # AdamW moment dtype
+    grad_compress: str = "none"        # "none" | "bf16" (cross-pod)
+    logits_fp32: bool = False          # keep logits bf16 unless set
+    attn_block_q: int = 512
+    attn_block_kv: int = 1024
+    blockwise_threshold: int = 4096    # online-softmax attn when S >= this
+    moe_expert_tp: bool = False        # serving: shard expert FFN dim over
+                                       # data axes, replicate tokens (small
+                                       # decode batches), no weight gathers
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExecConfig":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+
+def logical_batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Data-parallel mesh axes: ("pod", "data") on multi-pod, ("data",)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _div(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return False
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return dim % size == 0 and dim >= size
+
+
+def _guard(spec_axes, shape, mesh: Mesh):
+    """Drop axis assignments that don't divide; pad to rank with None."""
+    out = []
+    for i, dim in enumerate(shape):
+        ax = spec_axes[i] if i < len(spec_axes) else None
+        out.append(ax if _div(dim, mesh, ax) else None)
+    return P(*out)
+
+
+_COL = {"wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wk_b", "wv_b", "w_gate",
+        "w_up", "w_in", "in_proj", "up_proj", "w_gates", "router"}
+_ROW = {"wo", "w_down", "out_proj", "down_proj"}
+
+
+def _param_rule(path: Tuple[str, ...], shape, mesh: Mesh, fsdp_axes,
+                expert_tp_axes=None):
+    names = [p for p in path]
+    leaf_ctx = names[-2] if len(names) >= 2 else ""
+    container = set(names)
+
+    base: Tuple = ()
+    if "experts" in container:                   # [E, a, b]
+        if expert_tp_axes is not None:
+            # serving expert-TP: FFN dim over data axes (w_gate/w_up:
+            # [E, D, F] dim 2; w_down: [E, F, D] dim 1)
+            if names[-1] == "w_down":
+                base = ("model", expert_tp_axes, None)
+            else:
+                base = ("model", None, expert_tp_axes)
+        else:
+            base = ("model", fsdp_axes, None)
+    elif leaf_ctx == "router":
+        base = (None, None)
+    elif "table" in names[-1:]:                   # embedding [V, D]
+        base = ("model", fsdp_axes)
+    elif "unembed" == leaf_ctx:                   # [D, V]
+        base = (fsdp_axes, "model")
+    elif leaf_ctx in _COL:
+        base = (fsdp_axes, "model")
+    elif leaf_ctx in _ROW:
+        base = ("model", fsdp_axes)
+    elif names[-1] == "conv_w":                   # [K, C]
+        base = (None, "model")
+    elif len(shape) == 1:
+        base = ("model",) if _div(shape[0], mesh, "model") and shape[0] >= 1024 \
+            else (None,)
+    return base
+
+
+def _path_names(keypath) -> Tuple[str, ...]:
+    names = []
+    for k in keypath:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_specs(params_shape, cfg: ModelConfig, mesh: Mesh,
+                exec_cfg: ExecConfig):
+    """PartitionSpec pytree mirroring ``params_shape`` (eval_shape output)."""
+    fsdp_axes = logical_batch_axes(mesh) if exec_cfg.fsdp else None
+    expert_tp_axes = (logical_batch_axes(mesh)
+                      if getattr(exec_cfg, "moe_expert_tp", False) else None)
+
+    def rule(keypath, leaf):
+        names = _path_names(keypath)
+        shape = leaf.shape
+        stacked = "segments" in names           # leading scan-layer dim
+        inner_shape = shape[1:] if stacked else shape
+        base = _param_rule(names, inner_shape, mesh, fsdp_axes,
+                           expert_tp_axes)
+        spec = _guard(base, inner_shape, mesh)
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_state_specs(params_shape, param_spec_tree, mesh: Mesh,
+                    exec_cfg: ExecConfig):
+    """Optimizer-moment specs: parameter specs + ZeRO-1 sharding of the
+    first still-replicated divisible dim over the data axes."""
+    if not exec_cfg.zero1:
+        return param_spec_tree
+    daxes = logical_batch_axes(mesh)
+
+    def rule(leaf_shape, spec):
+        parts = list(spec) + [None] * (len(leaf_shape.shape) - len(spec))
+        if exec_cfg.fsdp:
+            return P(*parts)
+        for i, (dim, ax) in enumerate(zip(leaf_shape.shape, parts)):
+            if ax is None and _div(dim, mesh, daxes):
+                parts[i] = daxes
+                break
+        return P(*parts)
+
+    return jax.tree.map(rule, params_shape, param_spec_tree)
+
+
+def cache_specs(cache_shape, cfg: ModelConfig, mesh: Mesh, batch: int):
+    """Decode/prefill cache specs.  Seq-shard when batch can't shard."""
+    daxes = logical_batch_axes(mesh)
+    batch_ok = _div(batch, mesh, daxes)
+
+    def rule(keypath, leaf):
+        names = _path_names(keypath)
+        shape = leaf.shape  # [L, ...block shape...]
+        inner = shape[1:]
+        leafname = names[-1]
+        spec: list = [None] * len(inner)
+        # batch is dim 0 of the inner shape for every cache kind
+        if batch_ok and len(inner) >= 1:
+            spec[0] = daxes
+        if leafname in ("k", "v"):                # [B, S, KV, dh]
+            if not batch_ok and _div(inner[1], mesh, daxes):
+                spec[1] = daxes                   # sequence-sharded cache
+            if _div(inner[2], mesh, "model"):
+                spec[2] = "model"                 # kv heads over model
+            elif _div(inner[1], mesh, "model") and spec[1] is None:
+                spec[1] = "model"                 # else sequence over model
+                                                  # (never dh: contraction)
+        elif leafname in ("c_kv", "k_rope"):      # [B, S, r]
+            if not batch_ok and _div(inner[1], mesh, daxes):
+                spec[1] = daxes
+            if _div(inner[1], mesh, "model") and spec[1] is None:
+                spec[1] = "model"                 # MLA latent cache: seq/TP
+        elif leafname == "ssm":                   # [B, H, dk, dv]
+            if _div(inner[1], mesh, "model"):
+                spec[1] = "model"
+        elif leafname == "conv":                  # [B, K-1, C]
+            if _div(inner[2], mesh, "model"):
+                spec[2] = "model"
+        return P(None, *spec)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def batch_specs(batch_shape, mesh: Mesh):
+    """Input batch: leading batch dim over data axes when divisible."""
+    daxes = logical_batch_axes(mesh)
+
+    def rule(keypath, leaf):
+        names = _path_names(keypath)
+        if leaf.ndim == 0:
+            return P()
+        if names and names[-1] == "positions" and leaf.ndim == 3:
+            # m-rope positions [3, B, S]
+            ok = _div(leaf.shape[1], mesh, daxes)
+            return P(None, daxes if ok else None, None)
+        ok = _div(leaf.shape[0], mesh, daxes)
+        return P(daxes if ok else None, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def make_shard_fn(mesh: Mesh, exec_cfg: ExecConfig, batch: int):
+    """Activation sharding-constraint callback for model.apply."""
+    daxes = logical_batch_axes(mesh)
+    bsz = 1
+    for a in daxes:
+        bsz *= mesh.shape[a]
+    batch_ok = batch % bsz == 0 and batch >= bsz
+    baxis = daxes if batch_ok else None
+    seq_axis = "model" if exec_cfg.seq_shard_activations else None
+
+    from jax.sharding import NamedSharding
+
+    def shard(x, kind: str):
+        if kind == "heads" and x.ndim == 4:
+            # [B, S, H, dh]: heads over "model" when divisible; NEVER the
+            # head_dim — it is the q.k contraction dim and sharding it
+            # turns every attention tile into an all-reduce (measured:
+            # +4e11 B/chip on minitron train_4k, EXPERIMENTS.md §Perf).
+            m = mesh.shape["model"]
+            ha = "model" if x.shape[2] % m == 0 else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(baxis, None, ha, None)))
+        if kind == "heads_bhs" and x.ndim == 4:
+            # [B, H, S, d] (SSM/GLA layout): H over "model" when divisible,
+            # else the channel dim — unlike softmax attention, the GLA
+            # chunk contraction produces only a small per-chunk
+            # [B,H,L,L] partial (psum'd), while the state/value tensors
+            # shard, so channel sharding is a net win here.
+            m = mesh.shape["model"]
+            ha = "model" if x.shape[1] % m == 0 else None
+            da = "model" if ha is None and x.shape[3] % m == 0 else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(baxis, ha, None, da)))
+        if kind == "ffn" and x.ndim == 3:
+            m = mesh.shape["model"]
+            fa = "model" if x.shape[-1] % m == 0 else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(baxis, None, fa)))
+        if kind == "full_seq" and x.ndim == 3:
+            # gather point for sequence parallelism: force the all-gather
+            # to happen on this (bf16) tensor, not on a downstream f32
+            # upcast (measured 2x collective volume otherwise)
+            if seq_axis is None:
+                return x
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(baxis, None, None)))
+        if kind == "resid" and x.ndim == 3:
+            sa = seq_axis if seq_axis and x.shape[1] % mesh.shape["model"] == 0 \
+                else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(baxis, sa, None)))
+        if kind == "logits" and x.ndim == 3:
+            va = "model" if x.shape[-1] % mesh.shape["model"] == 0 else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(baxis, None, va)))
+        return x
+
+    return shard

@@ -1,0 +1,7 @@
+from .optim import (AdamWConfig, AdamWState, adamw_init, adamw_update,
+                    cosine_schedule, global_norm, clip_by_global_norm)
+from .step import make_loss, make_train_step
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "cosine_schedule", "global_norm", "clip_by_global_norm",
+           "make_loss", "make_train_step"]

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — tests must see the single real CPU
+# device; only launch/dryrun.py (run as a subprocess) forces 512.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

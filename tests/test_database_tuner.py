@@ -1,0 +1,68 @@
+"""ReferenceDB + AutoTuner (profiling/matching phases + config transfer)."""
+import numpy as np
+import pytest
+
+from repro.core import ReferenceDB, AutoTuner
+from repro import mrsim
+
+
+def _series(app, j=0, run=0):
+    return mrsim.simulate_cpu_series(app, mrsim.paper_param_sets()[j], run=run)
+
+
+def test_db_roundtrip(tmp_path):
+    db = ReferenceDB()
+    db.add("wc", {"M": 11, "R": 6}, _series("wordcount"), note="x")
+    db.add("ts", {"M": 11, "R": 6}, _series("terasort"))
+    db.set_best_config("wc", {"microbatch": 2}, score=1.5)
+    db.save(str(tmp_path / "db"))
+    db2 = ReferenceDB.load(str(tmp_path / "db"))
+    assert len(db2) == 2
+    assert db2.workloads() == ["wc", "ts"]
+    assert db2.best_config("wc") == {"microbatch": 2}
+    np.testing.assert_allclose(db2.entries[0].series, db.entries[0].series)
+
+
+def test_lookup_by_params():
+    db = ReferenceDB()
+    db.add("wc", {"M": 11}, _series("wordcount"))
+    assert db.lookup("wc", {"M": 11}) is not None
+    assert db.lookup("wc", {"M": 12}) is None
+
+
+def test_tuner_transfers_config_to_similar_workload():
+    db = ReferenceDB()
+    tuner = AutoTuner(db, band=8)
+    tuner.profile("wordcount", {"j": 0}, _series("wordcount"))
+    tuner.profile("terasort", {"j": 0}, _series("terasort"))
+    db.set_best_config("wordcount", {"remat": "dots", "microbatch": 4}, 2.0)
+    db.set_best_config("terasort", {"remat": "full"}, 1.0)
+
+    decision = tuner.match("exim", _series("exim", run=1))
+    assert decision.matched == "wordcount"
+    assert decision.corr >= 0.9
+    assert decision.config == {"remat": "dots", "microbatch": 4}
+
+
+def test_tuner_falls_back_below_threshold():
+    db = ReferenceDB()
+    tuner = AutoTuner(db, threshold=0.999999, band=4)
+    tuner.profile("a", {}, _series("terasort"))
+    db.set_best_config("a", {"x": 1}, 1.0)
+    calls = []
+    decision = tuner.tune("b", _series("wordcount", run=3),
+                          fallback=lambda: calls.append(1) or {"y": 2})
+    assert calls == [1]
+    assert decision.config == {"y": 2}
+    assert db.best_config("b") == {"y": 2}
+
+
+def test_tuner_wavelet_prefilter():
+    db = ReferenceDB()
+    tuner = AutoTuner(db, band=8, wavelet_prefilter=1)
+    tuner.profile("wordcount", {}, _series("wordcount"))
+    tuner.profile("terasort", {}, _series("terasort"))
+    db.set_best_config("wordcount", {"z": 3}, 1.0)
+    decision = tuner.match("exim", _series("exim", run=1))
+    assert decision.used_wavelet_prefilter
+    assert decision.matched == "wordcount"

@@ -1,0 +1,59 @@
+"""HLO cost model: trip-count-aware flops/bytes/collectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hlocost import parse_module
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_matmul_flops_exact():
+    def f(x, ws):
+        def body(c, w):
+            return jnp.dot(c, w), ()
+        c, _ = jax.lax.scan(body, x, ws)
+        return c
+    x = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    ws = jax.ShapeDtypeStruct((7, 512, 512), jnp.float32)
+    cost = parse_module(_compile(f, x, ws).as_text())
+    assert cost.flops == pytest.approx(7 * 2 * 256 * 512 * 512, rel=0.01)
+
+
+def test_nested_scan_flops():
+    def g(x, ws):
+        def outer(c, w):
+            def inner(c2, _):
+                return jnp.tanh(jnp.dot(c2, w)), ()
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, ()
+        c, _ = jax.lax.scan(outer, x, ws)
+        return c
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 128, 128), jnp.float32)
+    cost = parse_module(_compile(g, x, ws).as_text())
+    assert cost.flops == pytest.approx(5 * 3 * 2 * 64 * 128 * 128, rel=0.02)
+
+
+def test_bytes_reasonable_for_matmul():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    cost = parse_module(_compile(f, a, a).as_text())
+    io_bytes = 3 * 512 * 512 * 4
+    assert io_bytes * 0.5 <= cost.bytes <= io_bytes * 4
+
+
+def test_tags_attributed():
+    @jax.named_scope("flash_tile")
+    def inner(a):
+        return jnp.exp(a) * 2
+
+    def f(a):
+        return inner(a).sum()
+    a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    cost = parse_module(_compile(f, a).as_text())
+    assert cost.tag_flops.get("flash_tile", 0) > 0

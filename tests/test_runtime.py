@@ -1,0 +1,49 @@
+"""Fault-tolerance runtime: heartbeats, stragglers, elastic rescale."""
+from repro.runtime import (ElasticController, HeartbeatTracker,
+                           StragglerDetector)
+
+
+def test_heartbeat_timeout():
+    hb = HeartbeatTracker(timeout=10.0)
+    hb.beat(0, 1, now=0.0)
+    hb.beat(1, 1, now=0.0)
+    hb.beat(0, 2, now=8.0)
+    assert hb.sweep(now=11.0) == [1]
+    assert hb.alive_workers() == [0]
+    # worker returns
+    hb.beat(1, 3, now=12.0)
+    assert hb.alive_workers() == [0, 1]
+
+
+def test_straggler_detection():
+    sd = StragglerDetector(window=8, factor=1.5, min_samples=4)
+    for step in range(8):
+        for w in range(4):
+            sd.record(w, 1.0 if w != 2 else 2.5)
+    assert sd.stragglers() == [2]
+
+
+def test_straggler_needs_samples():
+    sd = StragglerDetector(min_samples=4)
+    sd.record(0, 1.0)
+    assert sd.stragglers() == []
+
+
+def test_elastic_stable():
+    ec = ElasticController(model_parallel=16)
+    d = ec.decide(16, alive=list(range(16)))
+    assert not d.should_rescale
+
+
+def test_elastic_shrinks_on_failure():
+    ec = ElasticController(model_parallel=16)
+    d = ec.decide(16, alive=list(range(13)), stragglers=[3])
+    assert d.should_rescale
+    assert d.new_data_parallel == 8
+    assert "shrink" in d.reason
+
+
+def test_elastic_grows_back():
+    ec = ElasticController(model_parallel=16)
+    d = ec.decide(8, alive=list(range(16)))
+    assert d.should_rescale and d.new_data_parallel == 16

@@ -1,0 +1,40 @@
+"""Serving engine: greedy generation matches teacher-forced argmax."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig, model
+from repro.serve import ServeEngine
+
+CFG = ModelConfig(name="tiny-serve", num_layers=2, d_model=64, num_heads=4,
+                  num_kv_heads=2, d_ff=128, vocab_size=128,
+                  param_dtype="float32", dtype="float32")
+
+
+def test_greedy_generation_consistent_with_forward():
+    params = model.init(jax.random.PRNGKey(0), CFG)
+    engine = ServeEngine(params, CFG, max_len=48)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, CFG.vocab_size, size=(2, 8)).astype(np.int32)
+    out = engine.generate(prompts, max_new=6)
+    assert out.shape[:2] == (2, 6)
+
+    # teacher-forced check: feeding prompt+generated reproduces the argmax
+    seq = np.concatenate([prompts, out.reshape(2, 6)], axis=1)
+    logits, _ = model.forward(params, jnp.asarray(seq), CFG)
+    for t in range(6):
+        pred = np.argmax(np.asarray(logits[:, 8 + t - 1]), -1)
+        np.testing.assert_array_equal(pred, seq[:, 8 + t])
+
+
+def test_multicodebook_generation():
+    cfg = dataclasses.replace(CFG, num_codebooks=2)
+    params = model.init(jax.random.PRNGKey(1), cfg)
+    engine = ServeEngine(params, cfg, max_len=32)
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, size=(2, 8, 2)).astype(np.int32)
+    out = engine.generate(prompts, max_new=4)
+    assert out.shape == (2, 4, 2)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()

@@ -1,0 +1,80 @@
+"""Sharding rules: spec trees mirror params, divisibility guards hold."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs as cfglib
+from repro.models import model as model_lib
+from repro.sharding import rules
+
+
+class FakeMesh:
+    """Duck-typed mesh (shape dict only) — rules only read .shape."""
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+@pytest.mark.parametrize("arch", cfglib.ARCHS)
+def test_param_specs_structure_and_divisibility(arch):
+    cfg = cfglib.get(arch)
+    pshape = jax.eval_shape(lambda k: model_lib.init(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = rules.param_specs(pshape, cfg, MESH, rules.ExecConfig(fsdp=True))
+    # same tree structure
+    assert (jax.tree.structure(pshape) ==
+            jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, P)))
+
+    def check(leaf, spec):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 9):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            size = int(np.prod([MESH.shape[a] for a in axes]))
+            assert dim % size == 0, (leaf.shape, spec)
+    jax.tree.map(check, pshape, specs,
+                 is_leaf=lambda x: isinstance(x, P))
+
+
+def test_batch_specs_shard_when_divisible():
+    import jax.numpy as jnp
+    batch = {"tokens": jax.ShapeDtypeStruct((256, 128), jnp.int32),
+             "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    specs = rules.batch_specs(batch, MESH)
+    assert specs["tokens"] == P(("data",), None)
+    assert specs["pos"] == P()
+
+
+def test_batch_specs_replicate_when_not_divisible():
+    import jax.numpy as jnp
+    batch = {"tokens": jax.ShapeDtypeStruct((1, 128), jnp.int32)}
+    specs = rules.batch_specs(batch, MESH)
+    assert specs["tokens"] == P(None, None)
+
+
+def test_cache_specs_seq_sharding_for_batch1():
+    import jax.numpy as jnp
+    cfg = cfglib.get("zamba2-7b")
+    cache = model_lib.make_cache(cfg, 1, 1024 * 16)
+    specs = rules.cache_specs(cache, cfg, MESH, batch=1)
+    kv = specs["segments"][0]["5_shared_attn"]
+    # [L, B, S, KV, dh]: batch=1 not shardable -> seq over data
+    assert kv["k"][2] in ("data", ("data",))
+
+
+def test_opt_specs_zero1_adds_data_axis():
+    cfg = cfglib.get("phi3-mini-3p8b")
+    pshape = jax.eval_shape(lambda k: model_lib.init(k, cfg),
+                            jax.random.PRNGKey(0))
+    pspecs = rules.param_specs(pshape, cfg, MESH, rules.ExecConfig())
+    ospecs = rules.opt_state_specs(pshape, pspecs, MESH,
+                                   rules.ExecConfig(zero1=True))
+    # at least one leaf gained a data-axis shard not present in pspec
+    got = []
+    jax.tree.map(lambda ps, os_: got.append(ps != os_), pspecs, ospecs,
+                 is_leaf=lambda x: isinstance(x, P))
+    assert any(got)

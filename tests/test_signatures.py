@@ -1,0 +1,49 @@
+"""Jaxpr-based utilization signatures."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import signatures
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    costs = signatures.jaxpr_costs(jax.make_jaxpr(f)(a, b).jaxpr)
+    dot = [c for c in costs if c.name == "dot_general"]
+    assert len(dot) == 1
+    assert dot[0].flops == 2 * 64 * 128 * 32
+
+
+def test_scan_expansion_scales_costs():
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), ()
+        c, _ = jax.lax.scan(body, x, ws)
+        return c
+    x = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 16, 16), jnp.float32)
+    costs = signatures.jaxpr_costs(jax.make_jaxpr(f)(x, ws).jaxpr)
+    total_dot = sum(c.flops for c in costs if c.name == "dot_general")
+    assert total_dot == 5 * 2 * 8 * 16 * 16
+
+
+def test_signature_deterministic_and_shaped():
+    def f(a, b):
+        return jnp.sum(jnp.tanh(a @ b))
+    a = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    s1 = signatures.signature_of(f, a, b, samples=128)
+    s2 = signatures.signature_of(f, a, b, samples=128)
+    assert s1.shape == (128,)
+    np.testing.assert_array_equal(s1, s2)
+    assert (s1 >= 0).all() and (s1 <= 1 + 1e-6).all()
+
+
+def test_different_programs_different_signatures():
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    s_mm = signatures.signature_of(lambda x: x @ x, a, samples=64)
+    s_el = signatures.signature_of(lambda x: jnp.tanh(x) * 2, a, samples=64)
+    assert not np.allclose(s_mm, s_el)

@@ -1,0 +1,38 @@
+"""Similarity + matching phase (paper §3.1.3, Fig. 4-b, Table 1)."""
+import numpy as np
+import pytest
+
+from repro.core import similarity, match_application, correlation
+from repro import mrsim
+
+
+def test_self_similarity_is_one():
+    x = np.random.default_rng(0).normal(size=64).astype(np.float32)
+    assert similarity(x, x) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_correlation_requires_equal_length():
+    with pytest.raises(ValueError):
+        correlation(np.zeros(4), np.zeros(5))
+
+
+def test_paper_table1_structure():
+    """Exim matches WordCount (same text-parse family), not TeraSort."""
+    psets = mrsim.paper_param_sets()
+    refs = {app: [mrsim.simulate_cpu_series(app, p) for p in psets]
+            for app in ("wordcount", "terasort")}
+    qs = [mrsim.simulate_cpu_series("exim", p, run=1) for p in psets]
+    res = match_application(qs, refs, band=8)
+    assert res.best == "wordcount"
+    assert res.wins["wordcount"] > res.wins["terasort"]
+    # diagonal scores beat the paper's 0.9 threshold
+    assert all(s >= 0.9 for s in res.scores["wordcount"])
+
+
+def test_match_application_rejects_below_threshold():
+    rng = np.random.default_rng(1)
+    qs = [rng.normal(size=100).astype(np.float32)]
+    refs = {"other": [rng.normal(size=100).astype(np.float32) * 0 + 
+                      np.linspace(0, 1, 100).astype(np.float32)]}
+    res = match_application(qs, refs, threshold=0.999, band=4)
+    assert res.best is None or res.wins[res.best] == 0 or res.best == "other"

@@ -1,0 +1,38 @@
+"""Haar wavelet compression (paper §5 future plan)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import wavelet
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 200))
+@settings(max_examples=25, deadline=None)
+def test_perfect_reconstruction(seed, n):
+    x = np.random.default_rng(seed).normal(size=n)
+    xr = wavelet.reconstruct(wavelet.haar_dwt(x), n)
+    np.testing.assert_allclose(x, xr, atol=1e-9)
+
+
+def test_compression_keeps_top_energy():
+    x = np.sin(np.linspace(0, 4 * np.pi, 128))
+    c_full = wavelet.haar_dwt(x)
+    c16 = wavelet.compress(x, 16)
+    assert (c16 != 0).sum() <= 16
+    # kept coefficients carry most of the energy
+    assert np.sum(c16 ** 2) >= 0.95 * np.sum(c_full ** 2)
+
+
+def test_wavelet_similarity_self():
+    x = np.random.default_rng(0).normal(size=100)
+    assert wavelet.wavelet_similarity(x, x) > 0.999
+
+
+def test_wavelet_matching_agrees_with_dtw_on_easy_cases():
+    from repro import mrsim
+    p = mrsim.paper_param_sets()[0]
+    exim = mrsim.simulate_cpu_series("exim", p)
+    wc = mrsim.simulate_cpu_series("wordcount", p)
+    ts = mrsim.simulate_cpu_series("terasort", p)
+    s_wc = wavelet.wavelet_similarity(exim, wc, m=64)
+    s_ts = wavelet.wavelet_similarity(exim, ts, m=64)
+    assert s_wc > s_ts
