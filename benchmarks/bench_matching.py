@@ -1,21 +1,32 @@
-"""Matching-phase accuracy (paper Fig. 4-b): leave-one-run-out over the
-three applications x parameter sets — does the matcher recover the true
-application family from an unseen run's CPU series?
+"""Matching-phase benchmarks (paper Fig. 4-b + the §5 scaling concern).
+
+1. Accuracy: leave-one-run-out over the three applications x parameter
+   sets — does the matcher recover the true application family from an
+   unseen run's CPU series?  (Runs on the batched pairs path.)
+2. Throughput: one query against a K-entry reference bank, scalar
+   per-pair jit loop (the seed's dispatch pattern — one device round-trip
+   per reference) vs the single-dispatch ``dtw_distance_bank``, at
+   K in {8, 64, 256}; verifies the two agree to 1e-4.
 """
 
 from __future__ import annotations
 
+import os
 import time
 
+import jax
 import numpy as np
 
 from repro import mrsim
-from repro.core import match_application
+from repro.core import dtw, match_application
+from repro.core.database import pack_series
 
 BAND = 8
+BANK_SIZES = (8, 64, 256)
+MIN_SPEEDUP_AT_256 = 5.0
 
 
-def run():
+def _accuracy_rows():
     psets = mrsim.paper_param_sets()
     apps = list(mrsim.APPS)
     refs = {app: [mrsim.simulate_cpu_series(app, p, run=0) for p in psets]
@@ -37,6 +48,73 @@ def run():
           f"({100*acc:.0f}%)")
     assert acc >= 0.8, "matching accuracy degraded"
     return [("matching_accuracy", dt / total * 1e6, f"acc={acc:.3f}")]
+
+
+def _make_bank(rng, k):
+    """K ragged pseudo-utilization series drawn from a few length buckets
+    (parameter sets quantize real capture lengths the same way)."""
+    buckets = (180, 220, 256, 300, 330, 360)
+    series = []
+    for i in range(k):
+        l = buckets[int(rng.integers(len(buckets)))]
+        t = np.linspace(0, 1, l, dtype=np.float32)
+        s = (0.5 + 0.3 * np.sin(2 * np.pi * (2 + i % 5) * t)
+             + 0.1 * rng.normal(size=l).astype(np.float32))
+        series.append(np.clip(s, 0, 1).astype(np.float32))
+    return series, pack_series(series)
+
+
+def _throughput_rows():
+    rows = []
+    rng = np.random.default_rng(0)
+    x = np.clip(0.5 + 0.3 * np.sin(np.linspace(0, 12, 256)), 0, 1) \
+        .astype(np.float32)
+
+    for k in BANK_SIZES:
+        series, bank = _make_bank(rng, k)
+
+        # scalar loop: one jitted dispatch per reference (seed behavior)
+        def scalar():
+            return np.array([float(dtw.dtw_distance(x, s)) for s in series])
+
+        def batched():
+            return np.asarray(jax.block_until_ready(
+                dtw.dtw_distance_bank(x, bank.series, bank.lengths)))
+
+        d_scalar = scalar()          # warm the per-length jit caches
+        d_batched = batched()
+        np.testing.assert_allclose(d_batched, d_scalar, rtol=1e-4, atol=1e-4)
+
+        reps = 3
+        t0 = time.time()
+        for _ in range(reps):
+            scalar()
+        us_scalar = (time.time() - t0) / reps * 1e6
+        t0 = time.time()
+        for _ in range(reps):
+            batched()
+        us_batched = (time.time() - t0) / reps * 1e6
+
+        speedup = us_scalar / max(us_batched, 1e-9)
+        print(f"[matching] K={k:4d}: scalar {us_scalar/1e3:8.1f} ms  "
+              f"batched {us_batched/1e3:8.1f} ms  speedup {speedup:5.1f}x")
+        rows.append((f"match_scalar_K{k}", us_scalar, "per-pair jit loop"))
+        rows.append((f"match_batched_K{k}", us_batched,
+                     f"speedup={speedup:.1f}x"))
+        # wall-clock gate; disable on loaded/shared machines with
+        # BENCH_MATCHING_STRICT=0 (the distance-agreement check above is
+        # unconditional either way)
+        if k == max(BANK_SIZES) and \
+                os.environ.get("BENCH_MATCHING_STRICT", "1") != "0":
+            assert speedup >= MIN_SPEEDUP_AT_256, (
+                f"batched bank matching only {speedup:.1f}x over the scalar "
+                f"loop at K={k} (need >= {MIN_SPEEDUP_AT_256}x; "
+                f"BENCH_MATCHING_STRICT=0 to demote)")
+    return rows
+
+
+def run():
+    return _accuracy_rows() + _throughput_rows()
 
 
 if __name__ == "__main__":

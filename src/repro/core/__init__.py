@@ -6,28 +6,35 @@ correlation (>= 0.9) and transfer the matched workload's best-known
 configuration parameters (AutoTuner).
 """
 
-from .filters import cheby1_design, lfilter, filtfilt, denoise, normalize01, preprocess
+from .filters import (cheby1_design, lfilter, filtfilt, denoise, normalize01,
+                      preprocess, preprocess_bank)
 from .dtw import (cost_matrix, dtw_matrix, dtw_distance, dtw_matrix_banded,
+                  dtw_matrix_bank, dtw_matrix_pairs, dtw_distance_bank,
                   backtrack, warp_to, dtw_warp)
-from .similarity import (correlation, similarity, MatchResult, match_series,
-                         match_application, MATCH_THRESHOLD)
+from .similarity import (correlation, similarity, similarity_bank,
+                         MatchResult, match_series, match_application,
+                         MATCH_THRESHOLD)
 from .wavelet import (haar_dwt, haar_idwt, compress, reconstruct,
-                      wavelet_distance, wavelet_similarity, match_series_wavelet)
-from .database import Entry, ReferenceDB
+                      wavelet_distance, wavelet_similarity, match_series_wavelet,
+                      haar_dwt_bank, compress_bank, wavelet_similarity_bank)
+from .database import Entry, SeriesBank, pack_series, ReferenceDB
 from .signatures import (ChipSpec, TPU_V5E, OpCost, jaxpr_costs,
                          utilization_series, signature_of)
 from .tuner import AutoTuner, TuneDecision
 from . import hloparse
 
 __all__ = [
-    "cheby1_design", "lfilter", "filtfilt", "denoise", "normalize01", "preprocess",
+    "cheby1_design", "lfilter", "filtfilt", "denoise", "normalize01",
+    "preprocess", "preprocess_bank",
     "cost_matrix", "dtw_matrix", "dtw_distance", "dtw_matrix_banded",
+    "dtw_matrix_bank", "dtw_matrix_pairs", "dtw_distance_bank",
     "backtrack", "warp_to", "dtw_warp",
-    "correlation", "similarity", "MatchResult", "match_series",
-    "match_application", "MATCH_THRESHOLD",
+    "correlation", "similarity", "similarity_bank", "MatchResult",
+    "match_series", "match_application", "MATCH_THRESHOLD",
     "haar_dwt", "haar_idwt", "compress", "reconstruct",
     "wavelet_distance", "wavelet_similarity", "match_series_wavelet",
-    "Entry", "ReferenceDB",
+    "haar_dwt_bank", "compress_bank", "wavelet_similarity_bank",
+    "Entry", "SeriesBank", "pack_series", "ReferenceDB",
     "ChipSpec", "TPU_V5E", "OpCost", "jaxpr_costs", "utilization_series",
     "signature_of",
     "AutoTuner", "TuneDecision",

@@ -11,19 +11,27 @@ Persistence is a directory with one ``.npz`` for the series plus an
 ``index.json`` manifest — append-only, atomic (tmp+rename), safe for
 concurrent readers; this is the on-disk format the AutoTuner ships between
 jobs on a cluster.
+
+Batched matching support: :meth:`ReferenceDB.bank` packs any selection of
+entries into a :class:`SeriesBank` — all series padded (edge value) to a
+common length in one ``[K, M]`` float32 array plus an ``int32 [K]`` vector
+of true lengths — so the whole DB can be matched with a single batched DTW
+dispatch (see ``core/dtw.py``).  Banks are cached per selection and
+invalidated on :meth:`add`.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
 import os
 import tempfile
-from typing import Any, Dict, List, Mapping, Optional, Sequence
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["Entry", "ReferenceDB"]
+__all__ = ["Entry", "SeriesBank", "pack_series", "ReferenceDB"]
 
 
 def _params_key(params: Mapping[str, Any]) -> str:
@@ -38,18 +46,82 @@ class Entry:
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
+@dataclasses.dataclass(frozen=True)
+class SeriesBank:
+    """K ragged series packed for one-dispatch batched matching.
+
+    ``series[k, :lengths[k]]`` is series k; the tail ``series[k,
+    lengths[k]:]`` repeats its edge value (padding never reaches the DTW
+    distance — see ``core/dtw.py`` docstring).  ``labels[k]`` names row k
+    (workload id for DB banks) and ``entries`` holds the source
+    :class:`Entry` objects when the bank was built from a DB.
+    """
+    series: np.ndarray                       # [K, M] float32
+    lengths: np.ndarray                      # [K] int32
+    labels: Tuple[str, ...] = ()
+    entries: Tuple[Entry, ...] = ()
+
+    def __len__(self) -> int:
+        return self.series.shape[0]
+
+    def row(self, k: int) -> np.ndarray:
+        """Unpadded series k."""
+        return self.series[k, : int(self.lengths[k])]
+
+
+def pack_series(series: Sequence[np.ndarray],
+                labels: Sequence[str] = (),
+                entries: Sequence[Entry] = (),
+                pad_multiple: int = 8) -> SeriesBank:
+    """Pack ragged 1-D series into a padded ``[K, M]`` bank.
+
+    M is the max length rounded up to ``pad_multiple`` (keeps the last axis
+    lane-friendly on TPU); padding repeats each series' final sample.
+    """
+    arrs = [np.asarray(s, np.float32).reshape(-1) for s in series]
+    lengths = np.asarray([a.shape[0] for a in arrs], np.int32)
+    if any(l == 0 for l in lengths):
+        raise ValueError("cannot pack empty series into a bank")
+    if not arrs:
+        return SeriesBank(np.zeros((0, pad_multiple), np.float32), lengths,
+                          tuple(labels), tuple(entries))
+    m = max(int(lengths.max()), 2)
+    m = ((m + pad_multiple - 1) // pad_multiple) * pad_multiple
+    out = np.empty((len(arrs), m), np.float32)
+    for i, a in enumerate(arrs):
+        out[i, : a.shape[0]] = a
+        out[i, a.shape[0]:] = a[-1]
+    return SeriesBank(out, lengths, tuple(labels), tuple(entries))
+
+
 class ReferenceDB:
     """In-memory reference DB with directory persistence."""
 
+    #: Each cached bank is a padded copy of its selection, and every
+    #: distinct exclude-set produces a distinct selection (AutoTuner
+    #: excludes the query workload), so the cache must be bounded: LRU
+    #: over the most recent selections.
+    BANK_CACHE_MAX = 8
+
     def __init__(self) -> None:
         self._entries: List[Entry] = []
+        self._bank_cache: "collections.OrderedDict[Tuple[int, ...], SeriesBank]" \
+            = collections.OrderedDict()
 
     # -- population ---------------------------------------------------------
     def add(self, workload: str, params: Mapping[str, Any],
-            series: np.ndarray, **meta: Any) -> Entry:
+            series: np.ndarray, meta: Optional[Mapping[str, Any]] = None,
+            **extra_meta: Any) -> Entry:
+        """Add one profiled series.  ``meta`` may be passed explicitly (a
+        mapping — the persistence round-trip uses this so meta keys named
+        ``workload``/``params``/``series`` can't shadow positional args) or
+        as keyword arguments; both merge into the entry's meta dict."""
+        md = dict(meta or {})
+        md.update(extra_meta)
         e = Entry(workload=str(workload), params=dict(params),
-                  series=np.asarray(series, np.float32), meta=dict(meta))
+                  series=np.asarray(series, np.float32), meta=md)
         self._entries.append(e)
+        self._bank_cache.clear()
         return e
 
     # -- queries -------------------------------------------------------------
@@ -95,6 +167,31 @@ class ReferenceDB:
             e.meta["best_config"] = dict(config)
             e.meta["score"] = float(score)
 
+    # -- batched matching ----------------------------------------------------
+    def bank(self, workloads: Optional[Sequence[str]] = None,
+             exclude: Sequence[str] = ()) -> SeriesBank:
+        """Padded ``[K, M]`` bank over the selected entries (all by
+        default), row-labelled with each entry's workload id.  LRU-cached
+        per selection (:data:`BANK_CACHE_MAX` most recent); the cache is
+        cleared by :meth:`add`."""
+        inc = None if workloads is None else set(workloads)
+        exc = set(exclude)
+        sel = tuple(i for i, e in enumerate(self._entries)
+                    if (inc is None or e.workload in inc)
+                    and e.workload not in exc)
+        cached = self._bank_cache.get(sel)
+        if cached is not None:
+            self._bank_cache.move_to_end(sel)
+            return cached
+        entries = [self._entries[i] for i in sel]
+        bank = pack_series([e.series for e in entries],
+                           labels=[e.workload for e in entries],
+                           entries=entries)
+        self._bank_cache[sel] = bank
+        while len(self._bank_cache) > self.BANK_CACHE_MAX:
+            self._bank_cache.popitem(last=False)
+        return bank
+
     # -- persistence ----------------------------------------------------------
     def save(self, path: str) -> None:
         os.makedirs(path, exist_ok=True)
@@ -123,6 +220,8 @@ class ReferenceDB:
         arrays = np.load(os.path.join(path, "series.npz"))
         db = cls()
         for rec in index["entries"]:
+            # meta passed explicitly: a meta key named "workload"/"params"/
+            # "series" must not shadow the positional arguments.
             db.add(rec["workload"], rec["params"], arrays[rec["key"]],
-                   **rec.get("meta", {}))
+                   meta=rec.get("meta", {}))
         return db

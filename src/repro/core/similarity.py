@@ -8,22 +8,59 @@ phase compares the new application's series, per configuration-parameter
 set, with every database application's series for the *same* parameter set,
 and declares the application with the highest number of >=0.9 wins the most
 similar.
+
+Similarity scores are the **raw** Pearson correlation in [-1, 1]:
+anti-correlated references score negative instead of being clipped to 0, so
+callers can see *how* wrong a candidate is; the 0.9 threshold comparison is
+the only place a clamp semantically happens.
+
+Batched bank layout (the hot path)
+----------------------------------
+Scoring one query against K references used to dispatch one jitted DTW per
+pair from a Python loop — O(K) device round-trips.  The batched path packs
+all references into a padded ``[K, M]`` bank with an ``int32 [K]`` vector
+of true lengths (``database.SeriesBank`` / ``pack_series``; padding repeats
+each series' edge value and never reaches a DTW distance) and solves every
+DP in **one** jit dispatch:
+
+* :func:`similarity_bank` — one ``dtw_matrix_bank`` dispatch for all K
+  accumulated-cost matrices, then O(N+M) host-side backtracking/warping and
+  correlation per reference (Eq. 3's warp is data-dependent, so it stays in
+  numpy on the returned matrices).
+* :func:`match_series` — dict-of-references convenience wrapper over
+  :func:`similarity_bank`.
+* :func:`match_application` — batches every (parameter set, application)
+  pair of Fig. 4-b into a single ``dtw_matrix_pairs`` dispatch, ragged on
+  both the query and reference sides.
+
+Very large banks are transparently chunked so the ``[K, N, M]`` matrix
+stack stays under ``MAX_MATRIX_ELEMS`` elements per dispatch (distance-only
+scoring via ``dtw.dtw_distance_bank`` never materializes the stack at all).
+The scalar :func:`similarity` remains the reference implementation and the
+right tool for one-off pairs; the bank functions agree with a scalar loop
+to float tolerance (``tests/test_batched_matching.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Optional, Sequence
+from typing import Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from . import dtw as _dtw
 from . import filters as _filters
+from .database import SeriesBank, pack_series
 
-__all__ = ["correlation", "similarity", "MatchResult", "match_series", "match_application"]
+__all__ = ["correlation", "similarity", "similarity_bank", "MatchResult",
+           "match_series", "match_application", "MATCH_THRESHOLD"]
 
 #: Paper §3.1.3: acceptable-match threshold.
 MATCH_THRESHOLD = 0.9
+
+#: Chunk bound for the [K, N, M] accumulated-cost stack of one dispatch
+#: (2**27 f32 elements = 512 MiB).  Typical DB banks fit in one chunk.
+MAX_MATRIX_ELEMS = 1 << 27
 
 
 def correlation(x: np.ndarray, y: np.ndarray) -> float:
@@ -42,16 +79,96 @@ def correlation(x: np.ndarray, y: np.ndarray) -> float:
 
 def similarity(x: np.ndarray, y: np.ndarray, *, preprocess: bool = False,
                band: Optional[int] = None) -> float:
-    """SIM(X, Y) in [0, 1]: DTW-align Y to X, then CORR(X, Y').
+    """SIM(X, Y) in [-1, 1]: DTW-align Y to X, then CORR(X, Y').
 
     ``preprocess=True`` runs the paper's Chebyshev de-noise + [0,1]
-    normalization on both series first.
+    normalization on both series first.  The raw correlation is returned
+    (anti-correlation is information, not noise); compare against
+    :data:`MATCH_THRESHOLD` to decide acceptability.
     """
     if preprocess:
         x = np.asarray(_filters.preprocess(np.asarray(x, np.float32)))
         y = np.asarray(_filters.preprocess(np.asarray(y, np.float32)))
     yp, _ = _dtw.dtw_warp(x, y, band=band)
-    return float(np.clip(correlation(x, yp), 0.0, 1.0))
+    return float(np.clip(correlation(x, yp), -1.0, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Batched bank scoring
+# ---------------------------------------------------------------------------
+
+def _as_bank(references: Union[SeriesBank, np.ndarray, Sequence[np.ndarray]],
+             lengths: Optional[np.ndarray]) -> SeriesBank:
+    if isinstance(references, SeriesBank):
+        if lengths is not None:
+            raise ValueError("lengths is implied by the SeriesBank")
+        return references
+    if isinstance(references, np.ndarray):
+        if references.ndim != 2:
+            # iterating a 1-D array here would silently pack K one-sample
+            # series; make the porting mistake loud instead.
+            raise ValueError(
+                f"references array must be [K, M], got shape "
+                f"{references.shape}; wrap a single series in a list")
+        if lengths is None:
+            lengths = np.full((references.shape[0],), references.shape[1],
+                              np.int32)
+        return SeriesBank(np.asarray(references, np.float32),
+                          np.asarray(lengths, np.int32))
+    # ragged sequence of 1-D series: each element's own length is
+    # authoritative — a lengths vector here would be silently wrong.
+    if lengths is not None:
+        raise ValueError("lengths only applies to a padded 2-D bank; pass "
+                         "a [K, M] array (or a SeriesBank) with it")
+    return pack_series(list(references))
+
+
+def _warp_corr(x: np.ndarray, y: np.ndarray, D: np.ndarray) -> float:
+    """Host-side Eq. 3 tail: backtrack D, warp Y to Y', correlate."""
+    path = _dtw.backtrack(D)
+    yp = _dtw.warp_to(y, path, len(x))
+    return float(np.clip(correlation(np.asarray(x, np.float64), yp),
+                         -1.0, 1.0))
+
+
+def similarity_bank(x: np.ndarray,
+                    references: Union[SeriesBank, np.ndarray,
+                                      Sequence[np.ndarray]],
+                    lengths: Optional[np.ndarray] = None, *,
+                    preprocess: bool = False,
+                    band: Optional[int] = None) -> np.ndarray:
+    """SIM(X, Y_k) for every reference in a bank -> float64 [K].
+
+    All K DTW matrices come from a single batched jit dispatch
+    (``dtw.dtw_matrix_bank``); backtracking + correlation run per-row on
+    the host (O(K*(N+M)), negligible next to the O(K*N*M) DP).
+
+    ``preprocess=True`` applies the paper pipeline to the query (scalar)
+    and the whole bank (``filters.preprocess_bank``: one dispatch per
+    distinct series length, row-identical to the scalar pipeline).
+    """
+    bank = _as_bank(references, lengths)
+    x = np.asarray(x, np.float32).reshape(-1)
+    if len(bank) == 0:
+        return np.zeros((0,), np.float64)
+    if preprocess:
+        x = np.asarray(_filters.preprocess(x))
+        bank = SeriesBank(
+            np.asarray(_filters.preprocess_bank(bank.series, bank.lengths)),
+            bank.lengths, bank.labels, bank.entries)
+
+    k, m = bank.series.shape
+    n = x.shape[0]
+    chunk = max(1, int(MAX_MATRIX_ELEMS // max(n * m, 1)))
+    out = np.empty((k,), np.float64)
+    for lo in range(0, k, chunk):
+        hi = min(lo + chunk, k)
+        D = np.asarray(_dtw.dtw_matrix_bank(
+            x, bank.series[lo:hi], bank.lengths[lo:hi], band=band))
+        for r in range(lo, hi):
+            l = int(bank.lengths[r])
+            out[r] = _warp_corr(x, bank.series[r, :l], D[r - lo, :, :l])
+    return out
 
 
 @dataclasses.dataclass
@@ -59,16 +176,20 @@ class MatchResult:
     """Outcome of the matching phase for one query application."""
     best: Optional[str]                 # app with most >=threshold wins
     wins: Mapping[str, int]             # per-app count of matched param sets
-    scores: Mapping[str, Sequence[float]]  # per-app CORR per param set
+    scores: Mapping[str, Sequence[float]]  # per-app raw CORR per param set
     threshold: float = MATCH_THRESHOLD
 
 
 def match_series(query: np.ndarray, references: Mapping[str, np.ndarray],
                  *, preprocess: bool = True, band: Optional[int] = None
                  ) -> Mapping[str, float]:
-    """Similarity of one query series against named reference series."""
-    return {name: similarity(query, ref, preprocess=preprocess, band=band)
-            for name, ref in references.items()}
+    """Similarity of one query series against named reference series.
+
+    Batched: the whole reference set is scored with one DTW dispatch."""
+    names = list(references)
+    bank = pack_series([references[nm] for nm in names], labels=names)
+    sims = similarity_bank(query, bank, preprocess=preprocess, band=band)
+    return {nm: float(s) for nm, s in zip(names, sims)}
 
 
 def match_application(query_series: Sequence[np.ndarray],
@@ -79,27 +200,59 @@ def match_application(query_series: Sequence[np.ndarray],
     """Paper Fig. 4-b: per parameter set j, score the query's series j
     against every reference app's series j; an app scores a *win* when its
     CORR is the highest of all apps AND >= threshold.  The app with the
-    most wins is the match."""
+    most wins is the match.
+
+    Every (parameter set, app) pair is solved in one batched
+    ``dtw.dtw_matrix_pairs`` dispatch — ragged series on both sides ride in
+    padded banks with true-length vectors."""
+    names = list(reference_series)
     napps = {name: len(s) for name, s in reference_series.items()}
     nsets = len(query_series)
-    for name, k in napps.items():
-        if k != nsets:
-            raise ValueError(f"{name} has {k} series, query has {nsets}")
+    for name, kk in napps.items():
+        if kk != nsets:
+            raise ValueError(f"{name} has {kk} series, query has {nsets}")
+    if nsets == 0 or not names:
+        wins = {name: 0 for name in names}
+        return MatchResult(best=None, wins=wins,
+                           scores={name: [] for name in names},
+                           threshold=threshold)
 
-    scores = {name: [] for name in reference_series}
-    wins = {name: 0 for name in reference_series}
+    qbank = pack_series(list(query_series))
+    rbank = pack_series([reference_series[name][j]
+                         for name in names for j in range(nsets)])
+    if preprocess:
+        qbank = dataclasses.replace(qbank, series=np.asarray(
+            _filters.preprocess_bank(qbank.series, qbank.lengths)))
+        rbank = dataclasses.replace(rbank, series=np.asarray(
+            _filters.preprocess_bank(rbank.series, rbank.lengths)))
+
+    # pair p = (app a, set j) -> query row j, reference row a * nsets + j
+    qidx = np.tile(np.arange(nsets), len(names))
+    xs, xl = qbank.series[qidx], qbank.lengths[qidx]
+    p_total = len(names) * nsets
+    n, m = xs.shape[1], rbank.series.shape[1]
+    chunk = max(1, int(MAX_MATRIX_ELEMS // max(n * m, 1)))
+    corr = np.empty((p_total,), np.float64)
+    for lo in range(0, p_total, chunk):
+        hi = min(lo + chunk, p_total)
+        D = np.asarray(_dtw.dtw_matrix_pairs(
+            xs[lo:hi], rbank.series[lo:hi], xl[lo:hi], rbank.lengths[lo:hi],
+            band=band))
+        for p in range(lo, hi):
+            ql, rl = int(xl[p]), int(rbank.lengths[p])
+            corr[p] = _warp_corr(qbank.series[qidx[p], :ql],
+                                 rbank.series[p, :rl], D[p - lo, :ql, :rl])
+
+    scores = {name: [float(corr[a * nsets + j]) for j in range(nsets)]
+              for a, name in enumerate(names)}
+    wins = {name: 0 for name in names}
     for j in range(nsets):
-        best_name, best_corr = None, -1.0
-        for name, series in reference_series.items():
-            c = similarity(query_series[j], series[j],
-                           preprocess=preprocess, band=band)
-            scores[name].append(c)
-            if c > best_corr:
-                best_name, best_corr = name, c
-        if best_name is not None and best_corr >= threshold:
+        best_name = max(names, key=lambda nm: scores[nm][j])
+        if scores[best_name][j] >= threshold:
             wins[best_name] += 1
 
-    best = max(wins, key=lambda k: wins[k]) if wins else None
+    best = max(wins, key=lambda kk: wins[kk]) if wins else None
     if best is not None and wins[best] == 0:
         best = None
-    return MatchResult(best=best, wins=wins, scores=scores, threshold=threshold)
+    return MatchResult(best=best, wins=wins, scores=scores,
+                       threshold=threshold)

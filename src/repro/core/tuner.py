@@ -12,6 +12,18 @@ Hillclimbed configs discovered in EXPERIMENTS.md §Perf are recorded back
 into the database with :meth:`AutoTuner.record`, so tuning knowledge
 accumulates across workloads — e.g. kimi-k2 (MLA + MoE) matches
 deepseek-v2's signature and inherits its tuned sharding without search.
+
+Batched matching: :meth:`AutoTuner.match` scores the query against *every*
+candidate entry in the database with one batched DTW dispatch — the DB
+hands back a cached padded ``[K, M]`` bank (+ true-length vector) over the
+candidate entries (``ReferenceDB.bank``), ``similarity_bank`` solves all K
+DPs at once, and per-workload bests are reduced on the host from the bank's
+row labels.  The wavelet prefilter ranks candidates with the equally
+batched ``wavelet_similarity_bank`` before the (narrowed) DTW dispatch.
+Entries are stored pre-processed (``profile`` runs the scalar paper
+pipeline at capture time), so matching never re-filters the bank.  Scores
+are raw correlations in [-1, 1]; the 0.9 threshold is applied only when
+deciding whether to transfer a config.
 """
 
 from __future__ import annotations
@@ -23,7 +35,7 @@ import numpy as np
 
 from . import filters as _filters
 from . import wavelet as _wavelet
-from .similarity import MATCH_THRESHOLD, similarity as _sim
+from .similarity import MATCH_THRESHOLD, similarity_bank as _sim_bank
 from .database import ReferenceDB
 
 __all__ = ["TuneDecision", "AutoTuner"]
@@ -33,9 +45,10 @@ __all__ = ["TuneDecision", "AutoTuner"]
 class TuneDecision:
     workload: str
     matched: Optional[str]            # workload id of the best DB match
-    corr: float                       # its correlation score
+    corr: float                       # best raw correlation in [-1, 1]
+    # (-1.0 when there were no candidates at all)
     config: Optional[Dict[str, Any]]  # transferred exec config (None -> search)
-    scores: Dict[str, float]          # all candidate scores
+    scores: Dict[str, float]          # all candidate raw correlations
     used_wavelet_prefilter: bool = False
 
 
@@ -67,6 +80,9 @@ class AutoTuner:
     # -- matching ----------------------------------------------------------------
     def match(self, workload: str, series: np.ndarray,
               exclude: Sequence[str] = ()) -> TuneDecision:
+        """Score the query against every candidate DB entry in one batched
+        DTW dispatch and transfer the best match's config if its raw
+        correlation clears the threshold."""
         q = self.preprocess(series)
         candidates = [w for w in self.db.workloads()
                       if w != workload and w not in exclude]
@@ -74,25 +90,25 @@ class AutoTuner:
         used_prefilter = False
         if self.wavelet_prefilter and len(candidates) > self.wavelet_prefilter:
             used_prefilter = True
-            wscores = []
-            for w in candidates:
-                best = max(_wavelet.wavelet_similarity(q, e.series, m=self.wavelet_coeffs)
-                           for e in self.db.series_for(w))
-                wscores.append((best, w))
-            wscores.sort(reverse=True)
-            candidates = [w for _, w in wscores[:self.wavelet_prefilter]]
+            bank = self.db.bank(workloads=candidates)
+            wsims = _wavelet.wavelet_similarity_bank(
+                q, bank.series, bank.lengths, m=self.wavelet_coeffs)
+            wbest: Dict[str, float] = {}
+            for lbl, s in zip(bank.labels, wsims):
+                wbest[lbl] = max(wbest.get(lbl, -1.0), float(s))
+            ranked = sorted(candidates, key=lambda w: wbest[w], reverse=True)
+            candidates = ranked[:self.wavelet_prefilter]
 
         scores: Dict[str, float] = {}
-        for w in candidates:
-            best = -1.0
-            for e in self.db.series_for(w):
-                c = _sim(q, e.series, preprocess=False,
-                                           band=self.band)
-                best = max(best, c)
-            scores[w] = best
+        if candidates:
+            bank = self.db.bank(workloads=candidates)
+            corrs = _sim_bank(q, bank, preprocess=False, band=self.band)
+            for lbl, c in zip(bank.labels, corrs):
+                scores[lbl] = max(scores.get(lbl, -1.0), float(c))
 
         matched, corr = None, -1.0
-        for w, c in scores.items():
+        for w in candidates:          # insertion order, ties -> first
+            c = scores[w]
             if c > corr:
                 matched, corr = w, c
 
@@ -101,7 +117,7 @@ class AutoTuner:
             config = self.db.best_config(matched)
         else:
             matched = None if corr < self.threshold else matched
-        return TuneDecision(workload=workload, matched=matched, corr=max(corr, 0.0),
+        return TuneDecision(workload=workload, matched=matched, corr=corr,
                             config=config, scores=scores,
                             used_wavelet_prefilter=used_prefilter)
 

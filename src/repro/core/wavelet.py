@@ -16,7 +16,8 @@ from typing import Mapping
 import numpy as np
 
 __all__ = ["haar_dwt", "haar_idwt", "compress", "reconstruct",
-           "wavelet_distance", "wavelet_similarity", "match_series_wavelet"]
+           "wavelet_distance", "wavelet_similarity", "match_series_wavelet",
+           "haar_dwt_bank", "compress_bank", "wavelet_similarity_bank"]
 
 _SQRT2 = np.sqrt(2.0)
 
@@ -109,3 +110,71 @@ def match_series_wavelet(query: np.ndarray,
                          m: int = 64) -> Mapping[str, float]:
     return {name: wavelet_similarity(query, ref, m=m)
             for name, ref in references.items()}
+
+
+# ---------------------------------------------------------------------------
+# Batched (bank) variants — vectorized over K series at once
+# ---------------------------------------------------------------------------
+
+def haar_dwt_bank(x: np.ndarray) -> np.ndarray:
+    """Row-wise Haar decomposition of ``[K, T]`` (edge-pads T to a power of
+    two); same coefficient layout as :func:`haar_dwt` per row."""
+    x = np.asarray(x, np.float64)
+    n = _next_pow2(x.shape[1])
+    if n != x.shape[1]:
+        x = np.pad(x, ((0, 0), (0, n - x.shape[1])), mode="edge")
+    out = []
+    cur = x
+    while cur.shape[1] > 1:
+        even, odd = cur[:, 0::2], cur[:, 1::2]
+        out.append((even - odd) / _SQRT2)
+        cur = (even + odd) / _SQRT2
+    out.append(cur)
+    return np.concatenate(out[::-1], axis=1)
+
+
+def compress_bank(c: np.ndarray, m: int) -> np.ndarray:
+    """Per-row top-|coefficient| truncation of a ``[K, P]`` coefficient
+    bank (row-wise :func:`compress` tail)."""
+    c = np.asarray(c, np.float64)
+    if m >= c.shape[1]:
+        return c
+    keep = np.argpartition(np.abs(c), -m, axis=1)[:, -m:]
+    out = np.zeros_like(c)
+    np.put_along_axis(out, keep, np.take_along_axis(c, keep, axis=1), axis=1)
+    return out
+
+
+def wavelet_similarity_bank(x: np.ndarray, bank: np.ndarray,
+                            lengths: np.ndarray, m: int = 64) -> np.ndarray:
+    """Compressed-domain similarity of one query against a padded bank ->
+    [K] in [0, 1] — the whole-DB form of :func:`wavelet_similarity`, used
+    as the AutoTuner's fast prefilter ranking.
+
+    All series are edge-extended to one common power-of-two length (the
+    scalar function picks it per pair), so values can differ slightly from
+    per-pair calls when lengths are very unequal; the *ranking* is what the
+    prefilter consumes.
+    """
+    bank = np.asarray(bank, np.float64)
+    lengths = np.asarray(lengths)
+    x = np.asarray(x, np.float64).reshape(-1)
+    k, width = bank.shape
+    if k == 0:
+        return np.zeros((0,), np.float64)
+    n = max(_next_pow2(len(x)),
+            _next_pow2(int(lengths.max()) if k else 1))
+    xp = np.pad(x, (0, n - len(x)), mode="edge")
+    if n >= width:
+        # bank rows already repeat their edge value past lengths[k]
+        bp = np.pad(bank, ((0, 0), (0, n - width)), mode="edge")
+    else:
+        bp = bank[:, :n]
+    cx = compress(xp, m)
+    cb = compress_bank(haar_dwt_bank(bp), m)
+    num = cb @ cx
+    den = np.linalg.norm(cx) * np.linalg.norm(cb, axis=1)
+    sims = np.where(den < 1e-12,
+                    np.all(np.isclose(cb, cx[None, :]), axis=1).astype(float),
+                    num / np.maximum(den, 1e-300))
+    return np.clip(sims, 0.0, 1.0)

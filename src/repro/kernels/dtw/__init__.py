@@ -1,4 +1,6 @@
-from .ops import dtw_batched, dtw_distances
+from .ops import (dtw_batched, dtw_batched_pairs, dtw_distances,
+                  dtw_distances_pairs)
 from .ref import dtw_matrix_ref
 
-__all__ = ["dtw_batched", "dtw_distances", "dtw_matrix_ref"]
+__all__ = ["dtw_batched", "dtw_batched_pairs", "dtw_distances",
+           "dtw_distances_pairs", "dtw_matrix_ref"]

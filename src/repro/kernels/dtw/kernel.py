@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-__all__ = ["dtw_matrix_kernel"]
+__all__ = ["dtw_matrix_kernel", "dtw_matrix_pairs_kernel"]
 
 _INF = 3.0e38  # plain float: jnp scalars become captured consts in Pallas
 
@@ -92,3 +92,58 @@ def dtw_matrix_kernel(x, ys, interpret: bool = True):
     x = jnp.asarray(x, jnp.float32)
     ys = jnp.asarray(ys, jnp.float32)
     return _dtw_call(x, ys, interpret)
+
+
+# ---------------------------------------------------------------------------
+# Pairs entry point: ragged query bank x ragged reference bank
+# ---------------------------------------------------------------------------
+
+def _dtw_pairs_kernel(x_ref, y_ref, d_ref, *, n: int, m: int):
+    """x: [1, N] one query; y: [1, M] one reference; out D: [1, N, M].
+    Same wavefront body as :func:`_dtw_kernel`, but the query is also
+    blocked per grid program so each pair gets its own (query, reference)
+    combination — the batched ``match_application`` layout."""
+    x = x_ref[0]
+    y = y_ref[0]
+
+    jj = jax.lax.iota(jnp.int32, m)
+
+    def row(i, prev):
+        d = jnp.abs(x[i] - y)
+        prev_shift = jnp.pad(prev, (1, 0), constant_values=_INF)[:-1]
+        mrow = jnp.minimum(prev, prev_shift)
+        s = jnp.where((i == 0) & (jj == 0), d, mrow + d)
+        s = jnp.where((i == 0) & (jj > 0), _INF, s)
+        cur = _minplus_scan(d, s, m)
+        d_ref[0, i, :] = cur
+        return cur
+
+    jax.lax.fori_loop(0, n, row, jnp.full((m,), _INF, jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _dtw_pairs_call(xs, ys, interpret: bool):
+    k, n = xs.shape
+    _, m = ys.shape
+    kernel = functools.partial(_dtw_pairs_kernel, n=n, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=(k,),
+        in_specs=[pl.BlockSpec((1, n), lambda i: (i, 0)),
+                  pl.BlockSpec((1, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, n, m), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, n, m), jnp.float32),
+        interpret=interpret,
+    )(xs, ys)
+
+
+def dtw_matrix_pairs_kernel(xs, ys, interpret: bool = True):
+    """xs: [K, N] f32 queries; ys: [K, M] f32 references -> D [K, N, M],
+    one grid program per (query, reference) pair.  Padded tails are
+    harmless: D[i, j] only depends on cells (<=i, <=j), so callers read
+    distances at (xlen-1, ylen-1) and slice before backtracking."""
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    if xs.shape[0] != ys.shape[0]:
+        raise ValueError(f"pair count mismatch {xs.shape[0]} vs {ys.shape[0]}")
+    return _dtw_pairs_call(xs, ys, interpret)

@@ -1,4 +1,12 @@
-"""Jitted public API for the batched DTW kernel."""
+"""Jitted public API for the batched DTW kernel.
+
+All entry points are whole-bank batched: one ``pallas_call`` (one grid of
+wavefront programs) covers every reference — or every (query, reference)
+pair — so matching the entire reference DB is a single device dispatch.
+``lengths`` vectors carry the true (pre-padding) series lengths; distances
+are read at the dynamic column ``lengths[k] - 1``, which padding can never
+influence (D[i, j] depends only on cells (<=i, <=j)).
+"""
 
 from __future__ import annotations
 
@@ -8,9 +16,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..common import default_interpret
-from .kernel import dtw_matrix_kernel
+from .kernel import dtw_matrix_kernel, dtw_matrix_pairs_kernel
 
-__all__ = ["dtw_batched", "dtw_distances"]
+__all__ = ["dtw_batched", "dtw_batched_pairs", "dtw_distances",
+           "dtw_distances_pairs"]
 
 
 def dtw_batched(x, ys, interpret: Optional[bool] = None):
@@ -19,7 +28,46 @@ def dtw_batched(x, ys, interpret: Optional[bool] = None):
     return dtw_matrix_kernel(x, ys, interpret=interpret)
 
 
-def dtw_distances(x, ys, interpret: Optional[bool] = None):
-    """-> similarity distances D(N, M) per reference, shape [K]."""
+def dtw_batched_pairs(xs, ys, interpret: Optional[bool] = None):
+    """Pairwise queries xs [K, N] vs references ys [K, M] -> [K, N, M]."""
+    interpret = default_interpret() if interpret is None else interpret
+    return dtw_matrix_pairs_kernel(xs, ys, interpret=interpret)
+
+
+def _lengths_or_full(lengths, k: int, m: int):
+    """int32 [K] true-length vector; defaults to the full padded width."""
+    return jnp.full((k,), m, jnp.int32) if lengths is None \
+        else jnp.asarray(lengths, jnp.int32)
+
+
+def _last_valid(D, row_idx, col_idx):
+    """D [K, N, M] -> D[k, row_idx[k], col_idx[k]] per pair."""
+    k = D.shape[0]
+    Dk = jnp.take_along_axis(
+        D, row_idx.reshape(k, 1, 1).astype(jnp.int32), axis=1)[:, 0, :]
+    return jnp.take_along_axis(
+        Dk, col_idx.reshape(k, 1).astype(jnp.int32), axis=1)[:, 0]
+
+
+def dtw_distances(x, ys, interpret: Optional[bool] = None, *, lengths=None):
+    """-> similarity distances D(N, len_k) per reference, shape [K].
+
+    ``lengths`` (keyword-only int [K], so pre-existing positional
+    ``interpret`` callers keep working) gives each padded reference row's
+    true length; omitted means every row uses the full width M."""
     D = dtw_batched(x, ys, interpret=interpret)
-    return D[:, -1, -1]
+    if lengths is None:
+        return D[:, -1, -1]
+    ls = jnp.asarray(lengths, jnp.int32)
+    rows = jnp.full((D.shape[0],), D.shape[1] - 1, jnp.int32)
+    return _last_valid(D, rows, ls - 1)
+
+
+def dtw_distances_pairs(xs, ys, xlens=None, ylens=None,
+                        interpret: Optional[bool] = None):
+    """-> distances D(xlen_k, ylen_k) per (query, reference) pair, [K]."""
+    D = dtw_batched_pairs(xs, ys, interpret=interpret)
+    k = D.shape[0]
+    ql = _lengths_or_full(xlens, k, D.shape[1])
+    rl = _lengths_or_full(ylens, k, D.shape[2])
+    return _last_valid(D, ql - 1, rl - 1)

@@ -35,6 +35,27 @@ from .layers import Dtypes, dense_init
 __all__ = ["moe_init", "moe_apply"]
 
 
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-tolerant shard_map.
+
+    ``shard_map`` graduated from ``jax.experimental.shard_map`` to
+    ``jax.shard_map`` (and its ``check_rep`` flag was renamed
+    ``check_vma``) across jax releases; accept whichever this jax has.
+    Replication checking is disabled either way: the expert-parallel psum
+    pattern below is not representable to the checker.
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 def moe_init(key, cfg: ModelConfig) -> Dict:
     pd = Dtypes.param(cfg)
     E, D, F = cfg.num_experts, cfg.d_model, cfg.d_ff_expert
@@ -174,14 +195,13 @@ def moe_apply(p, x: jax.Array, cfg: ModelConfig,
 
         out_spec = P(data_axes, None, None) if B % dp == 0 \
             else P(None, None, None)
-        out, aux = jax.shard_map(
+        out, aux = _shard_map(
             mapped_tp, mesh=mesh,
             in_specs=(P(None, None, None), P(None, None),
                       P(model_axis, None, data_axes),
                       P(model_axis, None, data_axes),
                       P(model_axis, data_axes, None)),
             out_specs=(out_spec, P()),
-            check_vma=False,
         )(x, router_w, ex["w_gate"], ex["w_up"], ex["w_down"])
         aux = aux.mean() if aux.ndim else aux
     else:
@@ -195,13 +215,12 @@ def moe_apply(p, x: jax.Array, cfg: ModelConfig,
             out, aux = run(x_loc, rw, wg, wu, wd, e_off, model_axis)
             return out, jax.lax.pmean(aux, all_axes)
 
-        out, aux = jax.shard_map(
+        out, aux = _shard_map(
             mapped, mesh=mesh,
             in_specs=(P(data_axes, None, None), P(None, None),
                       P(model_axis, None, None), P(model_axis, None, None),
                       P(model_axis, None, None)),
             out_specs=(P(data_axes, None, None), P()),
-            check_vma=False,
         )(x, router_w, ex["w_gate"], ex["w_up"], ex["w_down"])
         aux = aux.mean() if aux.ndim else aux
 

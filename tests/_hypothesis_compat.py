@@ -1,0 +1,63 @@
+"""Import ``given``/``settings``/``st`` from hypothesis when available,
+else fall back to a deterministic mini property runner.
+
+Tier-1 must collect and pass on machines without hypothesis installed
+(CI installs it — see .github/workflows/ci.yml — so the real shrinking
+engine still runs there).  The fallback drives each ``@given`` test with a
+fixed, seeded set of examples per strategy: both bounds, the midpoint, and
+a few seeded draws — no shrinking, but the same properties get exercised.
+
+Only the strategies tier-1 actually uses are implemented (``st.integers``);
+extend as tests grow.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    import itertools
+
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+
+    class _IntStrategy:
+        def __init__(self, lo: int, hi: int) -> None:
+            self.lo, self.hi = int(lo), int(hi)
+
+        def examples(self, rng, n_random: int):
+            vals = [self.lo, self.hi, (self.lo + self.hi) // 2]
+            vals += [int(v) for v in
+                     rng.integers(self.lo, self.hi + 1, size=n_random)]
+            return vals
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntStrategy:
+            return _IntStrategy(min_value, max_value)
+
+    st = _Strategies()
+
+    def settings(**_kw):  # max_examples/deadline are hypothesis-only
+        return lambda f: f
+
+    def given(*strategies):
+        def deco(f):
+            def wrapper():
+                rng = _np.random.default_rng(0xC0FFEE)
+                cols = [s.examples(rng, 5) for s in strategies]
+                for row in itertools.islice(zip(*(itertools.cycle(c)
+                                                  for c in cols)),
+                                            max(len(c) for c in cols)):
+                    f(*row)
+
+            # deliberately NOT functools.wraps: the wrapper must present a
+            # zero-arg signature or pytest treats the example params as
+            # fixtures.
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+        return deco

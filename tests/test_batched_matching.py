@@ -1,0 +1,179 @@
+"""Batched bank matching engine vs the scalar per-pair loop.
+
+The tentpole invariant: packing K ragged references into one padded
+[K, M] bank and solving every DP in a single dispatch must reproduce the
+scalar ``dtw_distance`` / ``similarity`` loop to float tolerance — padding
+and per-series masks change the dispatch shape, never the math.
+"""
+import numpy as np
+import pytest
+
+from repro.core import dtw, similarity, similarity_bank, match_series
+from repro.core.database import ReferenceDB, SeriesBank, pack_series
+from repro.kernels.dtw import dtw_distances, dtw_distances_pairs
+
+
+def _ragged(rng, lengths):
+    return [rng.normal(size=l).astype(np.float32) for l in lengths]
+
+
+@pytest.fixture(scope="module")
+def ragged_set():
+    rng = np.random.default_rng(42)
+    x = rng.normal(size=47).astype(np.float32)
+    series = _ragged(rng, (19, 64, 33, 5, 64, 50, 12))
+    return x, series, pack_series(series)
+
+
+def test_pack_series_layout(ragged_set):
+    _, series, bank = ragged_set
+    assert bank.series.shape[1] % 8 == 0
+    for k, s in enumerate(series):
+        np.testing.assert_array_equal(bank.row(k), s)
+        # padding repeats the edge value
+        assert (bank.series[k, len(s):] == s[-1]).all()
+
+
+def test_distance_bank_matches_scalar_loop(ragged_set):
+    x, series, bank = ragged_set
+    got = np.asarray(dtw.dtw_distance_bank(x, bank.series, bank.lengths))
+    want = np.array([float(dtw.dtw_distance(x, s)) for s in series])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_distance_bank_banded_matches_scalar_loop(ragged_set):
+    x, series, bank = ragged_set
+    band = 6
+    got = np.asarray(
+        dtw.dtw_distance_bank(x, bank.series, bank.lengths, band=band))
+    want = np.array([float(dtw.dtw_matrix_banded(x, s, band=band)[-1, -1])
+                     for s in series])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matrix_bank_slices_match_scalar(ragged_set):
+    x, series, bank = ragged_set
+    D = np.asarray(dtw.dtw_matrix_bank(x, bank.series, bank.lengths))
+    Db = np.asarray(
+        dtw.dtw_matrix_bank(x, bank.series, bank.lengths, band=7))
+    for k, s in enumerate(series):
+        np.testing.assert_allclose(D[k, :, :len(s)],
+                                   np.asarray(dtw.dtw_matrix(x, s)),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(
+            Db[k, :, :len(s)],
+            np.asarray(dtw.dtw_matrix_banded(x, s, band=7)),
+            rtol=1e-4, atol=1e-4)
+
+
+def test_matrix_pairs_ragged_both_sides():
+    rng = np.random.default_rng(7)
+    qs = _ragged(rng, (31, 9, 24))
+    rs = _ragged(rng, (17, 40, 26))
+    qb, rb = pack_series(qs), pack_series(rs)
+    D = np.asarray(dtw.dtw_matrix_pairs(qb.series, rb.series,
+                                        qb.lengths, rb.lengths, band=5))
+    for p in range(3):
+        want = np.asarray(dtw.dtw_matrix_banded(qs[p], rs[p], band=5))
+        np.testing.assert_allclose(D[p, :len(qs[p]), :len(rs[p])], want,
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_similarity_bank_matches_scalar_loop(ragged_set):
+    x, series, bank = ragged_set
+    for band in (None, 8):
+        got = similarity_bank(x, bank, band=band)
+        want = np.array([similarity(x, s, band=band) for s in series])
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_preprocess_bank_rows_equal_scalar_preprocess(ragged_set):
+    from repro.core import filters
+    _, series, bank = ragged_set
+    pb = np.asarray(filters.preprocess_bank(bank.series, bank.lengths))
+    for k, s in enumerate(series):
+        want = np.asarray(filters.preprocess(s))
+        np.testing.assert_allclose(pb[k, :len(s)], want, rtol=1e-6, atol=1e-6)
+        assert (pb[k, len(s):] == want[-1]).all()   # edge padding preserved
+
+
+def test_similarity_bank_preprocessed_matches_scalar_loop(ragged_set):
+    x, series, bank = ragged_set
+    got = similarity_bank(x, bank, preprocess=True, band=8)
+    want = np.array([similarity(x, s, preprocess=True, band=8)
+                     for s in series])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_match_series_is_batched_equivalent(ragged_set):
+    x, series, _ = ragged_set
+    refs = {f"r{k}": s for k, s in enumerate(series)}
+    got = match_series(x, refs, preprocess=False, band=4)
+    for name, s in refs.items():
+        assert got[name] == pytest.approx(similarity(x, s, band=4), abs=1e-4)
+
+
+def test_similarity_surfaces_negative_correlation():
+    t = np.linspace(0, 1, 60, dtype=np.float32)
+    assert similarity(t, (1.0 - t)) < 0.0  # anti-correlated, not clipped
+
+
+def test_kernel_distances_respect_lengths(ragged_set):
+    x, series, bank = ragged_set
+    got = np.asarray(dtw_distances(x, bank.series, lengths=bank.lengths))
+    want = np.array([float(dtw.dtw_distance(x, s)) for s in series])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_similarity_bank_rejects_lengths_for_ragged_input(ragged_set):
+    x, series, _ = ragged_set
+    with pytest.raises(ValueError):
+        similarity_bank(x, series, np.array([3] * len(series)))
+
+
+def test_similarity_bank_rejects_bare_1d_reference(ragged_set):
+    x, series, _ = ragged_set
+    with pytest.raises(ValueError, match=r"\[K, M\]"):
+        similarity_bank(x, series[0])            # must be [series[0]]
+    got = similarity_bank(x, [series[0]])        # the loud message's fix
+    assert got.shape == (1,)
+
+
+def test_kernel_pairs_distances(ragged_set):
+    x, series, bank = ragged_set
+    k = len(series)
+    xs = np.tile(x, (k, 1))
+    got = np.asarray(dtw_distances_pairs(xs, bank.series,
+                                         ylens=bank.lengths))
+    want = np.array([float(dtw.dtw_distance(x, s)) for s in series])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_db_bank_caching_and_invalidation():
+    rng = np.random.default_rng(3)
+    db = ReferenceDB()
+    db.add("a", {"j": 0}, rng.normal(size=30))
+    db.add("b", {"j": 0}, rng.normal(size=41))
+    b1 = db.bank()
+    assert db.bank() is b1 and b1.labels == ("a", "b")
+    sub = db.bank(workloads=["b"])
+    assert sub.labels == ("b",) and len(sub) == 1
+    db.add("c", {"j": 0}, rng.normal(size=12))
+    b2 = db.bank()
+    assert b2 is not b1 and len(b2) == 3
+    # LRU bound: distinct selections never grow the cache past the cap
+    for i in range(3 * ReferenceDB.BANK_CACHE_MAX):
+        db.add(f"w{i}", {}, rng.normal(size=8))
+        db.bank(exclude=[f"w{i}"])
+    assert len(db._bank_cache) <= ReferenceDB.BANK_CACHE_MAX
+
+
+def test_db_load_with_adversarial_meta_keys(tmp_path):
+    db = ReferenceDB()
+    db.add("w", {"M": 1}, np.ones(16, np.float32),
+           meta={"workload": "shadow", "params": {"x": 1}, "series": [0]})
+    db.save(str(tmp_path / "db"))
+    db2 = ReferenceDB.load(str(tmp_path / "db"))
+    e = db2.entries[0]
+    assert e.workload == "w" and e.params == {"M": 1}
+    assert e.meta["workload"] == "shadow"

@@ -1,7 +1,8 @@
 """DTW (paper Eq. 1-2): jnp min-plus scan vs brute force + properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import dtw
 from repro.kernels.dtw.ref import dtw_matrix_ref
