@@ -1,21 +1,25 @@
 """Benchmark harness: one module per paper table/figure + framework
-deployment benches.  Prints ``name,us_per_call,derived`` CSV.
+deployment benches.  Prints ``name,us_per_call,derived`` CSV; ``--json``
+additionally writes the rows as a JSON document (what CI uploads as the
+perf-trajectory artifact).
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json PATH]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
-from . import (bench_paper_table1, bench_matching, bench_dtw, bench_wavelet,
-               bench_autotune, bench_roofline)
+from . import (bench_paper_table1, bench_matching, bench_streaming,
+               bench_dtw, bench_wavelet, bench_autotune, bench_roofline)
 
 BENCHES = {
     "paper_table1": bench_paper_table1.run,   # paper Table 1
     "matching": bench_matching.run,           # paper Fig. 4-b / §5
+    "streaming": bench_streaming.run,         # online matching service
     "dtw": bench_dtw.run,                     # paper §3.1.2 scaling
     "wavelet": bench_wavelet.run,             # paper §5 future plan
     "autotune": bench_autotune.run,           # paper §4 end goal, on JAX
@@ -26,6 +30,8 @@ BENCHES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None,
+                    help="also write rows (+ failures) to this JSON file")
     args = ap.parse_args()
 
     rows = []
@@ -42,6 +48,12 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": [{"name": n, "us_per_call": us, "derived": d}
+                                for n, us, d in rows],
+                       "failed": [{"bench": n, "error": e}
+                                  for n, e in failed]}, f, indent=1)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

@@ -7,36 +7,40 @@ configuration parameters (AutoTuner).
 """
 
 from .filters import (cheby1_design, lfilter, filtfilt, denoise, normalize01,
-                      preprocess, preprocess_bank)
+                      preprocess, preprocess_bank, StreamingFilter)
 from .dtw import (cost_matrix, dtw_matrix, dtw_distance, dtw_matrix_banded,
                   dtw_matrix_bank, dtw_matrix_pairs, dtw_distance_bank,
+                  DtwBankState, dtw_bank_init, dtw_bank_extend,
                   backtrack, warp_to, dtw_warp)
 from .similarity import (correlation, similarity, similarity_bank,
                          MatchResult, match_series, match_application,
-                         MATCH_THRESHOLD)
+                         MATCH_THRESHOLD, RunningMoments,
+                         prefix_similarity_bank)
 from .wavelet import (haar_dwt, haar_idwt, compress, reconstruct,
                       wavelet_distance, wavelet_similarity, match_series_wavelet,
                       haar_dwt_bank, compress_bank, wavelet_similarity_bank)
 from .database import Entry, SeriesBank, pack_series, ReferenceDB
 from .signatures import (ChipSpec, TPU_V5E, OpCost, jaxpr_costs,
                          utilization_series, signature_of)
-from .tuner import AutoTuner, TuneDecision
+from .tuner import AutoTuner, TuneDecision, OnlineMatcher
 from . import hloparse
 
 __all__ = [
     "cheby1_design", "lfilter", "filtfilt", "denoise", "normalize01",
-    "preprocess", "preprocess_bank",
+    "preprocess", "preprocess_bank", "StreamingFilter",
     "cost_matrix", "dtw_matrix", "dtw_distance", "dtw_matrix_banded",
     "dtw_matrix_bank", "dtw_matrix_pairs", "dtw_distance_bank",
+    "DtwBankState", "dtw_bank_init", "dtw_bank_extend",
     "backtrack", "warp_to", "dtw_warp",
     "correlation", "similarity", "similarity_bank", "MatchResult",
     "match_series", "match_application", "MATCH_THRESHOLD",
+    "RunningMoments", "prefix_similarity_bank",
     "haar_dwt", "haar_idwt", "compress", "reconstruct",
     "wavelet_distance", "wavelet_similarity", "match_series_wavelet",
     "haar_dwt_bank", "compress_bank", "wavelet_similarity_bank",
     "Entry", "SeriesBank", "pack_series", "ReferenceDB",
     "ChipSpec", "TPU_V5E", "OpCost", "jaxpr_costs", "utilization_series",
     "signature_of",
-    "AutoTuner", "TuneDecision",
+    "AutoTuner", "TuneDecision", "OnlineMatcher",
     "hloparse",
 ]

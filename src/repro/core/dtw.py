@@ -35,6 +35,10 @@ every DP in a single jit dispatch:
   distance at the dynamic column ``lengths[k] - 1``.
 * :func:`dtw_matrix_bank` / :func:`dtw_matrix_pairs` — full matrices
   ``[K, N, M]`` for when backtracking (Eq. 3 warping) is needed.
+* :class:`DtwBankState` / :func:`dtw_bank_init` / :func:`dtw_bank_extend` —
+  the **streaming** engine: the DP state is carried across arriving query
+  chunks (row-wise [K, M] carry), so an in-flight job can be matched while
+  it executes; any chunking reproduces the one-shot solve exactly.
 
 Padding correctness: ``D[:, j]`` only ever depends on columns ``<= j`` and
 rows ``<= i``, so values in the padded tail cannot reach ``D[n-1, len_k-1]``
@@ -46,6 +50,7 @@ the scalar banded solve of the unpadded series.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional, Tuple
 
@@ -61,6 +66,9 @@ __all__ = [
     "dtw_matrix_bank",
     "dtw_matrix_pairs",
     "dtw_distance_bank",
+    "DtwBankState",
+    "dtw_bank_init",
+    "dtw_bank_extend",
     "backtrack",
     "warp_to",
     "dtw_warp",
@@ -308,6 +316,181 @@ def dtw_distance_bank(x: jax.Array, bank: jax.Array,
     # distance_k = slot n-1 of diagonal n - 1 + (len_k - 1)
     return jnp.take_along_axis(outs.T, (ls + (n - 2))[:, None],
                                axis=1)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Streaming (prefix) bank DTW — the online matching engine
+# ---------------------------------------------------------------------------
+#
+# The offline ``dtw_distance_bank`` wavefront needs the full query up front
+# (its carry is indexed by query row).  The streaming engine instead carries
+# the *row-wise* DP state: after consuming i query samples the state holds
+# D[i-1, :] for every reference — a single [K, M] slab — and each new sample
+# applies one ``_minplus_row`` update.  Any chunking of the query therefore
+# reproduces the one-shot solve exactly: the DP recurrence is identical,
+# only the dispatch boundaries move (tests/test_streaming.py pins this
+# under random chunkings, ragged and banded).
+#
+# Row 0 rides on the same update via a virtual corner: D[-1, -1] = 0 enters
+# as the shifted-in value of the first update only, turning it into the
+# cumsum initialisation of ``dtw_matrix``.
+#
+# Everything is batched one level further for the serving layer: the jitted
+# kernel takes J independent in-flight jobs stacked as [J, K, M] rows so a
+# whole tick of a multi-job service is ONE device dispatch (invalid tail
+# samples of ragged per-job chunks are masked out and leave the state
+# untouched).
+
+#: Chunks are padded up to the next power of two (>= _CHUNK_MIN) before
+#: hitting the jitted kernel so arbitrary tick sizes reuse a handful of
+#: compiled shapes.
+_CHUNK_MIN = 8
+
+
+def _chunk_bucket(c: int) -> int:
+    return max(_CHUNK_MIN, 1 << (max(c, 1) - 1).bit_length())
+
+
+@functools.partial(jax.jit, static_argnames=("band", "collect_rows"))
+def _bank_extend_many(rows: jax.Array, ns: jax.Array, bank: jax.Array,
+                      lengths: jax.Array, chunks: jax.Array,
+                      nvalid: jax.Array, qlens: jax.Array,
+                      band: Optional[int], collect_rows: bool):
+    """Advance J streaming DPs by one padded chunk each — one dispatch.
+
+    rows    [J, K, M]  last DP row per job (init +inf)
+    ns      [J] int32  query samples consumed per job
+    chunks  [J, C]     new samples (tail beyond ``nvalid[j]`` is ignored)
+    qlens   [J] int32  expected total query length (banded variant only;
+                       the Sakoe-Chiba center of row i needs it)
+
+    Returns (rows, ns, collected) where ``collected`` is the [C, J, K, M]
+    stack of post-step rows (the D-matrix rows the scoring layer backtracks
+    over) when ``collect_rows``, else None.
+    """
+    j, c = chunks.shape
+    k, m = bank.shape
+    jj = jnp.arange(m, dtype=jnp.int32)
+
+    def step(carry, inp):
+        rows, ns = carry
+        x_s, s = inp                               # [J], scalar
+        valid = s < nvalid                         # [J]
+        d = jnp.abs(x_s[:, None, None] - bank[None, :, :])     # [J, K, M]
+        if band is not None:
+            centers = _band_center(ns[:, None], qlens[:, None],
+                                   lengths[None, :])           # [J, K]
+            d = jnp.where(
+                jnp.abs(jj[None, None, :] - centers[:, :, None]) <= band,
+                d, _INF)
+        # virtual corner D[-1, -1] = 0 for each job's first sample only
+        corner = jnp.where(ns == 0, jnp.float32(0.0), _INF)    # [J]
+        shifted = jnp.concatenate(
+            [jnp.broadcast_to(corner[:, None, None], (j, k, 1)),
+             rows[:, :, :-1]], axis=2)
+        mn = jnp.minimum(rows, shifted)
+        new = _minplus_affine_scan(d, mn + d)
+        if band is not None:
+            new = jnp.where(d >= _INF, _INF, new)
+        rows = jnp.where(valid[:, None, None], new, rows)
+        ns = ns + valid.astype(jnp.int32)
+        return (rows, ns), (rows if collect_rows else jnp.zeros((0,)))
+
+    (rows, ns), collected = jax.lax.scan(
+        step, (rows, ns), (chunks.T, jnp.arange(c, dtype=jnp.int32)))
+    return rows, ns, (collected if collect_rows else None)
+
+
+@dataclasses.dataclass(frozen=True)
+class DtwBankState:
+    """Streaming DP state of one query against a padded [K, M] bank.
+
+    Immutable: :func:`dtw_bank_extend` returns a new state.  ``row`` holds
+    D[n-1, :] per reference (all +inf before the first sample); ``n`` is
+    the number of query samples consumed so far.
+    """
+    row: jax.Array                    # [K, M] float32
+    n: int                            # samples consumed
+    bank: jax.Array                   # [K, M] float32
+    lengths: jax.Array                # [K] int32
+    band: Optional[int] = None
+    query_len: Optional[int] = None   # required (and fixed) when banded
+
+    def __len__(self) -> int:
+        return int(self.bank.shape[0])
+
+    def distances(self) -> jax.Array:
+        """D(n, len_k) against every *complete* reference -> [K].
+
+        Equals ``dtw_distance_bank(x[:n], bank, lengths)`` for the consumed
+        prefix x[:n] (banded: once n == query_len — mid-stream banded
+        values use the corridor anchored at the full query length, which
+        a shorter one-shot solve would place differently); +inf before any
+        sample arrived.
+        """
+        return jnp.take_along_axis(
+            self.row, (self.lengths - 1)[:, None].astype(jnp.int32),
+            axis=1)[:, 0]
+
+    def prefix_distances(self) -> jax.Array:
+        """Open-end distances min_j D(n, j) over true columns -> [K].
+
+        The best alignment of the consumed prefix against *any* prefix of
+        each reference — monotonically non-decreasing in ``n`` (every
+        longer-prefix path extends a shorter one with non-negative cost),
+        which is what makes early pruning sound.
+        """
+        m = self.row.shape[1]
+        masked = jnp.where(jnp.arange(m, dtype=jnp.int32)[None, :]
+                           < self.lengths[:, None], self.row, _INF)
+        return jnp.min(masked, axis=1)
+
+
+def dtw_bank_init(bank: jax.Array, lengths: Optional[jax.Array] = None,
+                  band: Optional[int] = None,
+                  query_len: Optional[int] = None) -> DtwBankState:
+    """Fresh streaming state for one query against a padded [K, M] bank.
+
+    ``query_len`` (the expected total query length) is required for the
+    banded variant: the Sakoe-Chiba corridor of row i is positioned
+    relative to the *full* query, so an open-ended banded stream is
+    ill-defined without it.
+    """
+    bank = jnp.asarray(bank, jnp.float32)
+    k, m = bank.shape
+    if band is not None and query_len is None:
+        raise ValueError("banded streaming needs query_len (the band "
+                         "geometry depends on the full query length)")
+    return DtwBankState(row=jnp.full((k, m), _INF), n=0, bank=bank,
+                        lengths=_lengths_or_full(lengths, k, m),
+                        band=band, query_len=query_len)
+
+
+def dtw_bank_extend(state: DtwBankState, chunk: jax.Array,
+                    collect_rows: bool = False
+                    ) -> Tuple[DtwBankState, Optional[jax.Array]]:
+    """Consume one chunk of query samples; one jitted dispatch.
+
+    Returns ``(new_state, rows)`` where ``rows`` is the [c, K, M] stack of
+    DP rows produced by this chunk (for warp-based prefix scoring) when
+    ``collect_rows``, else None.  The chunk is padded to a power-of-two
+    bucket internally so arbitrary chunkings reuse a few compiled shapes.
+    """
+    chunk = jnp.asarray(chunk, jnp.float32).reshape(-1)
+    c = int(chunk.shape[0])
+    if c == 0:
+        return state, (jnp.zeros((0,) + state.row.shape) if collect_rows
+                       else None)
+    cp = _chunk_bucket(c)
+    padded = jnp.concatenate([chunk, jnp.zeros((cp - c,), jnp.float32)]) \
+        if cp != c else chunk
+    qlen = state.query_len if state.query_len is not None else 0
+    rows, ns, collected = _bank_extend_many(
+        state.row[None], jnp.asarray([state.n], jnp.int32), state.bank,
+        state.lengths, padded[None], jnp.asarray([c], jnp.int32),
+        jnp.asarray([qlen], jnp.int32), state.band, collect_rows)
+    new = dataclasses.replace(state, row=rows[0], n=state.n + c)
+    return new, (collected[:c, 0] if collect_rows else None)
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,7 @@ __all__ = [
     "normalize01",
     "preprocess",
     "preprocess_bank",
+    "StreamingFilter",
 ]
 
 
@@ -131,6 +132,81 @@ def filtfilt(b: np.ndarray, a: np.ndarray, x: jax.Array) -> jax.Array:
     if pad > 0:
         y = y[..., pad:pad + T]
     return y
+
+
+# ---------------------------------------------------------------------------
+# Streaming (stateful causal) filtering
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _lfilter_scan_carry(b: jax.Array, a: jax.Array, x: jax.Array,
+                        zi: jax.Array, nvalid: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """One DF2T pass over a (padded) chunk with explicit state in/out.
+
+    x: [T] chunk, zi: [n-1] filter state, nvalid: samples of x that are
+    real — the state freezes after them, so padded tails never leak into
+    the carried state (y's tail is garbage; callers slice).  Returns
+    (y [T], zf [n-1]).  DF2T is causal, so filtering chunk-by-chunk with
+    the carried state is *exactly* the one-shot :func:`lfilter` of the
+    concatenated signal — the invariant the streaming service leans on.
+    """
+    def step(state, inp):
+        xt, s = inp
+        yt = b[0] * xt + state[0]
+        nxt = b[1:] * xt - a[1:] * yt + jnp.pad(state[1:], (0, 1))
+        return jnp.where(s < nvalid, nxt, state), yt
+
+    zf, y = jax.lax.scan(
+        step, zi, (x, jnp.arange(x.shape[0], dtype=jnp.int32)))
+    return y, zf
+
+
+class StreamingFilter:
+    """Causal Chebyshev de-noise for in-flight series, chunk by chunk.
+
+    The paper pipeline's :func:`filtfilt` is zero-phase and therefore
+    anti-causal — it needs the whole series.  A job being matched *while it
+    executes* only ever has a prefix, so the online path uses the causal
+    forward filter with its direct-form-II-transposed state carried across
+    chunks: any chunking of the input produces the same output as one
+    one-shot :func:`lfilter` call (DTW downstream absorbs the filter's
+    group delay).  Utilization series are already on the [0, 1] scale, so
+    no running normalization is applied.
+
+    Chunks are padded to power-of-two buckets before the jitted scan (the
+    state freezes after the valid samples), so arbitrary tick sizes reuse
+    a handful of compiled shapes instead of tracing per length.
+    """
+
+    def __init__(self, order: int = None, ripple_db: float = None,
+                 cutoff: float = None) -> None:
+        b, a = _default_ba(order if order is not None else DEFAULT_ORDER,
+                           ripple_db if ripple_db is not None
+                           else DEFAULT_RIPPLE_DB,
+                           cutoff if cutoff is not None else DEFAULT_CUTOFF)
+        a = np.asarray(a, np.float64)
+        self._b = jnp.asarray(np.asarray(b, np.float64) / a[0],
+                              jnp.float32)
+        self._a = jnp.asarray(a / a[0], jnp.float32)
+        self.reset()
+
+    def reset(self) -> None:
+        self._z = jnp.zeros((self._b.shape[0] - 1,), jnp.float32)
+
+    def __call__(self, chunk: np.ndarray) -> np.ndarray:
+        from .dtw import _chunk_bucket      # shared jit-shape bucketing
+
+        x = np.asarray(chunk, np.float32).reshape(-1)
+        c = x.shape[0]
+        if c == 0:
+            return np.zeros((0,), np.float32)
+        cp = _chunk_bucket(c)
+        xp = np.zeros((cp,), np.float32)
+        xp[:c] = x
+        y, self._z = _lfilter_scan_carry(self._b, self._a, jnp.asarray(xp),
+                                         self._z, jnp.int32(c))
+        return np.asarray(y[:c])
 
 
 # ---------------------------------------------------------------------------

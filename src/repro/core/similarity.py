@@ -32,6 +32,9 @@ DP in **one** jit dispatch:
 * :func:`match_application` — batches every (parameter set, application)
   pair of Fig. 4-b into a single ``dtw_matrix_pairs`` dispatch, ragged on
   both the query and reference sides.
+* :func:`prefix_similarity_bank` — scores a *partial* (in-flight) query
+  from streamed DP rows: open-ended alignment + running-moment correlation
+  while the job runs, exact offline score once the series completes.
 
 Very large banks are transparently chunked so the ``[K, N, M]`` matrix
 stack stays under ``MAX_MATRIX_ELEMS`` elements per dispatch (distance-only
@@ -53,7 +56,8 @@ from . import filters as _filters
 from .database import SeriesBank, pack_series
 
 __all__ = ["correlation", "similarity", "similarity_bank", "MatchResult",
-           "match_series", "match_application", "MATCH_THRESHOLD"]
+           "match_series", "match_application", "MATCH_THRESHOLD",
+           "RunningMoments", "prefix_similarity_bank"]
 
 #: Paper §3.1.3: acceptable-match threshold.
 MATCH_THRESHOLD = 0.9
@@ -168,6 +172,86 @@ def similarity_bank(x: np.ndarray,
         for r in range(lo, hi):
             l = int(bank.lengths[r])
             out[r] = _warp_corr(x, bank.series[r, :l], D[r - lo, :, :l])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Prefix (streaming) scoring
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunningMoments:
+    """Single-pass correlation accumulator over aligned sample pairs.
+
+    The streaming scorer re-derives the warp path every tick (it can change
+    as the prefix grows) but correlates along it in one pass with these
+    running moments instead of the offline two-pass :func:`correlation`;
+    float64 accumulators keep the two within ~1e-7 on [0, 1] utilization
+    series.  Degenerate (constant) series follow :func:`correlation`'s
+    convention: 1.0 when the pair is (all-close) identical, else 0.0.
+    """
+    n: int = 0
+    sx: float = 0.0
+    sy: float = 0.0
+    sxx: float = 0.0
+    syy: float = 0.0
+    sxy: float = 0.0
+
+    def update(self, x: np.ndarray, y: np.ndarray) -> "RunningMoments":
+        x = np.asarray(x, np.float64).reshape(-1)
+        y = np.asarray(y, np.float64).reshape(-1)
+        self.n += x.shape[0]
+        self.sx += float(x.sum())
+        self.sy += float(y.sum())
+        self.sxx += float((x * x).sum())
+        self.syy += float((y * y).sum())
+        self.sxy += float((x * y).sum())
+        return self
+
+    @property
+    def corr(self) -> float:
+        if self.n == 0:
+            return 0.0
+        vx = self.sxx - self.sx * self.sx / self.n
+        vy = self.syy - self.sy * self.sy / self.n
+        denom = float(np.sqrt(max(vx, 0.0) * max(vy, 0.0)))
+        if denom < 1e-12:
+            mean_close = abs(self.sx - self.sy) / self.n < 1e-6
+            return 1.0 if max(vx, 0.0) < 1e-9 and max(vy, 0.0) < 1e-9 \
+                and mean_close else 0.0
+        cov = self.sxy - self.sx * self.sy / self.n
+        return float(np.clip(cov / denom, -1.0, 1.0))
+
+
+def prefix_similarity_bank(x_prefix: np.ndarray, bank: SeriesBank,
+                           rows: np.ndarray, *,
+                           open_end: bool = True) -> np.ndarray:
+    """SIM of a *partial* query against every reference -> float64 [K].
+
+    ``rows`` is the [n, K, M] stack of streamed DP rows (what
+    ``dtw.dtw_bank_extend(..., collect_rows=True)`` hands back, accumulated
+    across chunks) — the accumulated-cost matrix of the consumed prefix.
+    With ``open_end=True`` each reference is scored against its best
+    matching *prefix* (backtrack from ``argmin`` of the last DP row — the
+    open-ended alignment of online DTW); with ``open_end=False`` the full
+    reference endpoint ``len_k - 1`` is used, which on a completed query
+    reproduces the offline :func:`similarity_bank` score exactly (same
+    matrix, same backtrack, same correlation — only the accumulation is
+    single-pass).
+    """
+    x = np.asarray(x_prefix, np.float64).reshape(-1)
+    rows = np.asarray(rows)
+    n, k, _ = rows.shape
+    if n != x.shape[0]:
+        raise ValueError(f"{x.shape[0]} query samples but {n} DP rows")
+    out = np.empty((k,), np.float64)
+    for r in range(k):
+        l = int(bank.lengths[r])
+        D = rows[:, r, :l]
+        j_end = int(np.argmin(D[-1])) if open_end else l - 1
+        path = _dtw.backtrack(D[:, : j_end + 1])
+        yp = _dtw.warp_to(bank.series[r, : j_end + 1], path, n)
+        out[r] = RunningMoments().update(x, yp).corr
     return out
 
 

@@ -33,12 +33,14 @@ from typing import Any, Callable, Dict, Mapping, Optional, Sequence
 
 import numpy as np
 
+from . import dtw as _dtw
 from . import filters as _filters
 from . import wavelet as _wavelet
-from .similarity import MATCH_THRESHOLD, similarity_bank as _sim_bank
-from .database import ReferenceDB
+from .similarity import (MATCH_THRESHOLD, prefix_similarity_bank,
+                         similarity_bank as _sim_bank)
+from .database import ReferenceDB, SeriesBank
 
-__all__ = ["TuneDecision", "AutoTuner"]
+__all__ = ["TuneDecision", "AutoTuner", "OnlineMatcher"]
 
 
 @dataclasses.dataclass
@@ -50,6 +52,11 @@ class TuneDecision:
     config: Optional[Dict[str, Any]]  # transferred exec config (None -> search)
     scores: Dict[str, float]          # all candidate raw correlations
     used_wavelet_prefilter: bool = False
+    # streaming decisions (serve.tuning.TuningService): how much of the job
+    # had been observed, and whether this is the early (prefix) or the
+    # final (complete-series, offline-exact) verdict.
+    fraction_seen: Optional[float] = None
+    final: bool = True
 
 
 class AutoTuner:
@@ -146,3 +153,122 @@ class AutoTuner:
             self.db.set_best_config(workload, cfg, score=0.0)
             decision = dataclasses.replace(decision, config=cfg)
         return decision
+
+
+class _RowBuffer:
+    """Append-only growable [n, ...] numpy buffer (geometric doubling).
+
+    The scoring layer reads the whole history every tick, so a
+    list-of-chunks + concatenate would cost O(n^2) copy traffic over a
+    job's lifetime; this keeps appends amortized O(1) and reads zero-copy
+    views.
+    """
+
+    def __init__(self) -> None:
+        self._buf: Optional[np.ndarray] = None
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def append(self, block: np.ndarray) -> None:
+        block = np.asarray(block)
+        if block.shape[0] == 0:
+            return
+        if self._buf is None:
+            self._buf = np.empty((max(block.shape[0], 64),)
+                                 + block.shape[1:], block.dtype)
+        while self._n + block.shape[0] > self._buf.shape[0]:
+            grown = np.empty((2 * self._buf.shape[0],)
+                             + self._buf.shape[1:], self._buf.dtype)
+            grown[: self._n] = self._buf[: self._n]
+            self._buf = grown
+        self._buf[self._n: self._n + block.shape[0]] = block
+        self._n += block.shape[0]
+
+    def view(self) -> np.ndarray:
+        """Zero-copy [n, ...] view of everything appended so far."""
+        if self._buf is None:
+            return np.zeros((0,), np.float32)
+        return self._buf[: self._n]
+
+
+class OnlineMatcher:
+    """Streaming (prefix) matcher for ONE in-flight job.
+
+    Arriving CPU-sample chunks feed the incremental bank DP
+    (``dtw.dtw_bank_extend`` — the DP state is carried across chunks, so
+    any chunking reproduces the one-shot batch solve exactly), and the
+    consumed prefix is scored against every reference with the open-ended
+    warp correlation (``similarity.prefix_similarity_bank``).  Once the
+    series completes, :meth:`final_scores` equals the offline
+    ``similarity_bank`` of the full query.
+
+    One jitted dispatch per :meth:`extend` call.  A *service* multiplexing
+    many concurrent jobs should use ``repro.serve.tuning.TuningService``
+    instead, which folds every in-flight job's tick into a single
+    dispatch.
+
+    ``denoise=True`` routes chunks through the causal streaming Chebyshev
+    filter (``filters.StreamingFilter``) first — the online stand-in for
+    the anti-causal offline ``filtfilt`` pipeline; scores are then exact
+    w.r.t. the *causally filtered* query.
+    """
+
+    def __init__(self, bank: SeriesBank, *, band: Optional[int] = None,
+                 query_len: Optional[int] = None, collect_rows: bool = True,
+                 denoise: bool = False) -> None:
+        self.bank = bank
+        self._state = _dtw.dtw_bank_init(bank.series, bank.lengths,
+                                         band=band, query_len=query_len)
+        self._collect = collect_rows
+        self._rows = _RowBuffer()
+        self._x = _RowBuffer()
+        self._filter = _filters.StreamingFilter() if denoise else None
+
+    @property
+    def n(self) -> int:
+        """Query samples consumed so far."""
+        return self._state.n
+
+    def extend(self, chunk: np.ndarray) -> "OnlineMatcher":
+        """Consume one chunk of samples (one jitted dispatch)."""
+        chunk = np.asarray(chunk, np.float32).reshape(-1)
+        if chunk.shape[0] == 0:
+            return self
+        if self._filter is not None:
+            chunk = self._filter(chunk)
+        self._x.append(chunk)
+        self._state, rows = _dtw.dtw_bank_extend(self._state, chunk,
+                                                 collect_rows=self._collect)
+        if self._collect:
+            self._rows.append(np.asarray(rows))
+        return self
+
+    def query(self) -> np.ndarray:
+        """The consumed (possibly causally filtered) query prefix."""
+        return self._x.view()
+
+    def distances(self) -> np.ndarray:
+        """Prefix-vs-complete-reference DTW distances -> [K]."""
+        return np.asarray(self._state.distances())
+
+    def prefix_distances(self) -> np.ndarray:
+        """Open-end distances (best reference *prefix*) -> [K]; monotone
+        non-decreasing in the number of consumed samples."""
+        return np.asarray(self._state.prefix_distances())
+
+    def prefix_scores(self, open_end: bool = True) -> np.ndarray:
+        """Warp correlation of the consumed prefix per reference -> [K]."""
+        if not self._collect:
+            raise ValueError("prefix scoring needs collect_rows=True")
+        if self.n < 2:
+            return np.zeros((len(self.bank),), np.float64)
+        return prefix_similarity_bank(self.query(), self.bank,
+                                      self._rows.view(),
+                                      open_end=open_end)
+
+    def final_scores(self) -> np.ndarray:
+        """Complete-series scores; equals the offline ``similarity_bank``
+        of the full (filtered) query against the bank."""
+        return self.prefix_scores(open_end=False)

@@ -1,3 +1,5 @@
-from .simulator import APPS, JobParams, simulate_cpu_series, paper_param_sets
+from .simulator import (APPS, JobParams, simulate_cpu_series,
+                        iter_cpu_series, paper_param_sets)
 
-__all__ = ["APPS", "JobParams", "simulate_cpu_series", "paper_param_sets"]
+__all__ = ["APPS", "JobParams", "simulate_cpu_series", "iter_cpu_series",
+           "paper_param_sets"]

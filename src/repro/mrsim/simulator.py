@@ -24,7 +24,7 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 __all__ = ["AppProfile", "APPS", "JobParams", "simulate_cpu_series",
-           "paper_param_sets"]
+           "iter_cpu_series", "paper_param_sets"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,3 +138,20 @@ def simulate_cpu_series(app: str, params: JobParams, *, run: int = 0,
     spikes = rng.random(u.shape) < 0.01
     u = np.where(spikes, u + rng.uniform(0.1, 0.3, size=u.shape), u)
     return np.clip(u, 0.0, 1.0).astype(np.float32)
+
+
+def iter_cpu_series(app: str, params: JobParams, *, run: int = 0,
+                    chunk: int = 16, dt: float = 1.0, noise: float = 0.03):
+    """Stream one job's CPU series in arrival order, ``chunk`` samples at a
+    time (the last chunk may be shorter).
+
+    This is the monitoring-agent view of :func:`simulate_cpu_series` — what
+    a SysStat poller hands the online matching service tick by tick while
+    the job executes.  Identical values and determinism: concatenating the
+    chunks reproduces ``simulate_cpu_series(...)`` exactly.
+    """
+    if chunk < 1:
+        raise ValueError("chunk must be >= 1")
+    s = simulate_cpu_series(app, params, run=run, dt=dt, noise=noise)
+    for lo in range(0, s.shape[0], chunk):
+        yield s[lo: lo + chunk]

@@ -1,3 +1,5 @@
 from .engine import make_prefill_step, make_decode_step, ServeEngine
+from .tuning import InFlightJob, TuningService
 
-__all__ = ["make_prefill_step", "make_decode_step", "ServeEngine"]
+__all__ = ["make_prefill_step", "make_decode_step", "ServeEngine",
+           "InFlightJob", "TuningService"]

@@ -1,9 +1,13 @@
 """ReferenceDB + AutoTuner (profiling/matching phases + config transfer)."""
+import os
+
 import numpy as np
 import pytest
 
 from repro.core import ReferenceDB, AutoTuner
 from repro import mrsim
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden")
 
 
 def _series(app, j=0, run=0):
@@ -66,3 +70,109 @@ def test_tuner_wavelet_prefilter():
     decision = tuner.match("exim", _series("exim", run=1))
     assert decision.used_wavelet_prefilter
     assert decision.matched == "wordcount"
+
+
+# ---------------------------------------------------------------------------
+# Architecture-signature discrimination (the kimi-k2 -> deepseek-v2 match)
+# ---------------------------------------------------------------------------
+
+def _arch_tuner(sigs, band):
+    db = ReferenceDB()
+    tuner = AutoTuner(db, band=band, threshold=0.85)
+    for name, sig in sigs.items():
+        if name != "kimi-k2-1t-a32b":
+            tuner.profile(name, {}, sig)
+            db.set_best_config(name, {"arch": name}, 1.0)
+    return tuner
+
+
+def test_kimi_matches_deepseek_not_phi3_golden_signatures():
+    """Regression for the signature-discrimination defect: with the band at
+    one layer period (32 = 2048 samples / 64 layers) the MLA+MoE pair
+    (kimi-k2 -> deepseek-v2) must win; at two layer periods DTW could warp
+    phi3's dense waves over kimi's pattern (phi3 0.8994 vs deepseek
+    0.8963).  Runs on golden jaxpr-trace signatures so the matching stack
+    is pinned independently of model-code drift; bench_autotune asserts
+    the same ordering on live traces.
+    """
+    sigs = dict(np.load(os.path.join(GOLDEN, "arch_signatures.npz")))
+    tuner = _arch_tuner(sigs, band=32)
+    decision = tuner.match("kimi-k2-1t-a32b", sigs["kimi-k2-1t-a32b"])
+    assert decision.matched == "deepseek-v2-236b", decision.scores
+    assert decision.corr >= 0.85
+    assert decision.scores["phi3-mini-3p8b"] < decision.corr - 0.1, \
+        decision.scores
+    assert decision.config == {"arch": "deepseek-v2-236b"}
+
+
+@pytest.mark.slow
+def test_kimi_matches_deepseek_live_traces():
+    """Same ordering on freshly traced signatures (catches drift in the
+    signature features themselves, not just the matcher)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs as cfglib
+    from repro.core.signatures import signature_of
+    from repro.models import model as model_lib
+
+    def sig(arch):
+        cfg = cfglib.get(arch)
+        params = jax.eval_shape(lambda k: model_lib.init(k, cfg),
+                                jax.random.PRNGKey(0))
+        shape = (4, 512) if cfg.num_codebooks == 1 else \
+            (4, 512, cfg.num_codebooks)
+        batch = {"tokens": jax.ShapeDtypeStruct(shape, jnp.int32),
+                 "labels": jax.ShapeDtypeStruct(shape, jnp.int32)}
+        return signature_of(lambda p, b: model_lib.loss_fn(p, b, cfg)[0],
+                            params, batch, samples=2048)
+
+    sigs = {a: sig(a) for a in ("deepseek-v2-236b", "phi3-mini-3p8b",
+                                "kimi-k2-1t-a32b")}
+    tuner = _arch_tuner(sigs, band=32)
+    decision = tuner.match("kimi-k2-1t-a32b", sigs["kimi-k2-1t-a32b"])
+    assert decision.matched == "deepseek-v2-236b", decision.scores
+    assert decision.scores["phi3-mini-3p8b"] < decision.corr
+
+
+# ---------------------------------------------------------------------------
+# ReferenceDB.bank cache behavior
+# ---------------------------------------------------------------------------
+
+def test_bank_cache_add_invalidates_stale_pack():
+    """add() after a cached bank() must invalidate EVERY cached selection —
+    a stale [K, M] pack would silently drop the new entry from matching."""
+    rng = np.random.default_rng(11)
+    db = ReferenceDB()
+    db.add("a", {}, rng.normal(size=24))
+    db.add("b", {}, rng.normal(size=30))
+    full = db.bank()
+    only_a = db.bank(workloads=["a"])
+    assert db.bank() is full and db.bank(workloads=["a"]) is only_a
+
+    db.add("a", {}, rng.normal(size=18))        # second entry for "a"
+    fresh_full = db.bank()
+    fresh_a = db.bank(workloads=["a"])
+    assert fresh_full is not full and len(fresh_full) == 3
+    assert fresh_a is not only_a and len(fresh_a) == 2
+    # the fresh pack really contains the new series, not a stale copy
+    np.testing.assert_array_equal(fresh_a.row(1), db.entries[2].series)
+
+
+def test_bank_cache_lru_evicts_oldest_selection():
+    rng = np.random.default_rng(12)
+    db = ReferenceDB()
+    names = [f"w{i}" for i in range(ReferenceDB.BANK_CACHE_MAX + 1)]
+    for name in names:
+        db.add(name, {}, rng.normal(size=16))
+
+    banks = {name: db.bank(workloads=[name]) for name in names[:-1]}
+    # touch the oldest so it becomes most-recent...
+    assert db.bank(workloads=[names[0]]) is banks[names[0]]
+    # ...then push one more distinct selection over the cap:
+    db.bank(workloads=[names[-1]])
+    assert len(db._bank_cache) == ReferenceDB.BANK_CACHE_MAX
+    # LRU evicted names[1] (the least recently used), NOT the re-touched
+    # names[0]:
+    assert db.bank(workloads=[names[0]]) is banks[names[0]]
+    assert db.bank(workloads=[names[1]]) is not banks[names[1]]
