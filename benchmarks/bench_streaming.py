@@ -9,7 +9,9 @@
    streamed score equals the offline ``similarity_bank`` of the same
    (causally filtered) query to 1e-4 — going online costs no accuracy.
 3. Throughput: chunks/sec through the multiplexed tick at bank size
-   K in {8, 64, 256}, distance-only mode (no row collection).
+   K in {8, 64, 256} — distance-only mode, plus (at K=256) the fused
+   on-device scoring tick and the PR-2 row-formulation jnp baseline.
+   Gate: the device-resident wavefront tick is >= 3x the PR-2 path.
 """
 
 from __future__ import annotations
@@ -167,22 +169,57 @@ def _equivalence_rows():
     return [("stream_offline_equiv", dt / n * 1e6, f"max_err={worst:.2e}")]
 
 
+def _throughput_bank(rng, k):
+    buckets = (180, 220, 256, 300, 330, 360)
+    series = []
+    for i in range(k):
+        l = buckets[int(rng.integers(len(buckets)))]
+        t = np.linspace(0, 1, l, dtype=np.float32)
+        s = (0.5 + 0.3 * np.sin(2 * np.pi * (2 + i % 5) * t)
+             + 0.1 * rng.normal(size=l).astype(np.float32))
+        series.append(np.clip(s, 0, 1).astype(np.float32))
+    return pack_series(series)
+
+
+def _legacy_tick_us(bank, rng):
+    """us/tick of the PR-2 jnp tick (row-formulation ``_bank_extend_many``
+    on [S, K, M] state) at the throughput-bench shapes — the baseline the
+    wavefront tick's speedup is measured against."""
+    import jax.numpy as jnp
+    from repro.core import dtw as _dtw
+
+    k, m = bank.series.shape
+    bank_dev = jnp.asarray(bank.series)
+    lengths = jnp.asarray(bank.lengths)
+    qlens = jnp.full((TPUT_JOBS,), TPUT_TICKS * TPUT_CHUNK, jnp.int32)
+    chunks = jnp.asarray(rng.random((TPUT_JOBS, TPUT_CHUNK),
+                                    dtype=np.float32))
+    nvalid = jnp.full((TPUT_JOBS,), TPUT_CHUNK, jnp.int32)
+
+    def run(nticks):
+        rows = jnp.full((TPUT_JOBS, k, m), _dtw._INF)
+        ns = jnp.zeros((TPUT_JOBS,), jnp.int32)
+        for _ in range(nticks):
+            rows, ns, _ = _dtw._bank_extend_many(
+                rows, ns, bank_dev, lengths, chunks, nvalid, qlens,
+                None, False)
+        rows.block_until_ready()
+
+    run(2)                                 # warm the jit cache
+    nticks = 4
+    t0 = time.time()
+    run(nticks)
+    return (time.time() - t0) / nticks * 1e6
+
+
 def _throughput_rows():
     rows = []
     rng = np.random.default_rng(0)
-    buckets = (180, 220, 256, 300, 330, 360)
     for k in BANK_SIZES:
-        series = []
-        for i in range(k):
-            l = buckets[int(rng.integers(len(buckets)))]
-            t = np.linspace(0, 1, l, dtype=np.float32)
-            s = (0.5 + 0.3 * np.sin(2 * np.pi * (2 + i % 5) * t)
-                 + 0.1 * rng.normal(size=l).astype(np.float32))
-            series.append(np.clip(s, 0, 1).astype(np.float32))
-        bank = pack_series(series)
+        bank = _throughput_bank(rng, k)
 
-        def run_stream():
-            svc = TuningService(bank, collect_rows=False)
+        def run_stream(score):
+            svc = TuningService(bank, score_in_flight=score)
             for j in range(TPUT_JOBS):
                 svc.submit(f"job{j}", expected_len=TPUT_TICKS * TPUT_CHUNK)
             qs = rng.random((TPUT_JOBS, TPUT_TICKS * TPUT_CHUNK),
@@ -195,9 +232,9 @@ def _throughput_rows():
             assert svc.dispatch_count == TPUT_TICKS
             return svc
 
-        run_stream()                      # warm the jit cache
+        run_stream(False)                 # warm the jit cache
         t0 = time.time()
-        svc = run_stream()
+        svc = run_stream(False)
         dt = time.time() - t0
         chunks = TPUT_TICKS * TPUT_JOBS
         cps = chunks / dt
@@ -207,6 +244,30 @@ def _throughput_rows():
         rows.append((f"stream_tick_K{k}", dt / TPUT_TICKS * 1e6,
                      f"chunks_per_s={cps:.0f};samples_per_s={sps:.0f}"
                      f";jobs={TPUT_JOBS}"))
+
+        if k == max(BANK_SIZES):
+            # scoring tick (fused on-device prefix scoring, the early-
+            # decision hot path) at the largest bank
+            run_stream(True)
+            t0 = time.time()
+            run_stream(True)
+            dts = time.time() - t0
+            print(f"[streaming] K={k:4d}: {1e3 * dts / TPUT_TICKS:7.2f} "
+                  f"ms/tick (fused scoring)")
+            rows.append((f"stream_tick_scored_K{k}",
+                         dts / TPUT_TICKS * 1e6,
+                         f"chunks_per_s={chunks / dts:.0f};jobs={TPUT_JOBS}"))
+            # PR-2 baseline + speedup gate: the device-resident wavefront
+            # tick must beat the row-formulation jnp tick >= 3x here
+            legacy_us = _legacy_tick_us(bank, rng)
+            speedup = legacy_us / (dt / TPUT_TICKS * 1e6)
+            print(f"[streaming] K={k:4d}: {legacy_us / 1e3:7.2f} ms/tick "
+                  f"(PR-2 jnp path) -> wavefront speedup {speedup:.1f}x")
+            rows.append((f"stream_tick_K{k}_pr2_jnp", legacy_us,
+                         f"wavefront_speedup={speedup:.2f}x"))
+            assert speedup >= 3.0, (
+                f"device-resident tick speedup regressed: {speedup:.2f}x "
+                f"< 3x over the PR-2 jnp path")
     return rows
 
 

@@ -1,7 +1,9 @@
 """Benchmark harness: one module per paper table/figure + framework
 deployment benches.  Prints ``name,us_per_call,derived`` CSV; ``--json``
 additionally writes the rows as a JSON document (what CI uploads as the
-perf-trajectory artifact).
+perf-trajectory artifact) and refreshes the checked-in per-bench
+baselines (``BENCH_<name>.json`` at the repo root, for the benches listed
+in :data:`BASELINE_BENCHES`) so the perf trajectory is visible in-repo.
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--json PATH]
 """
@@ -10,6 +12,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import traceback
 
@@ -26,6 +29,12 @@ BENCHES = {
     "roofline": bench_roofline.run,           # dry-run aggregation
 }
 
+#: benches whose rows are checked in as BENCH_<name>.json baselines (the
+#: matching-stack hot paths — the numbers PRs claim speedups against).
+BASELINE_BENCHES = ("matching", "streaming")
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -36,12 +45,15 @@ def main() -> None:
 
     rows = []
     failed = []
+    per_bench = {}
     for name, fn in BENCHES.items():
         if args.only and name != args.only:
             continue
         print(f"\n===== bench: {name} =====")
         try:
-            rows.extend(fn())
+            bench_rows = fn()
+            rows.extend(bench_rows)
+            per_bench[name] = bench_rows
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             failed.append((name, repr(e)))
@@ -54,6 +66,17 @@ def main() -> None:
                                 for n, us, d in rows],
                        "failed": [{"bench": n, "error": e}
                                   for n, e in failed]}, f, indent=1)
+        for name in BASELINE_BENCHES:
+            if name not in per_bench:
+                continue
+            path = os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump({"bench": name,
+                           "rows": [{"name": n, "us_per_call": us,
+                                     "derived": d}
+                                    for n, us, d in per_bench[name]]},
+                          f, indent=1)
+            print(f"[baseline] wrote {path}")
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         raise SystemExit(1)

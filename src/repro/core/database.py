@@ -107,6 +107,10 @@ class ReferenceDB:
         self._entries: List[Entry] = []
         self._bank_cache: "collections.OrderedDict[Tuple[int, ...], SeriesBank]" \
             = collections.OrderedDict()
+        #: accumulated match-decision records (dicts, see
+        #: ``TuneDecision.to_record``) — the raw material for calibrating
+        #: the streaming early-decision rule per workload family.
+        self._decisions: List[Dict[str, Any]] = []
 
     # -- population ---------------------------------------------------------
     def add(self, workload: str, params: Mapping[str, Any],
@@ -192,6 +196,38 @@ class ReferenceDB:
             self._bank_cache.popitem(last=False)
         return bank
 
+    # -- decision history -----------------------------------------------------
+    def record_decision(self, decision: Any) -> None:
+        """Append one match decision to the history.
+
+        ``decision`` is a ``tuner.TuneDecision`` (anything with a
+        ``to_record()``) or an already-serialized record dict.  The
+        streaming service calls this on :meth:`~repro.serve.tuning.
+        TuningService.finish`, so every completed job contributes a
+        ``decided_at_fraction`` datum; history persists with the DB.
+        """
+        rec = decision.to_record() if hasattr(decision, "to_record") \
+            else dict(decision)
+        self._decisions.append(rec)
+
+    def decision_history(self, matched: Optional[str] = None
+                         ) -> List[Dict[str, Any]]:
+        """Recorded decisions, optionally filtered to one matched
+        workload family (the calibration unit: "when did jobs that
+        matched W become decidable?")."""
+        if matched is None:
+            return list(self._decisions)
+        return [d for d in self._decisions if d.get("matched") == matched]
+
+    def decided_at_fractions(self, matched: str) -> List[float]:
+        """The ``decided_at_fraction`` data points for one workload
+        family (finals without an early decision report 1.0 — they were
+        never decidable in flight)."""
+        return [float(d["decided_at_fraction"])
+                for d in self._decisions
+                if d.get("matched") == matched
+                and d.get("decided_at_fraction") is not None]
+
     # -- persistence ----------------------------------------------------------
     def save(self, path: str) -> None:
         os.makedirs(path, exist_ok=True)
@@ -210,7 +246,9 @@ class ReferenceDB:
         os.unlink(tmp)
         fd, tmp = tempfile.mkstemp(dir=path, suffix=".json.tmp")
         with os.fdopen(fd, "w") as f:
-            json.dump({"version": 1, "entries": index}, f, indent=1, default=str)
+            json.dump({"version": 1, "entries": index,
+                       "decisions": self._decisions}, f, indent=1,
+                      default=str)
         os.replace(tmp, os.path.join(path, "index.json"))
 
     @classmethod
@@ -224,4 +262,6 @@ class ReferenceDB:
             # "series" must not shadow the positional arguments.
             db.add(rec["workload"], rec["params"], arrays[rec["key"]],
                    meta=rec.get("meta", {}))
+        for rec in index.get("decisions", ()):   # absent in pre-v3 saves
+            db.record_decision(rec)
         return db

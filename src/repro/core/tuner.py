@@ -57,6 +57,33 @@ class TuneDecision:
     # final (complete-series, offline-exact) verdict.
     fraction_seen: Optional[float] = None
     final: bool = True
+    # fraction of the job observed when the streaming service first
+    # committed to a match (== fraction_seen for early decisions; carried
+    # onto the final verdict; 1.0 when no early decision fired).  This is
+    # the datum ReferenceDB's decision history accumulates so the
+    # margin / stable_ticks / min_fraction rule can be calibrated per
+    # workload family instead of fixed constants (ROADMAP).
+    decided_at_fraction: Optional[float] = None
+
+    def to_record(self) -> Dict[str, Any]:
+        """JSON-serializable form for ``ReferenceDB`` decision history
+        (drops the transferred config — history is for calibration, and
+        configs live on the matched entry already)."""
+        return {"workload": self.workload, "matched": self.matched,
+                "corr": float(self.corr),
+                "scores": {k: float(v) for k, v in self.scores.items()},
+                "fraction_seen": self.fraction_seen,
+                "decided_at_fraction": self.decided_at_fraction,
+                "final": bool(self.final)}
+
+    @classmethod
+    def from_record(cls, rec: Dict[str, Any]) -> "TuneDecision":
+        return cls(workload=rec["workload"], matched=rec.get("matched"),
+                   corr=float(rec.get("corr", -1.0)), config=None,
+                   scores=dict(rec.get("scores", {})),
+                   fraction_seen=rec.get("fraction_seen"),
+                   final=bool(rec.get("final", True)),
+                   decided_at_fraction=rec.get("decided_at_fraction"))
 
 
 class AutoTuner:

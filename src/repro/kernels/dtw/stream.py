@@ -1,0 +1,166 @@
+"""Pallas TPU kernel: streaming bank-extend (the online-matching tick).
+
+One service tick advances J in-flight streaming DPs (one per slot) by one
+chunk of C samples against the whole padded [K, M] reference bank.  The
+jnp reference (``core.dtw._bank_extend_many``) re-materializes a [J, K, M]
+cost slab in HBM for every sample; here the grid is (job, reference-tile)
+and each program keeps its [BK, M] DP row slice in VMEM across the entire
+chunk — C row updates run back-to-back on-chip, with exactly one HBM read
+and one HBM write of the row slice per tick.
+
+Each row update is the same min-plus (tropical semiring) Hillis-Steele
+scan as the offline wavefront kernel (``kernel.py``): the in-row
+dependence D[i, j] = d[i, j] + min(m_j, D[i, j-1]) is an affine map in
+(min, +), so a row solves in log2(M) shift+min steps on the VPU lanes.
+
+Semantics mirror ``_bank_extend_many`` cell-for-cell (the tests pin this
+on ragged banks, Sakoe-Chiba bands, and arbitrary chunkings):
+
+* the virtual corner D[-1, -1] = 0 enters as the shifted-in value of a
+  job's very first sample only (``ns == 0``);
+* samples at or beyond ``nvalid[j]`` are padding and leave the row
+  untouched (ragged per-job chunks);
+* the banded variant re-derives each reference's Sakoe-Chiba center from
+  its true length and the job's expected query length every row.
+
+The kernel handles the distance-only tick (the large-K throughput mode).
+The fused scoring tick (warp-path moments + on-device open-end
+correlation) stays on the jnp wavefront path — see ``core/dtw.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.experimental import pallas as pl
+
+__all__ = ["stream_bank_extend_kernel", "stream_bank_extend"]
+
+_INF = 3.0e38  # plain float: jnp scalars become captured consts in Pallas
+
+
+def _minplus_scan2(a: jax.Array, s: jax.Array, m_len: int) -> jax.Array:
+    """Row-batched twin of ``kernel._minplus_scan``: inclusive Hillis-
+    Steele scan of the min-plus affine maps f_j(c) = min(c + a_j, s_j)
+    along the last axis of [BK, M] blocks."""
+    n_steps = int(np.ceil(np.log2(max(m_len, 2))))
+    for t in range(n_steps):
+        off = 1 << t
+        a_l = jnp.pad(a, ((0, 0), (off, 0)), constant_values=0.0)[:, :-off]
+        s_l = jnp.pad(s, ((0, 0), (off, 0)), constant_values=_INF)[:, :-off]
+        s = jnp.minimum(s_l + a, s)
+        a = a_l + a
+    return s
+
+
+def _stream_kernel(ns_ref, nv_ref, ql_ref, x_ref, len_ref, rows_ref,
+                   bank_ref, out_ref, *, c: int, m: int,
+                   band: Optional[int]):
+    """One (job, reference-tile) program: advance the [BK, M] DP row slice
+    by up to ``c`` samples, entirely in VMEM."""
+    n0 = ns_ref[0]
+    nv = nv_ref[0]
+    ql = ql_ref[0]
+    x = x_ref[0]                                   # [C]
+    bank = bank_ref[...]                           # [BK, M]
+    bk = bank.shape[0]
+    jj = jax.lax.iota(jnp.int32, m)
+
+    def body(i, row):
+        d = jnp.abs(x[i] - bank)                   # [BK, M]
+        if band is not None:
+            lens = len_ref[...]
+            centers = ((n0 + i) * (lens - 1)) \
+                // jnp.maximum(ql - 1, 1)          # [BK]
+            d = jnp.where(jnp.abs(jj[None, :] - centers[:, None]) <= band,
+                          d, _INF)
+        # virtual corner D[-1, -1] = 0 for the job's first sample only
+        corner = jnp.where((n0 == 0) & (i == 0), 0.0, _INF)
+        shifted = jnp.concatenate(
+            [jnp.broadcast_to(corner, (bk, 1)).astype(row.dtype),
+             row[:, :-1]], axis=1)
+        mn = jnp.minimum(row, shifted)
+        new = _minplus_scan2(d, mn + d, m)
+        if band is not None:
+            new = jnp.where(d >= _INF, _INF, new)
+        # samples past nvalid are chunk padding: row passes through
+        return jnp.where(i < nv, new, row)
+
+    out_ref[0] = jax.lax.fori_loop(0, c, body, rows_ref[0])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("band", "block_k", "interpret"))
+def _stream_call(rows, ns, bank, lengths, chunks, nvalid, qlens,
+                 band: Optional[int], block_k: int, interpret: bool):
+    j, k, m = rows.shape
+    c = chunks.shape[1]
+    kernel = functools.partial(_stream_kernel, c=c, m=m, band=band)
+    new_rows = pl.pallas_call(
+        kernel,
+        grid=(j, k // block_k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # ns
+            pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # nvalid
+            pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # qlens
+            pl.BlockSpec((1, c), lambda ji, ki: (ji, 0)),      # chunk
+            pl.BlockSpec((block_k,), lambda ji, ki: (ki,)),    # lengths
+            pl.BlockSpec((1, block_k, m),
+                         lambda ji, ki: (ji, ki, 0)),          # rows
+            pl.BlockSpec((block_k, m), lambda ji, ki: (ki, 0)),  # bank
+        ],
+        out_specs=pl.BlockSpec((1, block_k, m),
+                               lambda ji, ki: (ji, ki, 0)),
+        out_shape=jax.ShapeDtypeStruct((j, k, m), jnp.float32),
+        interpret=interpret,
+    )(ns, nvalid, qlens, chunks, lengths, rows, bank)
+    return new_rows, ns + nvalid
+
+
+def stream_bank_extend_kernel(rows, ns, bank, lengths, chunks, nvalid,
+                              qlens, band: Optional[int] = None,
+                              block_k: int = 128, interpret: bool = True):
+    """Advance J streaming DPs by one padded chunk — one pallas_call.
+
+    rows [J, K, M] f32; ns/nvalid/qlens [J] i32; bank [K, M] f32;
+    lengths [K] i32; chunks [J, C] f32 -> (rows [J, K, M], ns [J]).
+    The reference bank is tiled ``block_k`` rows per grid program; K is
+    padded up internally when it does not divide evenly (padding rows can
+    never influence real rows — every cell update is per-reference).
+    """
+    rows = jnp.asarray(rows, jnp.float32)
+    bank = jnp.asarray(bank, jnp.float32)
+    chunks = jnp.asarray(chunks, jnp.float32)
+    ns = jnp.asarray(ns, jnp.int32)
+    nvalid = jnp.asarray(nvalid, jnp.int32)
+    qlens = jnp.asarray(qlens, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    j, k, m = rows.shape
+    bk = min(block_k, k)
+    pad = (-k) % bk
+    if pad:
+        rows = jnp.concatenate(
+            [rows, jnp.full((j, pad, m), _INF, jnp.float32)], axis=1)
+        bank = jnp.concatenate(
+            [bank, jnp.zeros((pad, m), jnp.float32)], axis=0)
+        lengths = jnp.concatenate(
+            [lengths, jnp.ones((pad,), jnp.int32)], axis=0)
+    new_rows, ns2 = _stream_call(rows, ns, bank, lengths, chunks, nvalid,
+                                 qlens, band, bk, interpret)
+    return new_rows[:, :k], ns2
+
+
+def stream_bank_extend(rows, ns, bank, lengths, chunks, nvalid, qlens,
+                       band: Optional[int] = None,
+                       interpret: Optional[bool] = None):
+    """Backend-defaulted entry: compiled on TPU, interpret elsewhere."""
+    from ..common import default_interpret
+    interpret = default_interpret() if interpret is None else interpret
+    return stream_bank_extend_kernel(rows, ns, bank, lengths, chunks,
+                                     nvalid, qlens, band=band,
+                                     interpret=interpret)

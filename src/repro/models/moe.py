@@ -31,29 +31,11 @@ from jax.sharding import PartitionSpec as P
 
 from .config import ModelConfig
 from .layers import Dtypes, dense_init
+# version-tolerant shard_map shim, shared with the sharded streaming
+# matcher tick (serve.tuning)
+from ..sharding.compat import shard_map as _shard_map
 
 __all__ = ["moe_init", "moe_apply"]
-
-
-def _shard_map(f, *, mesh, in_specs, out_specs):
-    """Version-tolerant shard_map.
-
-    ``shard_map`` graduated from ``jax.experimental.shard_map`` to
-    ``jax.shard_map`` (and its ``check_rep`` flag was renamed
-    ``check_vma``) across jax releases; accept whichever this jax has.
-    Replication checking is disabled either way: the expert-parallel psum
-    pattern below is not representable to the checker.
-    """
-    if hasattr(jax, "shard_map"):
-        try:
-            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                                 out_specs=out_specs, check_vma=False)
-        except TypeError:
-            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                                 out_specs=out_specs, check_rep=False)
-    from jax.experimental.shard_map import shard_map as _sm
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=False)
 
 
 def moe_init(key, cfg: ModelConfig) -> Dict:

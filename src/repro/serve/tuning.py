@@ -6,28 +6,48 @@ soon as the most probable execution pattern is clear, transfer that
 workload's tuned configuration.  The offline ``AutoTuner.match`` scores
 complete series only; this service runs the matching phase online.
 
-Architecture
-------------
+Architecture (device-resident tick)
+-----------------------------------
 * Each in-flight job occupies one of ``slots`` fixed slots (continuous-
   batching style, like ``serve.engine.ServeEngine``).  Its incremental DTW
-  state — the [K, M] DP row against the whole reference bank — lives
-  stacked with every other job's as one ``[S, K, M]`` device array.
+  state — the DP row against the whole reference bank, plus the warp-path
+  correlation moments of every row cell — lives stacked with every other
+  job's as ``[S, M, K]`` / ``[3, S, M, K]`` device arrays (K last, so the
+  reference axis both vectorizes and shards).
 * :meth:`tick` drains every job's buffered samples in **one** jitted
-  dispatch (``core.dtw._bank_extend_many``): per tick, the device sees one
-  ``[S, C]`` chunk matrix, not one call per job.  ``dispatch_count``
-  records exactly that — the service's scaling claim is dispatches ==
-  ticks, independent of how many jobs are in flight.
-* Prefix scores are the open-ended warp correlations of
-  ``similarity.prefix_similarity_bank``; the early-decision rule is
-  confidence/abstain: emit a :class:`core.tuner.TuneDecision` only once
-  the leading workload has cleared the threshold AND led the runner-up by
-  ``margin`` for ``stable_ticks`` consecutive scoring ticks, with at least
-  ``min_fraction`` of the job observed.  Otherwise the service abstains
-  and keeps watching.
-* :meth:`finish` produces the final verdict from the full streamed DP —
-  exactly the offline ``similarity_bank`` score of the completed query
-  (same matrix, same backtrack), so going online costs no accuracy at the
-  end of the job.
+  dispatch of the wavefront chunk-extend (``core.dtw``), with prefix
+  scoring FUSED into the same dispatch: the device returns a ``[S, K]``
+  open-end warp-correlation array, not DP rows.  Nothing of shape
+  [C, S, K, M] ever crosses the device boundary — the PR-2 design shipped
+  the full row stack to the host and backtracked in numpy every tick.
+  ``dispatch_count`` records the invariant: dispatches == ticks(with data)
+  no matter how many jobs are in flight.  On TPU backends the distance-
+  only tick routes to the Pallas streaming kernel (``kernels.dtw.stream``,
+  DP row pinned in VMEM across the chunk).
+* ``mesh=`` shards the bank: a 1-D device mesh partitions the ``[M, K]``
+  reference bank and every ``[.., K]`` state slab over its single axis via
+  ``sharding.compat.shard_map`` (tick fan-out, ``[S, K]`` score gather).
+  K scales with device count; the computation is per-reference, so the
+  sharded tick is bit-identical to the unsharded one and remains ONE
+  dispatch.
+* The early-decision rule is confidence/abstain: emit a
+  :class:`core.tuner.TuneDecision` only once the leading workload has
+  cleared the threshold AND led the runner-up by ``margin`` for
+  ``stable_ticks`` consecutive scoring ticks, with at least
+  ``min_fraction`` of the job observed.  The margin test requires >= 2
+  distinct workloads in the bank — with a single candidate there is no
+  runner-up to beat, so the service abstains in flight rather than
+  vacuously passing the margin gate (:meth:`finish` still renders the
+  final verdict).
+* :meth:`finish` recomputes the final verdict offline from the job's full
+  (causally filtered) query — one batched ``similarity_bank`` dispatch,
+  counted in ``offline_dispatch_count`` — so the end-of-job score is the
+  exact offline score regardless of f32 in-flight accumulation or a
+  mispredicted ``expected_len`` (the banded corridor anchors to the
+  *predicted* length; the offline recompute re-derives it from the true
+  one).  When a :class:`ReferenceDB` backs the service, the decision
+  (with its ``decided_at_fraction``) is recorded into the DB's decision
+  history for margin/stable_ticks/min_fraction calibration.
 
 ``denoise=True`` pushes raw samples through the causal streaming Chebyshev
 filter (``filters.StreamingFilter``) before matching — the online stand-in
@@ -38,17 +58,19 @@ expected to be stored pre-processed (as ``AutoTuner.profile`` does).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import dtw as _dtw
 from ..core.database import ReferenceDB, SeriesBank
 from ..core.filters import StreamingFilter
-from ..core.similarity import (MATCH_THRESHOLD, prefix_similarity_bank,
-                               similarity_bank)
+from ..core.similarity import MATCH_THRESHOLD, similarity_bank
 from ..core.tuner import TuneDecision, _RowBuffer
+from ..sharding.compat import shard_map as _shard_map
 
 __all__ = ["InFlightJob", "TuningService"]
 
@@ -56,18 +78,20 @@ __all__ = ["InFlightJob", "TuningService"]
 @dataclasses.dataclass
 class InFlightJob:
     """Host-side bookkeeping for one slot (device state lives stacked in
-    the service's ``[S, K, M]`` array)."""
+    the service's ``[S, M, K]`` arrays)."""
     job_id: str
     slot: int
     expected_len: int
     buffered: List[np.ndarray] = dataclasses.field(default_factory=list)
     x: _RowBuffer = dataclasses.field(default_factory=_RowBuffer)
-    rows: _RowBuffer = dataclasses.field(default_factory=_RowBuffer)
     filt: Optional[StreamingFilter] = None
     n: int = 0
     leader: Optional[str] = None
     stable_for: int = 0
     early: Optional[TuneDecision] = None
+    #: last [K] on-device prefix-score row seen for this job (float64 on
+    #: the host side; None until the first scoring tick touches the job).
+    last_sims: Optional[np.ndarray] = None
 
     @property
     def fraction_seen(self) -> float:
@@ -78,11 +102,17 @@ class TuningService:
     """Multiplexed online matcher over a fixed reference bank.
 
     ``refs`` is a :class:`ReferenceDB` (bank + config transfer) or a bare
-    :class:`SeriesBank` (matching only).  ``collect_rows=False`` is the
-    distance-only throughput mode: no warp correlations in flight (early
-    decisions are disabled; :meth:`finish` falls back to one offline
-    ``similarity_bank`` dispatch), but ticks move no [C, S, K, M] row
-    traffic — the mode to run with very large banks.
+    :class:`SeriesBank` (matching only).  ``score_in_flight=False`` is the
+    distance-only throughput mode: the tick skips the fused scoring (so no
+    early decisions; :meth:`finish` still renders the offline verdict) and
+    carries no moment slabs — marginally cheaper at very large K.
+    ``collect_rows`` is accepted as a deprecated alias from the PR-2 API
+    (rows are never collected any more; the name survives because the
+    semantics — "score while in flight" — do).
+
+    ``mesh=`` (a 1-D ``jax.sharding.Mesh``) partitions the reference axis
+    K over the mesh devices; the bank is padded up to a device-count
+    multiple internally and padded rows never surface in scores.
     """
 
     def __init__(self, refs: Union[ReferenceDB, SeriesBank], *,
@@ -90,7 +120,10 @@ class TuningService:
                  threshold: float = MATCH_THRESHOLD,
                  margin: float = 0.02, stable_ticks: int = 3,
                  min_fraction: float = 0.15, slots: int = 8,
-                 denoise: bool = False, collect_rows: bool = True) -> None:
+                 denoise: bool = False,
+                 score_in_flight: Optional[bool] = None,
+                 collect_rows: Optional[bool] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None) -> None:
         if isinstance(refs, ReferenceDB):
             self.db: Optional[ReferenceDB] = refs
             self.bank = refs.bank()
@@ -99,8 +132,11 @@ class TuningService:
             self.bank = refs
         if len(self.bank) == 0:
             raise ValueError("empty reference bank")
+        if score_in_flight is None:
+            score_in_flight = True if collect_rows is None else collect_rows
         self._labels: Tuple[str, ...] = self.bank.labels or tuple(
             f"ref{k}" for k in range(len(self.bank)))
+        self._n_workloads = len(set(self._labels))
         self.band = band
         self.threshold = threshold
         self.margin = margin
@@ -108,25 +144,103 @@ class TuningService:
         self.min_fraction = min_fraction
         self.slots = slots
         self.denoise = denoise
-        self.collect_rows = collect_rows
+        self.score_in_flight = score_in_flight
+        self.mesh = mesh
 
         k, m = self.bank.series.shape
-        self._bank_dev = jnp.asarray(self.bank.series, jnp.float32)
-        self._lengths_dev = jnp.asarray(self.bank.lengths, jnp.int32)
-        self._rows_dev = jnp.full((slots, k, m), _dtw._INF)
-        self._ns_dev = jnp.zeros((slots,), jnp.int32)
+        self._k = k
+        ndev = 1
+        axis = None
+        if mesh is not None:
+            if len(mesh.axis_names) != 1:
+                raise ValueError("TuningService needs a 1-D mesh (one bank "
+                                 f"axis); got axes {mesh.axis_names}")
+            axis = mesh.axis_names[0]
+            ndev = mesh.devices.size
+        kp = k + ((-k) % ndev)
+        series_t = np.zeros((m, kp), np.float32)
+        series_t[:, :k] = self.bank.series.T
+        lengths = np.ones((kp,), np.int32)
+        lengths[:k] = self.bank.lengths
+
+        def put(arr, spec):
+            if mesh is None:
+                return jnp.asarray(arr)
+            return jax.device_put(arr, jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(*spec)))
+
+        self._bank_t = put(series_t, (None, axis))
+        self._lengths = put(lengths, (axis,))
+        self._rows = put(np.full((slots, m, kp), float(_dtw._INF),
+                                 np.float32), (None, None, axis))
+        self._moms = put(np.zeros((3, slots, m, kp), np.float32),
+                         (None, None, None, axis)) \
+            if score_in_flight else None
+        self._ns = put(np.zeros((slots,), np.int32), (None,))
+        self._sx = put(np.zeros((slots,), np.float32), (None,))
+        self._sxx = put(np.zeros((slots,), np.float32), (None,))
         self._qlens = np.zeros((slots,), np.int32)
         self._free: List[int] = list(range(slots - 1, -1, -1))
         self._jobs: Dict[str, InFlightJob] = {}
+        self._tick_fn = self._build_tick_fn(axis)
 
         #: device dispatches issued by :meth:`tick` — the scaling invariant
-        #: is ``dispatch_count == ticks`` no matter how many jobs are live.
+        #: is one dispatch per data-carrying tick, however many jobs are
+        #: live (and however many devices the bank is sharded over).
         self.dispatch_count = 0
+        #: offline ``similarity_bank`` dispatches issued by :meth:`finish`
+        #: (the end-of-job exact-verdict recompute; not part of the tick
+        #: hot path).
+        self.offline_dispatch_count = 0
         self.ticks = 0
         # early decisions emitted by a tick the caller didn't see (e.g.
         # the internal drain tick of another job's finish()); surfaced by
         # the next tick() return so no decision is ever dropped.
         self._undelivered: Dict[str, TuneDecision] = {}
+
+    # -- tick compilation ----------------------------------------------------
+    def _build_tick_fn(self, axis: Optional[str]):
+        """The ONE jitted callable a tick dispatches: fused scored extend
+        (or the distance-only variant), optionally shard_mapped over the
+        bank axis.  Sharding is exact — every DP cell and score is a
+        per-reference quantity, so the fan-out computes disjoint K slices
+        and the [S, K] score gather is the only cross-device output."""
+        band = self.band
+        if self.score_in_flight:
+            if self.mesh is None:
+                return functools.partial(_dtw.bank_extend_tick_scored,
+                                         band=band)
+
+            def inner(rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
+                      nvalid, qlens):
+                return _dtw._bank_extend_diag_impl(
+                    rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
+                    nvalid, qlens, band=band, score=True)
+            P = jax.sharding.PartitionSpec
+            return jax.jit(_shard_map(
+                inner, mesh=self.mesh,
+                in_specs=(P(None, None, axis), P(None, None, None, axis),
+                          P(), P(), P(), P(None, axis), P(axis), P(), P(),
+                          P()),
+                out_specs=(P(None, None, axis), P(None, None, None, axis),
+                           P(), P(), P(), P(None, axis))))
+
+        if self.mesh is None:
+            # bank_extend_tick_dispatch routes to the Pallas streaming
+            # kernel on TPU and the (already-jitted) jnp wavefront
+            # elsewhere.
+            return functools.partial(_dtw.bank_extend_tick_dispatch,
+                                     band=band)
+
+        def inner(rows, ns, bank_t, lengths, chunks, nvalid, qlens):
+            return _dtw.bank_extend_tick(rows, ns, bank_t, lengths, chunks,
+                                         nvalid, qlens, band=band)
+        P = jax.sharding.PartitionSpec
+        return jax.jit(_shard_map(
+            inner, mesh=self.mesh,
+            in_specs=(P(None, None, axis), P(), P(None, axis), P(axis),
+                      P(), P(), P()),
+            out_specs=(P(None, None, axis), P())))
 
     # -- job lifecycle -------------------------------------------------------
     @property
@@ -144,8 +258,12 @@ class TuningService:
         if expected_len < 1:
             raise ValueError("expected_len must be >= 1")
         slot = self._free.pop()
-        self._rows_dev = self._rows_dev.at[slot].set(_dtw._INF)
-        self._ns_dev = self._ns_dev.at[slot].set(0)
+        self._rows = self._rows.at[slot].set(_dtw._INF)
+        self._ns = self._ns.at[slot].set(0)
+        if self._moms is not None:
+            self._moms = self._moms.at[:, slot].set(0.0)
+        self._sx = self._sx.at[slot].set(0.0)
+        self._sxx = self._sxx.at[slot].set(0.0)
         self._qlens[slot] = expected_len
         job = InFlightJob(job_id=job_id, slot=slot, expected_len=expected_len,
                           filt=StreamingFilter() if self.denoise else None)
@@ -160,8 +278,10 @@ class TuningService:
 
     # -- the hot path --------------------------------------------------------
     def tick(self) -> Dict[str, Optional[TuneDecision]]:
-        """Drain every job's buffered samples in ONE jitted dispatch, then
-        re-score the touched jobs and apply the early-decision rule.
+        """Drain every job's buffered samples in ONE jitted dispatch (DP
+        extend + prefix scoring fused, sharded over the bank when a mesh
+        is set), then apply the early-decision rule to the returned
+        [S, K] score array.
 
         Returns {job_id: TuneDecision} for decisions *newly emitted* this
         tick (None for touched jobs where the service abstains), plus any
@@ -191,20 +311,29 @@ class TuningService:
             chunks[job.slot, : ch.shape[0]] = ch
             nvalid[job.slot] = ch.shape[0]
 
-        self._rows_dev, self._ns_dev, collected = _dtw._bank_extend_many(
-            self._rows_dev, self._ns_dev, self._bank_dev, self._lengths_dev,
-            jnp.asarray(chunks), jnp.asarray(nvalid), jnp.asarray(self._qlens),
-            self.band, self.collect_rows)
+        sims_all = None
+        if self.score_in_flight:
+            (self._rows, self._moms, self._ns, self._sx, self._sxx,
+             scores) = self._tick_fn(
+                self._rows, self._moms, self._ns, self._sx, self._sxx,
+                self._bank_t, self._lengths, jnp.asarray(chunks),
+                jnp.asarray(nvalid), jnp.asarray(self._qlens))
+            # the tick's ONLY device->host transfer: [S, K] scores.
+            sims_all = np.asarray(scores, np.float64)[:, : self._k]
+        else:
+            self._rows, self._ns = self._tick_fn(
+                self._rows, self._ns, self._bank_t, self._lengths,
+                jnp.asarray(chunks), jnp.asarray(nvalid),
+                jnp.asarray(self._qlens))
         self.dispatch_count += 1
 
-        if self.collect_rows:
-            collected_np = np.asarray(collected)      # [C, S, K, M]
         for job, ch in pending:
             job.n += ch.shape[0]
-            if self.collect_rows:
-                job.rows.append(collected_np[: ch.shape[0], job.slot])
-            decision = self._maybe_decide(job) \
-                if job.early is None and self.collect_rows else None
+            decision = None
+            if sims_all is not None:
+                job.last_sims = sims_all[job.slot]
+                if job.early is None:
+                    decision = self._maybe_decide(job)
             if out.get(job.job_id) is None:
                 out[job.job_id] = decision
         return out
@@ -231,14 +360,17 @@ class TuningService:
     def _maybe_decide(self, job: InFlightJob) -> Optional[TuneDecision]:
         if job.n < 2:
             return None
-        sims = prefix_similarity_bank(job.x.view(), self.bank,
-                                      job.rows.view())
-        scores = self._reduce(sims)
+        scores = self._reduce(job.last_sims)
         leader, ls, rs = self._rank(scores)
-        if leader == job.leader and ls - rs >= self.margin:
+        # the margin test needs a real runner-up: with < 2 workloads in
+        # the bank it would be vacuously true (rs == -1.0), so the
+        # service abstains in flight instead of fast-tracking the only
+        # candidate (finish() still decides from the complete series).
+        margin_ok = self._n_workloads >= 2 and ls - rs >= self.margin
+        if leader == job.leader and margin_ok:
             job.stable_for += 1
         else:
-            job.stable_for = 1 if ls - rs >= self.margin else 0
+            job.stable_for = 1 if margin_ok else 0
         job.leader = leader
         if (job.fraction_seen >= self.min_fraction
                 and ls >= self.threshold
@@ -246,22 +378,19 @@ class TuningService:
             cfg = self.db.best_config(leader) if self.db is not None else None
             job.early = TuneDecision(
                 workload=job.job_id, matched=leader, corr=ls, config=cfg,
-                scores=scores, fraction_seen=job.fraction_seen, final=False)
+                scores=scores, fraction_seen=job.fraction_seen, final=False,
+                decided_at_fraction=job.fraction_seen)
             return job.early
         return None
 
     # -- completion ----------------------------------------------------------
     def finish(self, job_id: str) -> TuneDecision:
-        """Final verdict for a completed job: exactly the offline
-        ``similarity_bank`` score of the full streamed query.  Frees the
-        slot.
-
-        Banded caveat: the streamed corridor was anchored to the
-        *predicted* ``expected_len``; if the job ended at a different
-        length the streamed DP's band is misplaced, so the final score is
-        recomputed offline (one batched dispatch) with the band re-derived
-        from the true length — the verdict self-corrects even when the
-        runtime prediction was wrong.
+        """Final verdict for a completed job, recomputed offline from the
+        full streamed (causally filtered) query: exactly the batched
+        ``similarity_bank`` score, with the Sakoe-Chiba band re-derived
+        from the *true* length (the in-flight corridor was anchored to
+        the ``expected_len`` prediction).  Frees the slot and, when a
+        ReferenceDB backs the service, records the decision history.
         """
         job = self._jobs[job_id]
         if job.buffered:
@@ -270,13 +399,9 @@ class TuningService:
                 if jid != job_id and d is not None:
                     self._undelivered[jid] = d
         x = job.x.view()
-        band_ok = self.band is None or job.n == job.expected_len
-        if job.n >= 2 and self.collect_rows and band_ok:
-            sims = prefix_similarity_bank(x, self.bank, job.rows.view(),
-                                          open_end=False)
-        elif job.n >= 2:
+        if job.n >= 2:
             sims = similarity_bank(x, self.bank, band=self.band)
-            self.dispatch_count += 1
+            self.offline_dispatch_count += 1
         else:
             sims = np.zeros((len(self.bank),), np.float64)
         scores = self._reduce(sims)
@@ -289,6 +414,11 @@ class TuningService:
         # later delivery; it must not outlive the job (the id is reusable)
         self._undelivered.pop(job_id, None)
         self._free.append(job.slot)
-        return TuneDecision(workload=job_id, matched=matched, corr=ls,
-                            config=cfg, scores=scores, fraction_seen=1.0,
-                            final=True)
+        decision = TuneDecision(
+            workload=job_id, matched=matched, corr=ls, config=cfg,
+            scores=scores, fraction_seen=1.0, final=True,
+            decided_at_fraction=(job.early.decided_at_fraction
+                                 if job.early is not None else 1.0))
+        if self.db is not None:
+            self.db.record_decision(decision)
+        return decision

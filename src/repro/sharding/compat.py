@@ -1,0 +1,34 @@
+"""Version-tolerant wrappers over jax APIs that moved between releases.
+
+One copy of the workaround: ``shard_map`` graduated from
+``jax.experimental.shard_map`` to ``jax.shard_map`` (and its ``check_rep``
+flag was renamed ``check_vma``) across jax releases.  Both the MoE
+expert-parallel path (``models.moe``) and the sharded streaming-matcher
+tick (``serve.tuning``) go through this shim so a jax upgrade is a
+one-file fix.
+
+Replication checking is disabled in every branch: the expert-parallel
+psum pattern and the replicated-scalar outputs of the tick fan-out are
+not representable to the checker.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.[experimental.]shard_map`` with whatever signature this jax
+    ships; replication checking off."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)

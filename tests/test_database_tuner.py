@@ -176,3 +176,31 @@ def test_bank_cache_lru_evicts_oldest_selection():
     # names[0]:
     assert db.bank(workloads=[names[0]]) is banks[names[0]]
     assert db.bank(workloads=[names[1]]) is not banks[names[1]]
+
+
+def test_decision_history_roundtrip(tmp_path):
+    """Decision records (the margin/stable_ticks/min_fraction calibration
+    data) persist with the DB and survive a save/load cycle; old saves
+    without a decisions section still load."""
+    from repro.core.tuner import TuneDecision
+
+    db = ReferenceDB()
+    db.add("wc", {"M": 11}, _series("wordcount"))
+    db.record_decision(TuneDecision(
+        workload="job-1", matched="wc", corr=0.97, config=None,
+        scores={"wc": 0.97, "ts": 0.41}, fraction_seen=1.0, final=True,
+        decided_at_fraction=0.44))
+    db.record_decision({"workload": "job-2", "matched": "ts", "corr": 0.91,
+                        "scores": {}, "decided_at_fraction": 0.6,
+                        "final": True})
+    p = tmp_path / "db"
+    db.save(str(p))
+    db2 = ReferenceDB.load(str(p))
+    assert len(db2.decision_history()) == 2
+    assert db2.decided_at_fractions("wc") == [pytest.approx(0.44)]
+    assert db2.decided_at_fractions("ts") == [pytest.approx(0.6)]
+    rec = db2.decision_history(matched="wc")[0]
+    round_trip = TuneDecision.from_record(rec)
+    assert round_trip.matched == "wc"
+    assert round_trip.decided_at_fraction == pytest.approx(0.44)
+    assert round_trip.scores["ts"] == pytest.approx(0.41)

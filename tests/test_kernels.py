@@ -97,3 +97,40 @@ def test_gla_kernel_matches_model_path():
                                atol=1e-5)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4,
                                atol=1e-5)
+
+
+@pytest.mark.parametrize("band,block_k", [(None, 128), (6, 128), (None, 4)])
+def test_stream_kernel_cell_by_cell_vs_bank_extend(band, block_k):
+    """Pallas streaming bank-extend == core.dtw._bank_extend_many on every
+    cell, across multiple ragged chunks (random per-job nvalid), ragged
+    reference lengths, banded and unbanded, including a block_k that
+    forces reference-tile padding."""
+    import jax.numpy as jnp
+    from repro.core import dtw as _dtw
+    from repro.core.database import pack_series
+    from repro.kernels.dtw import stream_bank_extend_kernel
+
+    rng = np.random.default_rng(0 if band is None else band)
+    series = [rng.random(int(rng.integers(12, 30))).astype(np.float32)
+              for _ in range(7)]
+    bank = pack_series(series)
+    k, m = bank.series.shape
+    J, C = 3, 8
+    rows_p = jnp.full((J, k, m), _dtw._INF)
+    ns_p = jnp.zeros((J,), jnp.int32)
+    rows_h, ns_h = rows_p, ns_p
+    qlens = jnp.full((J,), 4 * C, jnp.int32)
+    for _ in range(4):
+        nv = jnp.asarray(rng.integers(0, C + 1, size=J).astype(np.int32))
+        ch = jnp.asarray(rng.random((J, C)).astype(np.float32))
+        rows_p, ns_p = stream_bank_extend_kernel(
+            rows_p, ns_p, bank.series, bank.lengths, ch, nv, qlens,
+            band=band, block_k=block_k, interpret=True)
+        rows_h, ns_h, _ = _dtw._bank_extend_many(
+            rows_h, ns_h, jnp.asarray(bank.series),
+            jnp.asarray(bank.lengths), ch, nv, qlens, band, False)
+    r1, r2 = np.asarray(rows_p), np.asarray(rows_h)
+    finite = r2 < 1e37
+    assert (finite == (r1 < 1e37)).all()
+    np.testing.assert_allclose(r1[finite], r2[finite], rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(ns_p), np.asarray(ns_h))

@@ -425,3 +425,170 @@ def test_finish_purges_undelivered_decision_of_finished_job(paper_bank):
     assert svc.tick() == {}            # no ghost delivery
     svc.submit("jb", expected_len=len(qb))      # id reuse is clean
     assert svc.tick() == {}
+
+
+# ---------------------------------------------------------------------------
+# Device-resident tick (wavefront extend + fused on-device scoring)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_wavefront_tick_equals_bank_extend_many(seed):
+    """The K-last wavefront tick (``dtw.bank_extend_tick``) must agree
+    cell-for-cell with the row-formulation reference, across random
+    ragged chunkings, ragged banks, banded and unbanded."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed ^ 0xD1A6)
+    series = [rng.normal(size=int(l)).astype(np.float32)
+              for l in rng.integers(4, 30, size=int(rng.integers(2, 6)))]
+    bank = pack_series(series)
+    k, m = bank.series.shape
+    J, C = int(rng.integers(1, 4)), 8
+    band = int(rng.integers(6, 10)) if rng.integers(2) else None
+    qlens = jnp.full((J,), 4 * C, jnp.int32)
+    rows_w = jnp.full((J, m, k), dtw._INF)
+    ns_w = jnp.zeros((J,), jnp.int32)
+    rows_h = jnp.full((J, k, m), dtw._INF)
+    ns_h = jnp.zeros((J,), jnp.int32)
+    for _ in range(4):
+        nv = jnp.asarray(rng.integers(0, C + 1, size=J).astype(np.int32))
+        ch = jnp.asarray(rng.random((J, C)).astype(np.float32))
+        rows_w, ns_w = dtw.bank_extend_tick(
+            rows_w, ns_w, jnp.asarray(bank.series.T),
+            jnp.asarray(bank.lengths), ch, nv, qlens, band=band)
+        rows_h, ns_h, _ = dtw._bank_extend_many(
+            rows_h, ns_h, jnp.asarray(bank.series),
+            jnp.asarray(bank.lengths), ch, nv, qlens, band, False)
+    r1 = np.asarray(rows_w).transpose(0, 2, 1)
+    r2 = np.asarray(rows_h)
+    finite = r2 < 1e37
+    assert (finite == (r1 < 1e37)).all()
+    np.testing.assert_allclose(r1[finite], r2[finite], rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(ns_w), np.asarray(ns_h))
+
+
+@pytest.mark.parametrize("band", [None, 9])
+def test_fused_device_scores_match_host_prefix_scoring(band):
+    """The on-device warp-path-moment scores of the fused tick reproduce
+    the host backtrack scorer (``prefix_similarity_bank`` over collected
+    rows) at every tick — the tentpole claim that moving scoring
+    on-device costs no fidelity."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(3 if band is None else band)
+    series = []
+    for i in range(5):
+        l = int(rng.integers(16, 40))
+        t = np.linspace(0, 1, l, dtype=np.float32)
+        series.append(np.clip(
+            0.5 + 0.3 * np.sin(2 * np.pi * (1.5 + i) * t)
+            + 0.05 * rng.normal(size=l), 0, 1).astype(np.float32))
+    bank = pack_series(series)
+    k, m = bank.series.shape
+    J, C, nticks = 2, 8, 4
+    qlen = nticks * C
+    qs = np.stack([np.clip(
+        0.5 + 0.3 * np.sin(2 * np.pi * (2 + j) * np.linspace(0, 1, qlen))
+        + 0.05 * rng.normal(size=qlen), 0, 1).astype(np.float32)
+        for j in range(J)])
+    rows = jnp.full((J, m, k), dtw._INF)
+    moms = jnp.zeros((3, J, m, k))
+    ns = jnp.zeros((J,), jnp.int32)
+    sx = jnp.zeros((J,))
+    sxx = jnp.zeros((J,))
+    qlens = jnp.full((J,), qlen, jnp.int32)
+    rows_h = jnp.full((J, k, m), dtw._INF)
+    ns_h = jnp.zeros((J,), jnp.int32)
+    collected = []
+    for t0 in range(nticks):
+        ch = jnp.asarray(qs[:, t0 * C:(t0 + 1) * C])
+        nv = jnp.full((J,), C, jnp.int32)
+        rows, moms, ns, sx, sxx, scores = dtw.bank_extend_tick_scored(
+            rows, moms, ns, sx, sxx, jnp.asarray(bank.series.T),
+            jnp.asarray(bank.lengths), ch, nv, qlens, band=band)
+        rows_h, ns_h, coll = dtw._bank_extend_many(
+            rows_h, ns_h, jnp.asarray(bank.series),
+            jnp.asarray(bank.lengths), ch, nv, qlens, band, True)
+        collected.append(np.asarray(coll))
+        stack = np.concatenate(collected)
+        dev = np.asarray(scores)
+        for j in range(J):
+            host = prefix_similarity_bank(qs[j, :(t0 + 1) * C], bank,
+                                          stack[:, j])
+            np.testing.assert_allclose(dev[j], host, atol=2e-3)
+
+
+def test_service_margin_needs_two_workloads(paper_bank):
+    """A single-workload bank has no runner-up, so the margin gate must
+    not pass vacuously: the service abstains in flight (finish() still
+    delivers the final verdict)."""
+    from repro.core.database import SeriesBank
+
+    rows = [i for i, lbl in enumerate(paper_bank.labels)
+            if lbl == "wordcount"]
+    solo = SeriesBank(paper_bank.series[rows], paper_bank.lengths[rows],
+                      tuple(paper_bank.labels[i] for i in rows))
+    # deliberately lax rule: threshold/margin/stability would all pass
+    # trivially if the vacuous runner-up (-1.0) were allowed
+    svc = TuningService(solo, band=16, threshold=0.3, margin=0.0,
+                        stable_ticks=1, min_fraction=0.05, denoise=True)
+    p = mrsim.paper_param_sets()[0]
+    q = mrsim.simulate_cpu_series("wordcount", p, run=1, dt=0.25)
+    svc.submit("q", expected_len=len(q))
+    for lo in range(0, len(q), 8):
+        svc.push("q", q[lo: lo + 8])
+        assert svc.tick().get("q") is None, \
+            "early decision from a single-workload bank"
+    final = svc.finish("q")
+    assert final.final and final.matched == "wordcount"
+
+
+def test_service_scoring_tick_moves_no_rows(paper_bank):
+    """The scoring tick's device->host traffic is the [S, K] score array:
+    the job objects hold no DP-row history any more (finish() recomputes
+    offline instead)."""
+    svc = TuningService(paper_bank, band=16, denoise=True)
+    p = mrsim.paper_param_sets()[0]
+    q = mrsim.simulate_cpu_series("exim", p, run=1, dt=0.25)
+    svc.submit("q", expected_len=len(q))
+    svc.push("q", q[:32])
+    svc.tick()
+    job = svc._jobs["q"]
+    assert not hasattr(job, "rows")
+    assert job.last_sims is not None
+    assert job.last_sims.shape == (len(paper_bank),)
+    assert svc.dispatch_count == 1
+    d = svc.finish("q")
+    assert svc.offline_dispatch_count == 1 and svc.dispatch_count == 1
+    assert set(d.scores) == {"wordcount", "terasort"}
+
+
+def test_service_decision_history_recorded(paper_bank):
+    """A DB-backed service records finished decisions (with
+    decided_at_fraction) into the ReferenceDB history."""
+    from repro.core import ReferenceDB
+
+    db = ReferenceDB()
+    for i, lbl in enumerate(paper_bank.labels):
+        db.add(lbl, {"i": i}, paper_bank.row(i))
+    svc = TuningService(db, band=16, threshold=0.85, margin=0.02,
+                        stable_ticks=3, min_fraction=0.15, denoise=True)
+    p = mrsim.paper_param_sets()[0]
+    q = mrsim.simulate_cpu_series("exim", p, run=1, dt=0.25)
+    svc.submit("exim", expected_len=len(q))
+    early = None
+    for lo in range(0, len(q), 8):
+        svc.push("exim", q[lo: lo + 8])
+        d = svc.tick().get("exim")
+        if d is not None and early is None:
+            early = d
+    final = svc.finish("exim")
+    assert early is not None
+    assert early.decided_at_fraction == pytest.approx(early.fraction_seen)
+    assert final.decided_at_fraction == pytest.approx(
+        early.decided_at_fraction)
+    hist = db.decision_history(matched="wordcount")
+    assert len(hist) == 1 and hist[0]["workload"] == "exim"
+    fracs = db.decided_at_fractions("wordcount")
+    assert fracs == [pytest.approx(early.decided_at_fraction)]

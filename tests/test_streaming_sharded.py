@@ -1,0 +1,111 @@
+"""Sharded streaming tick (8 forced host devices in a subprocess so the
+main test process keeps its single real device).
+
+The bank-sharded TuningService must be *observationally identical* to the
+unsharded one: every per-(job, reference) score agrees to 1e-6 (the tick
+math is per-reference, so partitioning K changes nothing), the emitted
+early decisions match tick-for-tick, ragged + banded banks both work, and
+a tick stays ONE dispatch however many devices the bank spans.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import jax
+    import numpy as np
+    from repro.core.database import pack_series
+    from repro.serve.tuning import TuningService
+
+    rng = np.random.default_rng(0)
+
+    def make_bank(k=11, lo=18, hi=40):
+        # deliberately NOT a multiple of 8 devices: exercises bank padding
+        series = []
+        for i in range(k):
+            l = int(rng.integers(lo, hi))
+            t = np.linspace(0, 1, l, dtype=np.float32)
+            s = 0.5 + 0.3 * np.sin(2 * np.pi * (1.5 + 0.7 * i) * t) \\
+                + 0.04 * rng.normal(size=l)
+            series.append(np.clip(s, 0, 1).astype(np.float32))
+        labels = [f"w{i % 4}" for i in range(k)]
+        return pack_series(series, labels=labels)
+
+    def drive(svc, queries):
+        # per-job chunk sizes differ and drift tick-to-tick, so every
+        # sharded tick sees ragged nvalid (including jobs that push
+        # nothing) and exercises the padded-sample passthrough.
+        decisions = []
+        sims = []
+        pos = {jid: 0 for jid in queries}
+        sizes = {jid: (7, 3, 9, 0, 5)[i % 5:] + (7, 3, 9, 0, 5)[:i % 5]
+                 for i, jid in enumerate(queries)}
+        t = 0
+        while any(pos[jid] < len(q) for jid, q in queries.items()):
+            for jid, q in queries.items():
+                step = sizes[jid][t % 5]
+                svc.push(jid, q[pos[jid]: pos[jid] + step])
+                pos[jid] = min(pos[jid] + step, len(q))
+            t += 1
+            out = svc.tick()
+            decisions.append({jid: (d.matched, round(d.corr, 5))
+                              for jid, d in out.items() if d is not None})
+            sims.append({jid: svc._jobs[jid].last_sims.copy()
+                         for jid in queries if svc._jobs[jid].last_sims
+                         is not None})
+        finals = {jid: svc.finish(jid) for jid in queries}
+        return decisions, sims, finals
+
+    mesh = jax.make_mesh((8,), ("bank",))
+    for band in (None, 6):
+        bank = make_bank()
+        qlen = 42
+        queries = {}
+        for j in range(3):
+            t = np.linspace(0, 1, qlen, dtype=np.float32)
+            q = 0.5 + 0.3 * np.sin(2 * np.pi * (1.5 + 0.7 * j) * t) \\
+                + 0.04 * rng.normal(size=qlen)
+            queries[f"job{j}"] = np.clip(q, 0, 1).astype(np.float32)
+
+        kw = dict(band=band, threshold=0.5, margin=0.01, stable_ticks=2,
+                  min_fraction=0.2, slots=4)
+        ref = TuningService(bank, **kw)
+        shd = TuningService(bank, mesh=mesh, **kw)
+        for jid, q in queries.items():
+            ref.submit(jid, expected_len=len(q))
+            shd.submit(jid, expected_len=len(q))
+        dec_r, sims_r, fin_r = drive(ref, queries)
+        dec_s, sims_s, fin_s = drive(shd, queries)
+
+        # sharded == unsharded: scores to 1e-6, decisions identical
+        for tick_r, tick_s in zip(sims_r, sims_s):
+            assert tick_r.keys() == tick_s.keys()
+            for jid in tick_r:
+                err = float(np.abs(tick_r[jid] - tick_s[jid]).max())
+                assert err < 1e-6, (band, jid, err)
+        assert dec_r == dec_s, (band, dec_r, dec_s)
+        for jid in queries:
+            assert fin_r[jid].matched == fin_s[jid].matched
+            assert abs(fin_r[jid].corr - fin_s[jid].corr) < 1e-9
+
+        # dispatch-per-tick invariant holds under sharding
+        assert shd.dispatch_count == shd.ticks, \\
+            (shd.dispatch_count, shd.ticks)
+        print(f"SHARDED_TICK_OK band={band} "
+              f"dispatches={shd.dispatch_count} ticks={shd.ticks}")
+""")
+
+
+def test_sharded_tick_equals_unsharded():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], cwd=os.path.join(
+        os.path.dirname(__file__), ".."), env=env, capture_output=True,
+        text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert r.stdout.count("SHARDED_TICK_OK") == 2, r.stdout + r.stderr
