@@ -12,6 +12,14 @@
    K in {8, 64, 256} — distance-only mode, plus (at K=256) the fused
    on-device scoring tick and the PR-2 row-formulation jnp baseline.
    Gate: the device-resident wavefront tick is >= 3x the PR-2 path.
+4. Pruned scoring (the production scored tick at large K): a DIVERSE
+   256-reference bank (one distinct workload signature per row — the
+   regime the streaming wavelet prefilter targets) with every in-flight
+   job an instance of a profiled workload.  Gates: the pruned scored
+   tick is >= 4x the unpruned (PR-3) jnp scored tick on the same
+   workload, lands within 3x of the distance-only tick, keeps every
+   job's true reference alive, ranks the same leaders as the unpruned
+   service, and dispatches == ticks with re-packs counted separately.
 """
 
 from __future__ import annotations
@@ -271,9 +279,116 @@ def _throughput_rows():
     return rows
 
 
+#: pruned-tick scenario knobs: strict per-job top-P (the soundness
+#: margin rides on the in-flight DTW veto — see serve.tuning), pruning
+#: engaged once 10% of a job has been observed.
+PRUNED_TOP = 2
+PRUNED_MIN_FRACTION = 0.1
+
+
+def _diverse_bank(rng, k):
+    """One distinct workload signature per reference — the large-K regime
+    the streaming prefilter targets (a production reference DB is many
+    distinct workloads, not clones of five families)."""
+    buckets = (180, 220, 256, 300, 330, 360)
+    series = []
+    for i in range(k):
+        l = buckets[int(rng.integers(len(buckets)))]
+        t = np.linspace(0, 1, l, dtype=np.float32)
+        f = 1.5 + 0.07 * i
+        s = (0.5 + 0.28 * np.sin(2 * np.pi * f * t + 0.37 * i)
+             + 0.12 * np.sin(2 * np.pi * 3.1 * f * t)
+             + 0.06 * rng.normal(size=l).astype(np.float32))
+        series.append(np.clip(s, 0, 1).astype(np.float32))
+    return pack_series(series)
+
+
+def _pruned_scored_rows():
+    """stream_tick_scored_pruned_K256: the fused scoring tick with the
+    streaming-Haar prefilter shrinking the bank to the survivor union."""
+    k = max(BANK_SIZES)
+    rng = np.random.default_rng(7)
+    bank = _diverse_bank(rng, k)
+    qlen = TPUT_TICKS * TPUT_CHUNK
+    long_refs = [i for i in range(k) if bank.lengths[i] >= qlen + 8]
+    # pairs of jobs run the same workload (concurrent instances), four
+    # distinct workloads in flight
+    targets = [long_refs[(j // 2) * 17] for j in range(TPUT_JOBS)]
+
+    def queries(seed):
+        r = np.random.default_rng(seed)
+        return np.stack([np.clip(bank.row(targets[j])[:qlen]
+                                 + 0.05 * r.normal(size=qlen), 0, 1)
+                         .astype(np.float32) for j in range(TPUT_JOBS)])
+
+    def run(mode, seed=1):
+        svc = TuningService(
+            bank, score_in_flight=(mode != "distance"),
+            prefilter_top=PRUNED_TOP if mode == "pruned" else None,
+            prefilter_margin=0.0,
+            prefilter_min_fraction=PRUNED_MIN_FRACTION)
+        for j in range(TPUT_JOBS):
+            svc.submit(f"job{j}", expected_len=qlen)
+        qs = queries(seed)
+        for t in range(TPUT_TICKS):
+            for j in range(TPUT_JOBS):
+                svc.push(f"job{j}",
+                         qs[j, t * TPUT_CHUNK:(t + 1) * TPUT_CHUNK])
+            svc.tick()
+        assert svc.dispatch_count == TPUT_TICKS, \
+            "pruning broke the one-dispatch-per-tick invariant"
+        return svc
+
+    def timed(mode):
+        run(mode)                     # warm the jit cache, same seed
+        t0 = time.time()
+        svc = run(mode)
+        return svc, (time.time() - t0) / TPUT_TICKS * 1e6
+
+    svc_d, us_dist = timed("distance")
+    svc_f, us_full = timed("scored")
+    svc_p, us_pruned = timed("pruned")
+
+    # soundness: every job's true reference survived its prune, and the
+    # pruned service ranks the same leader per job as the unpruned one.
+    for j, tj in enumerate(targets):
+        job = svc_p._jobs[f"job{j}"]
+        assert tj in svc_p._packed_idx and (job.allowed is None
+                                            or job.allowed[tj]), \
+            f"prefilter dropped job{j}'s true reference {tj}"
+        lead_p = int(np.argmax(job.last_sims))
+        lead_f = int(np.argmax(svc_f._jobs[f"job{j}"].last_sims))
+        assert lead_p == lead_f, (j, lead_p, lead_f)
+    assert svc_p.repack_count >= 1
+
+    speedup = us_full / us_pruned
+    vs_dist = us_pruned / us_dist
+    survivors = len(svc_p._packed_idx)
+    print(f"[streaming] K={k:4d}: {us_full / 1e3:7.2f} ms/tick scored "
+          f"(unpruned) vs {us_pruned / 1e3:7.2f} ms/tick pruned "
+          f"(survivors={survivors}, repacks={svc_p.repack_count}) -> "
+          f"{speedup:.1f}x, {vs_dist:.2f}x the distance-only tick "
+          f"({us_dist / 1e3:.2f} ms)")
+    assert speedup >= 4.0, (
+        f"pruned scored tick speedup regressed: {speedup:.2f}x < 4x over "
+        f"the unpruned jnp scored tick")
+    assert us_pruned <= 3.0 * us_dist, (
+        f"pruned scored tick not within 3x of distance-only: "
+        f"{us_pruned / 1e3:.2f} ms vs {us_dist / 1e3:.2f} ms")
+    return [
+        ("stream_tick_scored_unpruned_K256", us_full,
+         f"diverse_bank;jobs={TPUT_JOBS}"),
+        ("stream_tick_scored_pruned_K256", us_pruned,
+         f"pruned_speedup={speedup:.2f}x;vs_distance={vs_dist:.2f}x"
+         f";survivors={survivors};repacks={svc_p.repack_count}"
+         f";top={PRUNED_TOP}"),
+    ]
+
+
 def run():
     return (_early_decision_rows() + _multiplex_rows()
-            + _equivalence_rows() + _throughput_rows())
+            + _equivalence_rows() + _throughput_rows()
+            + _pruned_scored_rows())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,89 @@
+"""Perf-regression guard: compare fresh ``benchmarks/run.py --json``
+output against the committed ``BENCH_*.json`` baselines.
+
+Exits non-zero when any row's ``us_per_call`` regressed more than
+``--threshold`` (default 25%) over its committed baseline — CI runs this
+in a non-blocking job, so a regression fails-with-warning instead of
+wedging the queue (shared runners are noisy; the committed baselines come
+from the bench host).  Rows present on only one side (new benches,
+retired benches) are reported but never fail the check.
+
+NOTE: ``run.py --json`` REWRITES the repo-root baselines as a side
+effect, so CI snapshots them (``--baseline-dir``) before running the
+benches; comparing against the freshly rewritten files would be vacuous.
+
+    python -m benchmarks.check_regression \
+        --fresh fresh_matching.json --fresh fresh_streaming.json \
+        [--baseline-dir DIR] [--threshold 0.25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in doc.get("rows", ())}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", action="append", required=True,
+                    help="fresh run.py --json output (repeatable)")
+    ap.add_argument("--baseline-dir", default=_REPO_ROOT,
+                    help="directory holding the committed BENCH_*.json "
+                         "snapshots")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="fail when us_per_call grows more than this "
+                         "fraction over baseline")
+    args = ap.parse_args()
+
+    baseline: dict = {}
+    for path in sorted(glob.glob(os.path.join(args.baseline_dir,
+                                              "BENCH_*.json"))):
+        baseline.update(load_rows(path))
+    if not baseline:
+        print(f"no BENCH_*.json baselines under {args.baseline_dir}; "
+              "nothing to compare", file=sys.stderr)
+        raise SystemExit(2)
+
+    fresh: dict = {}
+    for path in args.fresh:
+        fresh.update(load_rows(path))
+
+    regressions = []
+    for name in sorted(baseline):
+        if name not in fresh:
+            print(f"[skip] {name}: in baseline only (bench not run?)")
+            continue
+        base, now = baseline[name], fresh[name]
+        ratio = (now - base) / base if base > 0 else 0.0
+        flag = "REGRESSED" if ratio > args.threshold else "ok"
+        print(f"[{flag}] {name}: {base:.1f} -> {now:.1f} us "
+              f"({ratio:+.1%})")
+        if ratio > args.threshold:
+            regressions.append((name, base, now, ratio))
+    for name in sorted(set(fresh) - set(baseline)):
+        print(f"[new] {name}: {fresh[name]:.1f} us (no baseline yet)")
+
+    if regressions:
+        print(f"\n{len(regressions)} row(s) regressed more than "
+              f"{args.threshold:.0%} vs committed baselines:",
+              file=sys.stderr)
+        for name, base, now, ratio in regressions:
+            print(f"  {name}: {base:.1f} -> {now:.1f} us ({ratio:+.1%})",
+                  file=sys.stderr)
+        raise SystemExit(1)
+    print("\nno perf regressions beyond threshold")
+
+
+if __name__ == "__main__":
+    main()

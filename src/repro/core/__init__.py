@@ -18,7 +18,8 @@ from .similarity import (correlation, similarity, similarity_bank,
                          prefix_similarity_bank)
 from .wavelet import (haar_dwt, haar_idwt, compress, reconstruct,
                       wavelet_distance, wavelet_similarity, match_series_wavelet,
-                      haar_dwt_bank, compress_bank, wavelet_similarity_bank)
+                      haar_dwt_bank, compress_bank, wavelet_similarity_bank,
+                      StreamingHaar, coeff_similarity_bank)
 from .database import Entry, SeriesBank, pack_series, ReferenceDB
 from .signatures import (ChipSpec, TPU_V5E, OpCost, jaxpr_costs,
                          utilization_series, signature_of)
@@ -38,6 +39,7 @@ __all__ = [
     "haar_dwt", "haar_idwt", "compress", "reconstruct",
     "wavelet_distance", "wavelet_similarity", "match_series_wavelet",
     "haar_dwt_bank", "compress_bank", "wavelet_similarity_bank",
+    "StreamingHaar", "coeff_similarity_bank",
     "Entry", "SeriesBank", "pack_series", "ReferenceDB",
     "ChipSpec", "TPU_V5E", "OpCost", "jaxpr_costs", "utilization_series",
     "signature_of",

@@ -46,9 +46,11 @@ every DP in a single jit dispatch:
   layout so the reference axis vectorizes and shards, optionally fused
   with on-device open-end prefix scoring (warp-path correlation moments
   carried through the DP, [J, K] scores out — no row stack ever leaves
-  the device).  On TPU the distance-only tick routes to the Pallas
-  streaming kernel (``kernels.dtw.stream``) via
-  :func:`bank_extend_tick_dispatch`.
+  the device).  On TPU both tick flavors route to the Pallas streaming
+  kernels (``kernels.dtw.stream``): the distance-only tick via
+  :func:`bank_extend_tick_dispatch`, the fused scoring tick via
+  :func:`bank_extend_tick_scored_dispatch` (DP row AND the three moment
+  slabs pinned in VMEM across the whole chunk).
 
 Padding correctness: ``D[:, j]`` only ever depends on columns ``<= j`` and
 rows ``<= i``, so values in the padded tail cannot reach ``D[n-1, len_k-1]``
@@ -82,6 +84,7 @@ __all__ = [
     "bank_extend_tick",
     "bank_extend_tick_scored",
     "bank_extend_tick_dispatch",
+    "bank_extend_tick_scored_dispatch",
     "backtrack",
     "warp_to",
     "dtw_warp",
@@ -668,6 +671,66 @@ def bank_extend_tick_dispatch(rows, ns, bank_t, lengths, chunks, nvalid,
         return new_rows.transpose(0, 2, 1), ns2
     return bank_extend_tick(rows, ns, bank_t, lengths, chunks, nvalid,
                             qlens, band=band)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("band", "interpret", "block_k"))
+def _scored_kernel_tick(rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
+                        nvalid, qlens, band: Optional[int],
+                        interpret: bool, block_k: int):
+    """Fused Pallas scoring tick in tick (K-last) layout — the layout
+    shuffles into/out of the kernel's K-major convention, the pallas_call
+    itself, the query-moment fold and the open-end score reduction all
+    trace into ONE jit, so nothing materializes between them beyond what
+    XLA schedules."""
+    from ..kernels.dtw import stream_bank_extend_scored_kernel
+    rows_km, moms_km, _ = stream_bank_extend_scored_kernel(
+        rows.transpose(0, 2, 1), moms.transpose(0, 1, 3, 2), ns,
+        bank_t.T, lengths, chunks, nvalid, qlens, band=band,
+        block_k=block_k, interpret=interpret)
+    new_rows = rows_km.transpose(0, 2, 1)                  # [J, M, K]
+    new_moms = moms_km.transpose(0, 1, 3, 2)               # [3, J, M, K]
+    c = chunks.shape[1]
+    xm = chunks - _MOM_SHIFT
+    vmask = (jnp.arange(c, dtype=jnp.int32)[None, :]
+             < nvalid[:, None]).astype(jnp.float32)
+    sx2 = sx + jnp.sum(xm * vmask, axis=1)
+    sxx2 = sxx + jnp.sum(xm * xm * vmask, axis=1)
+    ns2 = ns + nvalid
+    scores = _moment_scores(new_rows, new_moms, ns2, sx2, sxx2, lengths)
+    return new_rows, new_moms, ns2, sx2, sxx2, scores
+
+
+def bank_extend_tick_scored_dispatch(rows, moms, ns, sx, sxx, bank_t,
+                                     lengths, chunks, nvalid, qlens,
+                                     band: Optional[int] = None,
+                                     use_kernel: Optional[bool] = None,
+                                     interpret: Optional[bool] = None,
+                                     block_k: int = 128):
+    """Fused scoring tick routed to the best backend: the moment-carrying
+    Pallas streaming kernel on TPU (DP row AND the three [BK, M] moment
+    slabs pinned in VMEM across the whole chunk), the jnp wavefront
+    everywhere else.  Tick layout in and out (rows [J, M, K], moms
+    [3, J, M, K]); returns the same 6-tuple as
+    :func:`bank_extend_tick_scored`.
+
+    ``use_kernel``/``interpret`` exist for tests: forcing the kernel path
+    on a CPU host runs it in Pallas interpret mode, which is how the
+    cell-by-cell equivalence suite pins kernel == jnp wavefront.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        if interpret is None:
+            from ..kernels.common import default_interpret
+            interpret = default_interpret()
+        return _scored_kernel_tick(rows, moms, ns, sx, sxx, bank_t,
+                                   lengths, chunks, nvalid, qlens,
+                                   band=band, interpret=interpret,
+                                   block_k=block_k)
+    return bank_extend_tick_scored(rows, moms, ns, sx, sxx, bank_t,
+                                   lengths, chunks, nvalid, qlens,
+                                   band=band)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -7,6 +7,17 @@ by M wavelet coefficients so equal-length series can be compared with a
 plain distance instead of DTW.  We implement a Haar DWT, top-|coefficient|
 truncation, and the fast matcher; ``benchmarks/bench_wavelet.py`` measures
 the speed/fidelity trade-off against full DTW matching.
+
+The **streaming** half (:class:`StreamingHaar`) is the online analogue of
+the offline prefilter: it maintains the Haar coefficients of an in-flight
+job's edge-extended prefix incrementally — each arriving chunk dirties
+only the coefficient pyramid to the right of the first changed sample, so
+an update costs O(size - n) instead of an O(size log size) full
+re-transform — and is pinned (tests/test_wavelet.py) to equal the offline
+:func:`haar_dwt` of the same padded prefix at every chunk boundary,
+bit-for-bit.  ``serve.tuning.TuningService`` ranks the reference bank
+against these prefix coefficients to prune the fused streaming-DTW tick
+at large K.
 """
 
 from __future__ import annotations
@@ -17,7 +28,8 @@ import numpy as np
 
 __all__ = ["haar_dwt", "haar_idwt", "compress", "reconstruct",
            "wavelet_distance", "wavelet_similarity", "match_series_wavelet",
-           "haar_dwt_bank", "compress_bank", "wavelet_similarity_bank"]
+           "haar_dwt_bank", "compress_bank", "wavelet_similarity_bank",
+           "StreamingHaar", "coeff_similarity_bank"]
 
 _SQRT2 = np.sqrt(2.0)
 
@@ -172,9 +184,99 @@ def wavelet_similarity_bank(x: np.ndarray, bank: np.ndarray,
         bp = bank[:, :n]
     cx = compress(xp, m)
     cb = compress_bank(haar_dwt_bank(bp), m)
+    return coeff_similarity_bank(cx, cb)
+
+
+def coeff_similarity_bank(cx: np.ndarray, cb: np.ndarray) -> np.ndarray:
+    """Cosine similarity of one (compressed) coefficient vector against a
+    ``[K, P]`` compressed coefficient bank -> [K] in [0, 1].
+
+    The scoring tail of :func:`wavelet_similarity_bank`, split out so the
+    streaming prefilter (which already holds :class:`StreamingHaar`
+    prefix coefficients) can rank the bank without re-transforming
+    anything."""
     num = cb @ cx
     den = np.linalg.norm(cx) * np.linalg.norm(cb, axis=1)
     sims = np.where(den < 1e-12,
                     np.all(np.isclose(cb, cx[None, :]), axis=1).astype(float),
                     num / np.maximum(den, 1e-300))
     return np.clip(sims, 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Streaming (prefix) Haar — the online prefilter's transform
+# ---------------------------------------------------------------------------
+
+class StreamingHaar:
+    """Incremental Haar decomposition of an in-flight job's prefix.
+
+    After ``update()`` has consumed ``n`` samples, :meth:`coeffs` equals
+    ``haar_dwt(edge-extension of x[:n] to the fixed power-of-two target
+    length)`` exactly — same layout (coarsest first), bitwise-identical
+    values — without re-transforming the whole series: appending a chunk
+    changes samples ``[n_old, size)`` (the new samples plus the moved
+    edge extension), so only pyramid positions at or right of
+    ``n_old >> level`` are recomputed per level.
+
+    ``total_len`` is the job's *expected* length (the prefilter target
+    resolution); a job that overruns the power-of-two target transparently
+    regrows to the next one (full O(size) rebuild, amortized by the
+    doubling).
+    """
+
+    def __init__(self, total_len: int) -> None:
+        if total_len < 1:
+            raise ValueError("total_len must be >= 1")
+        self.n = 0
+        self._samples = np.zeros((0,), np.float64)
+        self._alloc(_next_pow2(max(int(total_len), 2)))
+
+    def _alloc(self, size: int) -> None:
+        self.size = size
+        self._x = np.zeros((size,), np.float64)
+        self._detail = []
+        self._approx = []
+        while size > 1:
+            size //= 2
+            self._detail.append(np.zeros((size,), np.float64))
+            self._approx.append(np.zeros((size,), np.float64))
+
+    def _refresh(self, dirty: int) -> None:
+        """Recompute the pyramid from level-0 position ``dirty`` up."""
+        cur = self._x
+        for det, apx in zip(self._detail, self._approx):
+            dirty //= 2
+            even = cur[2 * dirty::2]
+            odd = cur[2 * dirty + 1::2]
+            det[dirty:] = (even - odd) / _SQRT2
+            apx[dirty:] = (even + odd) / _SQRT2
+            cur = apx
+
+    def update(self, chunk: np.ndarray) -> "StreamingHaar":
+        """Consume one chunk of samples; O(size - n + log size) work."""
+        chunk = np.asarray(chunk, np.float64).reshape(-1)
+        if chunk.shape[0] == 0:
+            return self
+        self._samples = np.concatenate([self._samples, chunk])
+        n0, self.n = self.n, self.n + chunk.shape[0]
+        if self.n > self.size:
+            self._alloc(_next_pow2(self.n))
+            n0 = 0
+        self._x[n0: self.n] = self._samples[n0: self.n]
+        self._x[self.n:] = self._samples[-1]        # edge extension
+        self._refresh(n0)
+        return self
+
+    def coeffs(self) -> np.ndarray:
+        """Haar coefficients of the edge-extended prefix, in
+        :func:`haar_dwt` layout (``[approx | coarsest .. finest
+        detail]``) at the current target ``size``."""
+        if not self._detail:                         # size == 1 degenerate
+            return self._x.copy()
+        return np.concatenate(
+            [self._approx[-1]] + self._detail[::-1])
+
+    def compressed(self, m: int) -> np.ndarray:
+        """Top-|coefficient| truncation of :meth:`coeffs` (the vector the
+        prefilter ranks the bank against)."""
+        return compress_bank(self.coeffs()[None, :], m)[0]

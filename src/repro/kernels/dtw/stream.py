@@ -23,9 +23,25 @@ on ragged banks, Sakoe-Chiba bands, and arbitrary chunkings):
 * the banded variant re-derives each reference's Sakoe-Chiba center from
   its true length and the job's expected query length every row.
 
-The kernel handles the distance-only tick (the large-K throughput mode).
-The fused scoring tick (warp-path moments + on-device open-end
-correlation) stays on the jnp wavefront path — see ``core/dtw.py``.
+Two kernels share the row-update machinery:
+
+* :func:`stream_bank_extend` — the distance-only tick (the large-K
+  throughput mode): one [BK, M] DP row slice per program.
+* :func:`stream_bank_extend_scored` — the FUSED scoring tick: the same
+  program additionally pins the three warp-path correlation-moment slabs
+  (sy, syy, sxy) of the DP row in VMEM and carries them through the DP
+  with backtrack-identical predecessor selection (argmin over diag /
+  vert / horiz with ``core.dtw.backtrack``'s tie order — diag first,
+  then vert).  The horizontal moment recurrence m(i, j) = m(i, j-1) -
+  pair(j-1) + pair(j) telescopes along a horizontal run to m(i, j) =
+  base(j0) + pair(j), where j0 is the run's anchor (the nearest
+  non-horiz cell at or left of j), so a row's moments solve in one
+  log2(M) anchored forward-fill instead of a sequential column walk —
+  the same depth as the min-plus distance scan.  Cell values and moments
+  match ``core.dtw._bank_extend_diag_impl`` cell-for-cell (pinned by
+  tests/test_kernels.py); the open-end score reduction stays outside the
+  kernel (``core.dtw.bank_extend_tick_scored_dispatch`` fuses it into
+  the same jit).
 """
 
 from __future__ import annotations
@@ -39,9 +55,14 @@ import numpy as np
 
 from jax.experimental import pallas as pl
 
-__all__ = ["stream_bank_extend_kernel", "stream_bank_extend"]
+__all__ = ["stream_bank_extend_kernel", "stream_bank_extend",
+           "stream_bank_extend_scored_kernel", "stream_bank_extend_scored"]
 
 _INF = 3.0e38  # plain float: jnp scalars become captured consts in Pallas
+
+#: Center for the correlation moments — MUST match ``core.dtw._MOM_SHIFT``
+#: (the jnp twin) so the two scored paths accumulate identical slabs.
+_MOM_SHIFT = 0.5
 
 
 def _minplus_scan2(a: jax.Array, s: jax.Array, m_len: int) -> jax.Array:
@@ -92,6 +113,128 @@ def _stream_kernel(ns_ref, nv_ref, ql_ref, x_ref, len_ref, rows_ref,
         return jnp.where(i < nv, new, row)
 
     out_ref[0] = jax.lax.fori_loop(0, c, body, rows_ref[0])
+
+
+def _fill_from_anchor(vals, anch, m_len: int):
+    """Forward-fill each row of ``vals`` [..., M] from the nearest column
+    at or left of it where ``anch`` is True (log2(M) Hillis-Steele steps).
+    Column 0 is always anchored in our use (a DP row's first cell can
+    never pick the horizontal predecessor), so every column resolves."""
+    n_steps = int(np.ceil(np.log2(max(m_len, 2))))
+    for t in range(n_steps):
+        off = 1 << t
+        v_l = jnp.pad(vals, [(0, 0)] * (vals.ndim - 1) + [(off, 0)],
+                      constant_values=0.0)[..., :-off]
+        a_l = jnp.pad(anch, ((0, 0), (off, 0)),
+                      constant_values=False)[:, :-off]
+        vals = jnp.where(anch[None] if vals.ndim == 3 else anch,
+                         vals, v_l)
+        anch = jnp.logical_or(anch, a_l)
+    return vals
+
+
+def _stream_scored_kernel(ns_ref, nv_ref, ql_ref, x_ref, len_ref, rows_ref,
+                          moms_ref, bank_ref, out_ref, mout_ref, *, c: int,
+                          m: int, band: Optional[int]):
+    """One (job, reference-tile) program of the FUSED tick: advance the
+    [BK, M] DP row slice AND its [3, BK, M] warp-path moment slabs by up
+    to ``c`` samples, entirely in VMEM.
+
+    Rows are clamped at ``_INF`` each update (like the wavefront jnp twin)
+    so predecessor selection ties resolve identically in saturated
+    regions; the moments of saturated cells are don't-care (no finite
+    path can descend from them) but stay finite."""
+    n0 = ns_ref[0]
+    nv = nv_ref[0]
+    ql = ql_ref[0]
+    x = x_ref[0]                                   # [C]
+    bank = bank_ref[...]                           # [BK, M]
+    bk = bank.shape[0]
+    jj = jax.lax.iota(jnp.int32, m)
+    yc = bank - _MOM_SHIFT                         # centered reference
+    yy = yc * yc
+
+    def body(i, carry):
+        row, moms = carry                          # [BK, M], [3, BK, M]
+        d = jnp.abs(x[i] - bank)
+        if band is not None:
+            lens = len_ref[...]
+            centers = ((n0 + i) * (lens - 1)) \
+                // jnp.maximum(ql - 1, 1)
+            d = jnp.where(jnp.abs(jj[None, :] - centers[:, None]) <= band,
+                          d, _INF)
+        corner = jnp.where((n0 == 0) & (i == 0), 0.0, _INF)
+        p_diag = jnp.concatenate(
+            [jnp.broadcast_to(corner, (bk, 1)).astype(row.dtype),
+             row[:, :-1]], axis=1)
+        p_vert = row
+        mn = jnp.minimum(p_vert, p_diag)
+        new = _minplus_scan2(d, mn + d, m)
+        if band is not None:
+            new = jnp.where(d >= _INF, _INF, new)
+        new = jnp.minimum(new, _INF)
+        # predecessor selection on the finished row: the horizontal
+        # predecessor D[i, j-1] is the new row shifted right one column.
+        p_horiz = jnp.concatenate(
+            [jnp.full((bk, 1), _INF, new.dtype), new[:, :-1]], axis=1)
+        sel_diag = p_diag <= jnp.minimum(p_vert, p_horiz)
+        sel_vert = jnp.logical_and(~sel_diag, p_vert <= p_horiz)
+        anch = jnp.logical_or(sel_diag, sel_vert)
+        # anchor cells read their predecessor's moments directly (the
+        # virtual corner / first-sample boundary shifts in zeros)...
+        m_diag = jnp.concatenate(
+            [jnp.zeros((3, bk, 1), moms.dtype), moms[:, :, :-1]], axis=2)
+        base = jnp.where(sel_diag[None], m_diag,
+                         jnp.where(sel_vert[None], moms, 0.0))
+        # ...horizontal runs telescope to base(anchor) + pair(j): fill
+        # each run from its anchor, then add this cell's aligned pair.
+        base = _fill_from_anchor(base, anch, m)
+        xm = x[i] - _MOM_SHIFT
+        new_moms = base + jnp.stack([yc, yy, xm * yc])
+        valid = i < nv
+        return (jnp.where(valid, new, row),
+                jnp.where(valid, new_moms, moms))
+
+    row0, moms0 = jax.lax.fori_loop(0, c, body,
+                                    (rows_ref[0], moms_ref[0]))
+    out_ref[0] = row0
+    mout_ref[0] = moms0
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("band", "block_k", "interpret"))
+def _stream_scored_call(rows, moms, ns, bank, lengths, chunks, nvalid,
+                        qlens, band: Optional[int], block_k: int,
+                        interpret: bool):
+    j, k, m = rows.shape
+    c = chunks.shape[1]
+    kernel = functools.partial(_stream_scored_kernel, c=c, m=m, band=band)
+    new_rows, new_moms = pl.pallas_call(
+        kernel,
+        grid=(j, k // block_k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # ns
+            pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # nvalid
+            pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # qlens
+            pl.BlockSpec((1, c), lambda ji, ki: (ji, 0)),      # chunk
+            pl.BlockSpec((block_k,), lambda ji, ki: (ki,)),    # lengths
+            pl.BlockSpec((1, block_k, m),
+                         lambda ji, ki: (ji, ki, 0)),          # rows
+            pl.BlockSpec((1, 3, block_k, m),
+                         lambda ji, ki: (ji, 0, ki, 0)),       # moments
+            pl.BlockSpec((block_k, m), lambda ji, ki: (ki, 0)),  # bank
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, m), lambda ji, ki: (ji, ki, 0)),
+            pl.BlockSpec((1, 3, block_k, m), lambda ji, ki: (ji, 0, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((j, k, m), jnp.float32),
+            jax.ShapeDtypeStruct((j, 3, k, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ns, nvalid, qlens, chunks, lengths, rows, moms, bank)
+    return new_rows, new_moms, ns + nvalid
 
 
 @functools.partial(jax.jit,
@@ -164,3 +307,56 @@ def stream_bank_extend(rows, ns, bank, lengths, chunks, nvalid, qlens,
     return stream_bank_extend_kernel(rows, ns, bank, lengths, chunks,
                                      nvalid, qlens, band=band,
                                      interpret=interpret)
+
+
+def stream_bank_extend_scored_kernel(rows, moms, ns, bank, lengths, chunks,
+                                     nvalid, qlens,
+                                     band: Optional[int] = None,
+                                     block_k: int = 128,
+                                     interpret: bool = True):
+    """Advance J streaming DPs AND their warp-path correlation moments by
+    one padded chunk — one pallas_call.
+
+    rows [J, K, M] f32; moms [3, J, K, M] f32 (sy, syy, sxy slabs of the
+    current DP row's cells); other args as
+    :func:`stream_bank_extend_kernel`.  Returns ``(rows, moms, ns)`` with
+    the same layouts.  The open-end score reduction over the returned
+    slabs lives in ``core.dtw`` (``bank_extend_tick_scored_dispatch``)
+    so the moment semantics stay defined in exactly one place.
+    """
+    rows = jnp.asarray(rows, jnp.float32)
+    moms = jnp.asarray(moms, jnp.float32)
+    bank = jnp.asarray(bank, jnp.float32)
+    chunks = jnp.asarray(chunks, jnp.float32)
+    ns = jnp.asarray(ns, jnp.int32)
+    nvalid = jnp.asarray(nvalid, jnp.int32)
+    qlens = jnp.asarray(qlens, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    j, k, m = rows.shape
+    bk = min(block_k, k)
+    pad = (-k) % bk
+    if pad:
+        rows = jnp.concatenate(
+            [rows, jnp.full((j, pad, m), _INF, jnp.float32)], axis=1)
+        moms = jnp.concatenate(
+            [moms, jnp.zeros((3, j, pad, m), jnp.float32)], axis=2)
+        bank = jnp.concatenate(
+            [bank, jnp.zeros((pad, m), jnp.float32)], axis=0)
+        lengths = jnp.concatenate(
+            [lengths, jnp.ones((pad,), jnp.int32)], axis=0)
+    new_rows, new_moms, ns2 = _stream_scored_call(
+        rows, moms.transpose(1, 0, 2, 3), ns, bank, lengths, chunks,
+        nvalid, qlens, band, bk, interpret)
+    return (new_rows[:, :k], new_moms.transpose(1, 0, 2, 3)[:, :, :k],
+            ns2)
+
+
+def stream_bank_extend_scored(rows, moms, ns, bank, lengths, chunks,
+                              nvalid, qlens, band: Optional[int] = None,
+                              interpret: Optional[bool] = None):
+    """Backend-defaulted entry for the fused scoring tick."""
+    from ..common import default_interpret
+    interpret = default_interpret() if interpret is None else interpret
+    return stream_bank_extend_scored_kernel(rows, moms, ns, bank, lengths,
+                                            chunks, nvalid, qlens,
+                                            band=band, interpret=interpret)

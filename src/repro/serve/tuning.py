@@ -21,15 +21,38 @@ Architecture (device-resident tick)
   [C, S, K, M] ever crosses the device boundary — the PR-2 design shipped
   the full row stack to the host and backtracked in numpy every tick.
   ``dispatch_count`` records the invariant: dispatches == ticks(with data)
-  no matter how many jobs are in flight.  On TPU backends the distance-
-  only tick routes to the Pallas streaming kernel (``kernels.dtw.stream``,
-  DP row pinned in VMEM across the chunk).
+  no matter how many jobs are in flight.  On TPU backends BOTH tick
+  flavors route to the Pallas streaming kernels (``kernels.dtw.stream``):
+  the distance-only tick pins the DP row in VMEM across the chunk, the
+  scoring tick additionally pins the three warp-path moment slabs and
+  carries them through the DP in the same program.
 * ``mesh=`` shards the bank: a 1-D device mesh partitions the ``[M, K]``
   reference bank and every ``[.., K]`` state slab over its single axis via
   ``sharding.compat.shard_map`` (tick fan-out, ``[S, K]`` score gather).
   K scales with device count; the computation is per-reference, so the
   sharded tick is bit-identical to the unsharded one and remains ONE
   dispatch.
+* ``prefilter_top=`` prunes the bank at large K: each in-flight job keeps
+  incremental streaming-Haar prefix coefficients
+  (``core.wavelet.StreamingHaar``), and once ``prefilter_min_fraction``
+  of the job has been observed its live-reference set shrinks (sticky,
+  per job) to the union of two top-P votes — the wavelet prefix ranking
+  (coarse, cheap, warp-blind) and the fused tick's own open-end DTW
+  scores (the soundness veto: a reference that matches only under
+  warping ranks poorly in the rigid wavelet domain but keeps a high warp
+  correlation, and must not be evicted), each widened by
+  ``prefilter_margin``.  The device state is RE-PACKED (K-last gather of
+  the ``[S, M, K]`` row/moment slabs and the ``[M, K]`` bank, padded to
+  a power-of-two, device-count-multiple bucket so sharding still
+  divides and jit shapes stay few) only when the survivor union crosses
+  a bucket boundary or a fresh job re-widens it; re-packs are counted in
+  ``repack_count``, never in ``dispatch_count`` — a tick stays one
+  dispatch.  Scores of pruned references surface as ``-inf`` in the
+  job's view and can never lead; :meth:`finish` always scores the FULL
+  bank offline, so final verdicts are pruning-independent by
+  construction, and tests pin the in-flight decisions (matched workload,
+  ``decided_at_fraction``) equal to the unpruned service's on the paper
+  traces.
 * The early-decision rule is confidence/abstain: emit a
   :class:`core.tuner.TuneDecision` only once the leading workload has
   cleared the threshold AND led the runner-up by ``margin`` for
@@ -66,6 +89,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import dtw as _dtw
+from ..core import wavelet as _wavelet
 from ..core.database import ReferenceDB, SeriesBank
 from ..core.filters import StreamingFilter
 from ..core.similarity import MATCH_THRESHOLD, similarity_bank
@@ -92,6 +116,14 @@ class InFlightJob:
     #: last [K] on-device prefix-score row seen for this job (float64 on
     #: the host side; None until the first scoring tick touches the job).
     last_sims: Optional[np.ndarray] = None
+    #: streaming-Haar prefix coefficients of the (filtered) query — the
+    #: wavelet prefilter's per-job transform state (None w/o prefilter).
+    haar: Optional[_wavelet.StreamingHaar] = None
+    #: bool [K] over the FULL bank: references still live for this job.
+    #: None means "all" (prefilter off, or not engaged yet).  Monotone:
+    #: once False a reference never comes back for this job, so its DP
+    #: column may leave the packed tick without ever going stale for us.
+    allowed: Optional[np.ndarray] = None
 
     @property
     def fraction_seen(self) -> float:
@@ -113,6 +145,11 @@ class TuningService:
     ``mesh=`` (a 1-D ``jax.sharding.Mesh``) partitions the reference axis
     K over the mesh devices; the bank is padded up to a device-count
     multiple internally and padded rows never surface in scores.
+
+    ``prefilter_top=P`` enables the streaming wavelet prefilter: ticks
+    dispatch over the pruned survivor union instead of all K references
+    (see the module docstring for the pruning rule and its soundness
+    veto).  Composes with ``mesh=``; off by default.
     """
 
     def __init__(self, refs: Union[ReferenceDB, SeriesBank], *,
@@ -123,7 +160,11 @@ class TuningService:
                  denoise: bool = False,
                  score_in_flight: Optional[bool] = None,
                  collect_rows: Optional[bool] = None,
-                 mesh: Optional[jax.sharding.Mesh] = None) -> None:
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 prefilter_top: Optional[int] = None,
+                 prefilter_margin: float = 0.05,
+                 prefilter_min_fraction: float = 0.1,
+                 prefilter_coeffs: int = 64) -> None:
         if isinstance(refs, ReferenceDB):
             self.db: Optional[ReferenceDB] = refs
             self.bank = refs.bank()
@@ -146,9 +187,24 @@ class TuningService:
         self.denoise = denoise
         self.score_in_flight = score_in_flight
         self.mesh = mesh
+        if prefilter_top is not None and prefilter_top < 1:
+            raise ValueError("prefilter_top must be >= 1 (or None)")
+        if prefilter_top is not None and not score_in_flight:
+            # without the fused tick's scores there is no DTW veto: the
+            # warp-blind wavelet ranking alone evicts warp-matching
+            # references (the paper's exim-vs-wordcount case), and sticky
+            # pruning makes that irrecoverable in flight.
+            raise ValueError("prefilter_top needs score_in_flight=True "
+                             "(the prune rule's soundness veto runs on "
+                             "the in-flight DTW scores)")
+        self.prefilter_top = prefilter_top
+        self.prefilter_margin = prefilter_margin
+        self.prefilter_min_fraction = prefilter_min_fraction
+        self.prefilter_coeffs = prefilter_coeffs
 
         k, m = self.bank.series.shape
         self._k = k
+        self._m = m
         ndev = 1
         axis = None
         if mesh is not None:
@@ -157,37 +213,36 @@ class TuningService:
                                  f"axis); got axes {mesh.axis_names}")
             axis = mesh.axis_names[0]
             ndev = mesh.devices.size
-        kp = k + ((-k) % ndev)
-        series_t = np.zeros((m, kp), np.float32)
-        series_t[:, :k] = self.bank.series.T
-        lengths = np.ones((kp,), np.int32)
-        lengths[:k] = self.bank.lengths
-
-        def put(arr, spec):
-            if mesh is None:
-                return jnp.asarray(arr)
-            return jax.device_put(arr, jax.sharding.NamedSharding(
-                mesh, jax.sharding.PartitionSpec(*spec)))
-
-        self._bank_t = put(series_t, (None, axis))
-        self._lengths = put(lengths, (axis,))
-        self._rows = put(np.full((slots, m, kp), float(_dtw._INF),
-                                 np.float32), (None, None, axis))
-        self._moms = put(np.zeros((3, slots, m, kp), np.float32),
-                         (None, None, None, axis)) \
-            if score_in_flight else None
-        self._ns = put(np.zeros((slots,), np.int32), (None,))
-        self._sx = put(np.zeros((slots,), np.float32), (None,))
-        self._sxx = put(np.zeros((slots,), np.float32), (None,))
-        self._qlens = np.zeros((slots,), np.int32)
+        self._ndev = ndev
+        self._axis = axis
+        # full-bank host copies: the pruned tick re-packs (gathers) state
+        # and bank columns from these, so the full [M, K] layout is the
+        # single source of truth whatever subset is currently on device.
+        self._full_series_t = np.ascontiguousarray(
+            self.bank.series.T.astype(np.float32))
+        self._full_lengths = self.bank.lengths.astype(np.int32)
+        self._wcoeff_cache: Dict[Tuple[int, int], np.ndarray] = {}
         self._free: List[int] = list(range(slots - 1, -1, -1))
         self._jobs: Dict[str, InFlightJob] = {}
+
+        self._ns = self._put(np.zeros((slots,), np.int32), (None,))
+        self._sx = self._put(np.zeros((slots,), np.float32), (None,))
+        self._sxx = self._put(np.zeros((slots,), np.float32), (None,))
+        self._qlens = np.zeros((slots,), np.int32)
+        self._packed_idx = np.arange(k)
+        self._pack_device_state(self._packed_idx, rows=None, moms=None)
         self._tick_fn = self._build_tick_fn(axis)
 
         #: device dispatches issued by :meth:`tick` — the scaling invariant
         #: is one dispatch per data-carrying tick, however many jobs are
         #: live (and however many devices the bank is sharded over).
         self.dispatch_count = 0
+        #: prefilter re-pack events: the (occasional) device uploads that
+        #: shrink or re-grow the packed bank/state when the survivor set
+        #: changes.  Counted SEPARATELY from ``dispatch_count`` — a
+        #: re-pack is state motion, not a tick dispatch, and the
+        #: dispatches == data-ticks invariant must survive pruning.
+        self.repack_count = 0
         #: offline ``similarity_bank`` dispatches issued by :meth:`finish`
         #: (the end-of-job exact-verdict recompute; not part of the tick
         #: hot path).
@@ -197,6 +252,194 @@ class TuningService:
         # the internal drain tick of another job's finish()); surfaced by
         # the next tick() return so no decision is ever dropped.
         self._undelivered: Dict[str, TuneDecision] = {}
+
+    # -- packed device state (full bank or pruned survivor subset) -----------
+    def _put(self, arr, spec):
+        if self.mesh is None:
+            return jnp.asarray(arr)
+        return jax.device_put(arr, jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec(*spec)))
+
+    def _k_bucket(self, k: int) -> int:
+        """Padded width of a pruned pack: power-of-two (so re-packs cycle
+        through at most log2(K) compiled tick shapes), at least one VPU
+        sublane tile, and a device-count multiple so the shard_map fan-out
+        still divides evenly."""
+        kp = max(8, 1 << (max(k, 1) - 1).bit_length())
+        return kp + ((-kp) % self._ndev)
+
+    def _pack_device_state(self, idx: np.ndarray, rows, moms) -> None:
+        """(Re)build the device-resident tick arrays over bank columns
+        ``idx`` (full-bank order preserved).  ``rows``/``moms`` carry the
+        surviving columns' DP state ([S, M, K_old] / [3, S, M, K_old]
+        DEVICE arrays aligned with the PREVIOUS ``_packed_idx``) —
+        re-packing gathers the surviving columns on device, so a re-pack
+        never round-trips the state slabs through the host.  Columns
+        without prior state start fresh (+inf row, zero moments) — exact
+        for jobs that have consumed nothing, don't-care for jobs whose
+        prefilter already dropped the reference (their scores for it are
+        masked on the way out of every tick).
+
+        The full pack keeps the legacy padding (K up to a device-count
+        multiple); pruned packs pad to :meth:`_k_bucket`.
+        """
+        k_new, m, axis = len(idx), self._m, self._axis
+        kp = self._k + ((-self._k) % self._ndev) if k_new == self._k \
+            else self._k_bucket(k_new)
+        series_t = np.zeros((m, kp), np.float32)
+        series_t[:, :k_new] = self._full_series_t[:, idx]
+        lengths = np.ones((kp,), np.int32)
+        lengths[:k_new] = self._full_lengths[idx]
+        self._bank_t = self._put(series_t, (None, axis))
+        self._lengths = self._put(lengths, (axis,))
+        if rows is None:
+            self._rows = self._put(
+                np.full((self.slots, m, kp), float(_dtw._INF), np.float32),
+                (None, None, axis))
+            self._moms = self._put(
+                np.zeros((3, self.slots, m, kp), np.float32),
+                (None, None, None, axis)) if self.score_in_flight else None
+        else:
+            pos = np.full((self._k,), -1, np.int64)
+            pos[self._packed_idx] = np.arange(len(self._packed_idx))
+            src = np.concatenate([pos[idx], np.full((kp - k_new,), -1)])
+            gather = jnp.asarray(np.maximum(src, 0), jnp.int32)
+            fresh = jnp.asarray(src < 0)
+            new_rows = jnp.where(fresh[None, None, :],
+                                 _dtw._INF, jnp.take(rows, gather, axis=2))
+            self._rows = self._put(new_rows, (None, None, axis))
+            if moms is not None:
+                self._moms = self._put(
+                    jnp.where(fresh[None, None, None, :], 0.0,
+                              jnp.take(moms, gather, axis=3)),
+                    (None, None, None, axis))
+        self._packed_idx = np.asarray(idx)
+        self._kp = kp
+
+    # -- streaming wavelet prefilter -----------------------------------------
+    def _ref_prefix_coeffs(self, size: int, n: int) -> np.ndarray:
+        """Compressed Haar coefficient bank of every reference's first
+        ``n`` samples, edge-extended to target length ``size`` — the
+        apples-to-apples counterpart of a job's :class:`StreamingHaar`
+        prefix coefficients (sampling rates are shared, so ``n`` job
+        samples correspond to ~``n`` reference samples; comparing the
+        prefix against FULL references would just correlate the job's
+        constant extension tail against unseen reference structure).
+        Cached per (size, n): lockstep jobs share the transform."""
+        key = (size, n)
+        cb = self._wcoeff_cache.get(key)
+        if cb is None:
+            series = self.bank.series.astype(np.float64)
+            w = series.shape[1]
+            cut = np.minimum(self._full_lengths, n)             # [K]
+            edge = np.take_along_axis(series, (cut - 1)[:, None], axis=1)
+            bp = np.where(np.arange(w)[None, :] < cut[:, None], series,
+                          edge)
+            bp = np.pad(bp, ((0, 0), (0, size - w)), mode="edge") \
+                if size >= w else bp[:, :size]
+            cb = _wavelet.compress_bank(_wavelet.haar_dwt_bank(bp),
+                                        self.prefilter_coeffs)
+            if len(self._wcoeff_cache) >= 16:
+                self._wcoeff_cache.pop(next(iter(self._wcoeff_cache)))
+            self._wcoeff_cache[key] = cb
+        return cb
+
+    @staticmethod
+    def _top_p_with_margin(sims: np.ndarray, allowed: np.ndarray, p: int,
+                           margin: float) -> np.ndarray:
+        """Bool keep-mask: references ranking in the top ``p`` of ``sims``
+        among ``allowed``, widened by ``margin`` (anything within margin
+        of the p-th best survives too, so near-ties can't be evicted on
+        ranking noise)."""
+        ranked = np.where(allowed, sims, -np.inf)
+        kth = np.partition(ranked, -p)[-p]
+        return ranked >= kth - margin
+
+    def _update_prefilter(self, pending) -> None:
+        """Shrink each touched job's live-reference set.  Two top-P (+
+        soundness margin) rules vote and the UNION survives:
+
+        * the streaming-Haar ranking (coarse, warp-blind, cheap) proposes
+          the bulk prune — at large K this is what collapses the tick;
+        * the job's own in-flight open-end DTW scores (from the previous
+          fused tick) veto the eviction of anything still plausibly
+          winning — the Haar cosine compares prefixes rigidly, so a
+          reference that matches the job only under warping (the paper's
+          exim-vs-wordcount case) ranks poorly there while its warp
+          correlation is already high; without the veto the prefilter
+          would drop the eventual winner.
+
+        Sticky per job: sets only ever shrink, so a dropped reference's
+        DP column never has to re-enter for a job that already has
+        samples (re-entry would be stale)."""
+        p = self.prefilter_top
+        for job, _ in pending:
+            if job.haar is None or job.n < 2:
+                continue
+            if job.fraction_seen < self.prefilter_min_fraction:
+                continue
+            if self.score_in_flight and job.last_sims is None:
+                continue          # no DTW veto yet: too early to prune
+            allowed = job.allowed if job.allowed is not None \
+                else np.ones((self._k,), bool)
+            if int(allowed.sum()) <= p:
+                continue                              # converged
+            keep = self._top_p_with_margin(
+                _wavelet.coeff_similarity_bank(
+                    job.haar.compressed(self.prefilter_coeffs),
+                    self._ref_prefix_coeffs(job.haar.size, job.n)),
+                allowed, p, self.prefilter_margin)
+            if job.last_sims is not None:
+                dsims = np.where(allowed,
+                                 np.nan_to_num(job.last_sims, neginf=-1.0),
+                                 -np.inf)
+                keep |= self._top_p_with_margin(dsims, allowed, p,
+                                                self.prefilter_margin)
+                # the early-decision margin compares the leader WORKLOAD
+                # against the runner-up WORKLOAD: protect the best
+                # reference of each of the current top-2 workloads, or
+                # evicting the whole runner-up family would floor its
+                # score to -1.0 and make the margin gate vacuously true.
+                seen = set()
+                for r in np.argsort(dsims)[::-1]:
+                    if not np.isfinite(dsims[r]) or len(seen) == 2:
+                        break
+                    if self._labels[r] not in seen:
+                        seen.add(self._labels[r])
+                        keep[r] = True
+            job.allowed = np.logical_and(allowed, keep)
+
+    def _survivors(self) -> np.ndarray:
+        """Union of the active jobs' live sets -> full-bank index array.
+        A job whose prefilter has not engaged needs every reference."""
+        mask = np.zeros((self._k,), bool)
+        for job in self._jobs.values():
+            if job.allowed is None:
+                return np.arange(self._k)
+            mask |= job.allowed
+        return np.flatnonzero(mask)
+
+    def _maybe_repack(self) -> None:
+        """Re-pack the device state when the survivor union has outgrown
+        the packed columns (a fresh job needs everything again) or when it
+        has shrunk past the next power-of-two bucket.  A packed set that
+        merely *contains* the survivors is left alone: the extra columns
+        cost one bucket's worth of compute at most, while every re-pack
+        is a state upload and (first time per shape) an XLA compile —
+        chasing each membership change would churn far more than the
+        stragglers cost."""
+        if self.prefilter_top is None:
+            return
+        idx = self._survivors()
+        grown = not np.isin(idx, self._packed_idx,
+                            assume_unique=True).all()
+        full = len(idx) == self._k
+        kp_target = self._k + ((-self._k) % self._ndev) if full \
+            else self._k_bucket(len(idx))
+        if not grown and kp_target >= self._kp:
+            return
+        self._pack_device_state(idx, self._rows, self._moms)
+        self.repack_count += 1
 
     # -- tick compilation ----------------------------------------------------
     def _build_tick_fn(self, axis: Optional[str]):
@@ -208,8 +451,11 @@ class TuningService:
         band = self.band
         if self.score_in_flight:
             if self.mesh is None:
-                return functools.partial(_dtw.bank_extend_tick_scored,
-                                         band=band)
+                # routes to the moment-carrying Pallas streaming kernel on
+                # TPU (DP row + (sy, syy, sxy) slabs pinned in VMEM across
+                # the chunk), the jnp wavefront elsewhere.
+                return functools.partial(
+                    _dtw.bank_extend_tick_scored_dispatch, band=band)
 
             def inner(rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
                       nvalid, qlens):
@@ -266,7 +512,9 @@ class TuningService:
         self._sxx = self._sxx.at[slot].set(0.0)
         self._qlens[slot] = expected_len
         job = InFlightJob(job_id=job_id, slot=slot, expected_len=expected_len,
-                          filt=StreamingFilter() if self.denoise else None)
+                          filt=StreamingFilter() if self.denoise else None,
+                          haar=_wavelet.StreamingHaar(expected_len)
+                          if self.prefilter_top is not None else None)
         self._jobs[job_id] = job
         return job
 
@@ -300,9 +548,20 @@ class TuningService:
             if job.filt is not None:
                 chunk = job.filt(chunk)
             job.x.append(chunk)
+            if job.haar is not None:
+                job.haar.update(chunk)
             pending.append((job, chunk))
         if not pending:
             return out
+
+        # prefilter re-pack: if the last tick's pruning shrank the union
+        # of live sets past a bucket boundary (or a fresh job re-widened
+        # it), re-pack the device state before dispatching (counted in
+        # ``repack_count``, NOT ``dispatch_count`` — the tick below stays
+        # the one dispatch).
+        if self.prefilter_top is not None:
+            self._maybe_repack()
+        k_live = len(self._packed_idx)
 
         c = _dtw._chunk_bucket(max(ch.shape[0] for _, ch in pending))
         chunks = np.zeros((self.slots, c), np.float32)
@@ -318,8 +577,12 @@ class TuningService:
                 self._rows, self._moms, self._ns, self._sx, self._sxx,
                 self._bank_t, self._lengths, jnp.asarray(chunks),
                 jnp.asarray(nvalid), jnp.asarray(self._qlens))
-            # the tick's ONLY device->host transfer: [S, K] scores.
-            sims_all = np.asarray(scores, np.float64)[:, : self._k]
+            # the tick's ONLY device->host transfer: the [S, K_live]
+            # scores, scattered back to full-bank columns (pruned-out
+            # references read -inf — never a leader, never a runner-up).
+            sims_all = np.full((self.slots, self._k), -np.inf)
+            sims_all[:, self._packed_idx] = \
+                np.asarray(scores, np.float64)[:, :k_live]
         else:
             self._rows, self._ns = self._tick_fn(
                 self._rows, self._ns, self._bank_t, self._lengths,
@@ -331,11 +594,21 @@ class TuningService:
             job.n += ch.shape[0]
             decision = None
             if sims_all is not None:
-                job.last_sims = sims_all[job.slot]
+                sims = sims_all[job.slot]
+                if job.allowed is not None:
+                    # a column another job kept alive may be pruned for
+                    # THIS job: mask it out of this job's view.
+                    sims = np.where(job.allowed, sims, -np.inf)
+                job.last_sims = sims
                 if job.early is None:
                     decision = self._maybe_decide(job)
             if out.get(job.job_id) is None:
                 out[job.job_id] = decision
+        # prune with THIS tick's information (scores just computed, n just
+        # advanced): eviction decisions lag the data by zero ticks, the
+        # re-pack they imply happens at the top of the next tick.
+        if self.prefilter_top is not None:
+            self._update_prefilter(pending)
         return out
 
     # -- decision rule -------------------------------------------------------

@@ -99,6 +99,133 @@ def test_gla_kernel_matches_model_path():
                                atol=1e-5)
 
 
+def _dyadic_series(rng, n, denom=8, hi=9):
+    """Series on a coarse dyadic grid: every DTW cost, path sum and
+    correlation-moment sum is exactly representable in f32, so the scan,
+    wavefront and Pallas formulations produce BIT-IDENTICAL cells and the
+    warp-path predecessor argmin has no float-noise tie ambiguity —
+    cell-by-cell equivalence can be asserted exactly instead of modulo
+    tie-flip propagation."""
+    return (rng.integers(0, hi, n) / float(denom)).astype(np.float32)
+
+
+@pytest.mark.parametrize("band,block_k", [(None, 128), (6, 128), (None, 4),
+                                          (6, 4)])
+def test_stream_scored_kernel_cell_by_cell(band, block_k):
+    """Moment-carrying Pallas streaming kernel == the jnp scored wavefront
+    (`bank_extend_tick_scored`) AND the row-formulation reference
+    (`_bank_extend_many`) on every cell — DP rows, (sy, syy, sxy) moment
+    slabs and open-end scores alike — across ragged reference banks,
+    Sakoe-Chiba bands, ragged per-job chunks (including empty ones) and a
+    block_k that forces reference-tile padding.  Exact comparison on
+    dyadic-grid data (see `_dyadic_series`)."""
+    import jax.numpy as jnp
+    from repro.core import dtw as _dtw
+    from repro.core.database import pack_series
+
+    rng = np.random.default_rng(11 if band is None else band + block_k)
+    series = [_dyadic_series(rng, int(rng.integers(12, 30)))
+              for _ in range(7)]
+    bank = pack_series(series)
+    k, m = bank.series.shape
+    J, C = 3, 8
+    qlens = jnp.full((J,), 4 * C, jnp.int32)
+    bank_t = jnp.asarray(bank.series.T)
+    lengths = jnp.asarray(bank.lengths)
+    rows_w = jnp.full((J, m, k), _dtw._INF)
+    moms_w = jnp.zeros((3, J, m, k))
+    ns_w = jnp.zeros((J,), jnp.int32)
+    sx_w = jnp.zeros((J,))
+    sxx_w = jnp.zeros((J,))
+    rows_p, moms_p, ns_p, sx_p, sxx_p = rows_w, moms_w, ns_w, sx_w, sxx_w
+    rows_h = jnp.full((J, k, m), _dtw._INF)
+    ns_h = jnp.zeros((J,), jnp.int32)
+    for _ in range(4):
+        nv = jnp.asarray(rng.integers(0, C + 1, size=J).astype(np.int32))
+        ch = jnp.asarray((rng.integers(0, 9, (J, C)) / 8.0)
+                         .astype(np.float32))
+        rows_w, moms_w, ns_w, sx_w, sxx_w, sc_w = \
+            _dtw.bank_extend_tick_scored(
+                rows_w, moms_w, ns_w, sx_w, sxx_w, bank_t, lengths, ch,
+                nv, qlens, band=band)
+        rows_p, moms_p, ns_p, sx_p, sxx_p, sc_p = \
+            _dtw.bank_extend_tick_scored_dispatch(
+                rows_p, moms_p, ns_p, sx_p, sxx_p, bank_t, lengths,
+                ch, nv, qlens, band=band, use_kernel=True,
+                interpret=True, block_k=block_k)
+        rows_h, ns_h, _ = _dtw._bank_extend_many(
+            rows_h, ns_h, jnp.asarray(bank.series), lengths, ch, nv,
+            qlens, band, False)
+        rp, rw = np.asarray(rows_p), np.asarray(rows_w)
+        rh = np.asarray(rows_h).transpose(0, 2, 1)
+        finite = rw < 1e37
+        assert (finite == (rp < 1e37)).all()
+        assert (finite == (rh < 1e37)).all()
+        np.testing.assert_array_equal(rp[finite], rw[finite])
+        np.testing.assert_array_equal(rp[finite], rh[finite])
+        mp, mw = np.asarray(moms_p), np.asarray(moms_w)
+        fin3 = np.broadcast_to(finite[None], mp.shape)
+        np.testing.assert_array_equal(mp[fin3], mw[fin3])
+        np.testing.assert_array_equal(np.asarray(sc_p), np.asarray(sc_w))
+    np.testing.assert_array_equal(np.asarray(ns_p), np.asarray(ns_w))
+    np.testing.assert_array_equal(np.asarray(ns_p), np.asarray(ns_h))
+
+
+def test_stream_scored_kernel_scores_match_host_backtrack():
+    """Through the Pallas path, the fused on-device scores still reproduce
+    the host backtrack scorer on smooth real-valued data (tolerance-level:
+    float noise can flip warp-path ties, which moves individual moments
+    but not scores)."""
+    import jax.numpy as jnp
+    from repro.core import dtw as _dtw
+    from repro.core.database import pack_series
+    from repro.core.similarity import prefix_similarity_bank
+
+    rng = np.random.default_rng(5)
+    series = []
+    for i in range(5):
+        l = int(rng.integers(16, 40))
+        t = np.linspace(0, 1, l, dtype=np.float32)
+        series.append(np.clip(
+            0.5 + 0.3 * np.sin(2 * np.pi * (1.5 + i) * t)
+            + 0.05 * rng.normal(size=l), 0, 1).astype(np.float32))
+    bank = pack_series(series)
+    k, m = bank.series.shape
+    J, C, nticks = 2, 8, 4
+    qlen = nticks * C
+    qs = np.stack([np.clip(
+        0.5 + 0.3 * np.sin(2 * np.pi * (2 + j) * np.linspace(0, 1, qlen))
+        + 0.05 * rng.normal(size=qlen), 0, 1).astype(np.float32)
+        for j in range(J)])
+    rows = jnp.full((J, m, k), _dtw._INF)
+    moms = jnp.zeros((3, J, m, k))
+    ns = jnp.zeros((J,), jnp.int32)
+    sx = jnp.zeros((J,))
+    sxx = jnp.zeros((J,))
+    qlens = jnp.full((J,), qlen, jnp.int32)
+    rows_h = jnp.full((J, k, m), _dtw._INF)
+    ns_h = jnp.zeros((J,), jnp.int32)
+    collected = []
+    for t0 in range(nticks):
+        ch = jnp.asarray(qs[:, t0 * C:(t0 + 1) * C])
+        nv = jnp.full((J,), C, jnp.int32)
+        rows, moms, ns, sx, sxx, scores = \
+            _dtw.bank_extend_tick_scored_dispatch(
+                rows, moms, ns, sx, sxx, jnp.asarray(bank.series.T),
+                jnp.asarray(bank.lengths), ch, nv, qlens,
+                use_kernel=True, interpret=True)
+        rows_h, ns_h, coll = _dtw._bank_extend_many(
+            rows_h, ns_h, jnp.asarray(bank.series),
+            jnp.asarray(bank.lengths), ch, nv, qlens, None, True)
+        collected.append(np.asarray(coll))
+        stack = np.concatenate(collected)
+        dev = np.asarray(scores)
+        for j in range(J):
+            host = prefix_similarity_bank(qs[j, :(t0 + 1) * C], bank,
+                                          stack[:, j])
+            np.testing.assert_allclose(dev[j], host, atol=2e-3)
+
+
 @pytest.mark.parametrize("band,block_k", [(None, 128), (6, 128), (None, 4)])
 def test_stream_kernel_cell_by_cell_vs_bank_extend(band, block_k):
     """Pallas streaming bank-extend == core.dtw._bank_extend_many on every

@@ -564,6 +564,114 @@ def test_service_scoring_tick_moves_no_rows(paper_bank):
     assert set(d.scores) == {"wordcount", "terasort"}
 
 
+@pytest.fixture(scope="module")
+def golden_bank():
+    """All three mrsim apps x paper param sets — the golden-trace bank
+    the pruned-vs-unpruned decision property runs against."""
+    from repro.core.database import SeriesBank
+    from repro.core.filters import preprocess_bank
+
+    psets = mrsim.paper_param_sets()
+    series, labels = [], []
+    for app in mrsim.APPS:
+        for p in psets:
+            series.append(mrsim.simulate_cpu_series(app, p, dt=0.25))
+            labels.append(app)
+    bank = pack_series(series, labels=labels)
+    return SeriesBank(preprocess_bank(bank.series, bank.lengths),
+                      bank.lengths, bank.labels, bank.entries)
+
+
+@pytest.mark.parametrize("app", sorted(mrsim.APPS))
+def test_pruned_tick_decisions_equal_unpruned_on_golden_traces(
+        golden_bank, app):
+    """Property: with the streaming wavelet prefilter pruning the bank,
+    every in-flight decision (matched workload, correlation,
+    decided_at_fraction) and the final verdict equal the unpruned
+    service's, tick for tick, on the golden exim/wordcount/terasort
+    traces — the prefilter's soundness-margin contract."""
+    p = mrsim.paper_param_sets()[0]
+    q = mrsim.simulate_cpu_series(app, p, run=1, dt=0.25)
+    runs = []
+    for pf in (None, 4):
+        svc = TuningService(golden_bank, band=16, threshold=0.85,
+                            margin=0.02, stable_ticks=3, min_fraction=0.15,
+                            denoise=True, prefilter_top=pf)
+        svc.submit(app, expected_len=len(q))
+        seq = []
+        for lo in range(0, len(q), 8):
+            svc.push(app, q[lo: lo + 8])
+            d = svc.tick().get(app)
+            seq.append(None if d is None else
+                       (d.matched, d.corr, d.decided_at_fraction))
+        final = svc.finish(app)
+        assert svc.dispatch_count == svc.ticks, \
+            "pruning must not change the one-dispatch-per-tick invariant"
+        runs.append((seq, final))
+    (seq_u, fin_u), (seq_p, fin_p) = runs
+    assert seq_p == seq_u
+    assert fin_p.matched == fin_u.matched
+    assert fin_p.corr == pytest.approx(fin_u.corr, abs=1e-12)
+    assert fin_p.decided_at_fraction == fin_u.decided_at_fraction
+
+
+def _diverse_bank(rng, k, min_len=64):
+    series = []
+    for i in range(k):
+        l = int(rng.integers(min_len, min_len + 40))
+        t = np.linspace(0, 1, l, dtype=np.float32)
+        s = (0.5 + 0.28 * np.sin(2 * np.pi * (1.5 + 0.3 * i) * t + 0.7 * i)
+             + 0.06 * rng.normal(size=l).astype(np.float32))
+        series.append(np.clip(s, 0, 1).astype(np.float32))
+    return pack_series(series)
+
+
+def test_prefilter_repack_accounting_and_dispatch_invariant():
+    """Re-packs are counted separately and never inflate dispatch_count:
+    dispatches == data-carrying ticks holds through prune-driven shrinks
+    AND the re-grow when a fresh job re-widens the survivor union."""
+    rng = np.random.default_rng(42)
+    bank = _diverse_bank(rng, 24)
+    qlen = 64
+    svc = TuningService(bank, prefilter_top=2, prefilter_margin=0.0,
+                        prefilter_min_fraction=0.1, slots=4)
+    for j in range(2):
+        svc.submit(f"job{j}", expected_len=qlen)
+    qs = np.stack([np.clip(bank.row(7 * j)[:qlen]
+                           + 0.04 * rng.normal(size=qlen), 0, 1)
+                   .astype(np.float32) for j in range(2)])
+    data_ticks = 0
+    for lo in range(0, qlen, 8):
+        for j in range(2):
+            svc.push(f"job{j}", qs[j, lo: lo + 8])
+        svc.tick()
+        data_ticks += 1
+    assert svc.dispatch_count == data_ticks == svc.ticks
+    shrink_repacks = svc.repack_count
+    assert shrink_repacks >= 1, "prune never re-packed the device state"
+    assert len(svc._packed_idx) < len(bank)
+    # an empty tick moves nothing: no dispatch, no re-pack
+    svc.tick()
+    assert svc.dispatch_count == data_ticks
+    assert svc.repack_count == shrink_repacks
+    # pruned-for-this-job references surface as -inf, never a leader
+    for j in range(2):
+        job = svc._jobs[f"job{j}"]
+        assert job.allowed is not None and not job.allowed.all()
+        assert np.isneginf(job.last_sims[~job.allowed]).all()
+        assert np.isfinite(job.last_sims[int(np.argmax(job.last_sims))])
+    for j in range(2):
+        svc.finish(f"job{j}")
+    # a fresh job needs the whole bank again: the next data tick re-grows
+    # the pack (one more re-pack, still one dispatch per data tick)
+    svc.submit("fresh", expected_len=qlen)
+    svc.push("fresh", qs[0, :8])
+    svc.tick()
+    assert len(svc._packed_idx) == len(bank)
+    assert svc.repack_count == shrink_repacks + 1
+    assert svc.dispatch_count == data_ticks + 1
+
+
 def test_service_decision_history_recorded(paper_bank):
     """A DB-backed service records finished decisions (with
     decided_at_fraction) into the ReferenceDB history."""

@@ -98,6 +98,42 @@ SCRIPT = textwrap.dedent("""
             (shd.dispatch_count, shd.ticks)
         print(f"SHARDED_TICK_OK band={band} "
               f"dispatches={shd.dispatch_count} ticks={shd.ticks}")
+
+    # wavelet-prefilter pruning composes with the sharded tick: the
+    # re-packed (bucket-padded, device-count-multiple) survivor bank
+    # shards like the full one, and sharded == unsharded holds for the
+    # pruned service too (masked scores compare as: same -inf pattern,
+    # finite entries to 1e-6).
+    bank = make_bank()
+    queries = {}
+    for j in range(3):
+        t = np.linspace(0, 1, 42, dtype=np.float32)
+        q = 0.5 + 0.3 * np.sin(2 * np.pi * (1.5 + 0.7 * j) * t) \\
+            + 0.04 * rng.normal(size=42)
+        queries[f"job{j}"] = np.clip(q, 0, 1).astype(np.float32)
+    kw = dict(threshold=0.5, margin=0.01, stable_ticks=2, min_fraction=0.2,
+              slots=4, prefilter_top=2, prefilter_margin=0.02)
+    ref = TuningService(bank, **kw)
+    shd = TuningService(bank, mesh=mesh, **kw)
+    for jid, q in queries.items():
+        ref.submit(jid, expected_len=len(q))
+        shd.submit(jid, expected_len=len(q))
+    dec_r, sims_r, fin_r = drive(ref, queries)
+    dec_s, sims_s, fin_s = drive(shd, queries)
+    for tick_r, tick_s in zip(sims_r, sims_s):
+        for jid in tick_r:
+            a, b = tick_r[jid], tick_s[jid]
+            fa, fb = np.isfinite(a), np.isfinite(b)
+            assert (fa == fb).all(), ("prefilter mask diverged", jid)
+            err = float(np.abs(a[fa] - b[fb]).max())
+            assert err < 1e-6, ("pruned", jid, err)
+    assert dec_r == dec_s, ("pruned", dec_r, dec_s)
+    for jid in queries:
+        assert fin_r[jid].matched == fin_s[jid].matched
+    assert shd.dispatch_count == shd.ticks
+    assert shd.repack_count == ref.repack_count
+    print(f"SHARDED_PRUNED_OK repacks={shd.repack_count} "
+          f"survivors={len(shd._packed_idx)}/{len(bank)}")
 """)
 
 
@@ -109,3 +145,4 @@ def test_sharded_tick_equals_unsharded():
         text=True, timeout=900)
     assert r.returncode == 0, r.stdout + r.stderr
     assert r.stdout.count("SHARDED_TICK_OK") == 2, r.stdout + r.stderr
+    assert "SHARDED_PRUNED_OK" in r.stdout, r.stdout + r.stderr
