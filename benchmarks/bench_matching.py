@@ -3,10 +3,21 @@
 1. Accuracy: leave-one-run-out over the three applications x parameter
    sets — does the matcher recover the true application family from an
    unseen run's CPU series?  (Runs on the batched pairs path.)
-2. Throughput: one query against a K-entry reference bank, scalar
-   per-pair jit loop (the seed's dispatch pattern — one device round-trip
-   per reference) vs the single-dispatch ``dtw_distance_bank``, at
-   K in {8, 64, 256}; verifies the two agree to 1e-4.
+2. Distance throughput: one query against a K-entry reference bank,
+   scalar per-pair jit loop (the seed's dispatch pattern — one device
+   round-trip per reference) vs the single-dispatch
+   ``dtw_distance_bank``, at K in {8, 64, 256}; verifies the two agree
+   to 1e-4.
+3. SCORED (verdict) throughput: the full whole-DB warp-correlation
+   match.  ``match_matrix_K*`` is the retired engine (batched [K, N, M]
+   matrix materialization + host backtracking per reference) kept as the
+   comparison baseline; ``match_scored_K*`` is the matrix-free
+   closed-end moment scorer that now backs ``similarity_bank`` and every
+   ``TuningService`` verdict.  Gate: >= MIN_SCORED_SPEEDUP_AT_256 at
+   K=256.
+4. Batched finish: J completed jobs rendered by ONE
+   ``TuningService.finish_many`` drain vs J sequential ``finish()``
+   calls (``finish_batched_J{8,32}``).
 """
 
 from __future__ import annotations
@@ -18,12 +29,15 @@ import jax
 import numpy as np
 
 from repro import mrsim
-from repro.core import dtw, match_application
+from repro.core import dtw, match_application, similarity_bank
 from repro.core.database import pack_series
 
 BAND = 8
 BANK_SIZES = (8, 64, 256)
 MIN_SPEEDUP_AT_256 = 5.0
+#: matrix-free scored path vs the matrix+backtrack baseline at K=256.
+MIN_SCORED_SPEEDUP_AT_256 = 3.0
+FINISH_BATCH_SIZES = (8, 32)
 
 
 def _accuracy_rows():
@@ -113,8 +127,123 @@ def _throughput_rows():
     return rows
 
 
+def _scored_rows():
+    """Matrix-free scored matching vs the matrix+backtrack baseline."""
+    rows = []
+    rng = np.random.default_rng(0)
+    x = np.clip(0.5 + 0.3 * np.sin(np.linspace(0, 12, 256)), 0, 1) \
+        .astype(np.float32)
+
+    for k in BANK_SIZES:
+        _, bank = _make_bank(rng, k)
+
+        def matrix():
+            return similarity_bank(x, bank, matrix_path=True)
+
+        def scored():
+            return similarity_bank(x, bank)
+
+        s_matrix = matrix()               # warm jit caches (+ score plan)
+        s_scored = scored()
+        # warp-path-tie tolerance: float rounding differences between the
+        # wavefront and the min-plus matrix formulations can flip
+        # near-tie backtrack choices (exactness on tie-free data is
+        # pinned in tests/test_scored_matching.py)
+        np.testing.assert_allclose(s_scored, s_matrix, atol=5e-3)
+
+        reps = 3
+        t0 = time.time()
+        for _ in range(reps):
+            matrix()
+        us_matrix = (time.time() - t0) / reps * 1e6
+        t0 = time.time()
+        for _ in range(reps):
+            scored()
+        us_scored = (time.time() - t0) / reps * 1e6
+
+        speedup = us_matrix / max(us_scored, 1e-9)
+        print(f"[matching] K={k:4d}: matrix {us_matrix/1e3:8.1f} ms  "
+              f"scored {us_scored/1e3:8.1f} ms  speedup {speedup:5.1f}x")
+        rows.append((f"match_matrix_K{k}", us_matrix,
+                     "[K,N,M] matrices + host backtrack"))
+        rows.append((f"match_scored_K{k}", us_scored,
+                     f"speedup={speedup:.1f}x"))
+        if k == max(BANK_SIZES) and \
+                os.environ.get("BENCH_MATCHING_STRICT", "1") != "0":
+            assert speedup >= MIN_SCORED_SPEEDUP_AT_256, (
+                f"matrix-free scored matching only {speedup:.1f}x over "
+                f"the matrix+backtrack path at K={k} (need >= "
+                f"{MIN_SCORED_SPEEDUP_AT_256}x; BENCH_MATCHING_STRICT=0 "
+                f"to demote)")
+    return rows
+
+
+def _finish_batched_rows():
+    """J completed jobs -> one finish_many drain vs J sequential
+    finish() calls (same service config, same jobs)."""
+    from repro.serve.tuning import TuningService
+
+    rows = []
+    rng = np.random.default_rng(1)
+    _, bank = _make_bank(rng, 16)
+    qlen = 200
+    t = np.linspace(0, 1, qlen, dtype=np.float32)
+
+    for j in FINISH_BATCH_SIZES:
+        qs = [np.clip(0.5 + 0.3 * np.sin(2 * np.pi * (2 + i % 5) * t)
+                      + 0.1 * rng.normal(size=qlen), 0, 1)
+              .astype(np.float32) for i in range(j)]
+
+        def populate():
+            svc = TuningService(bank, slots=j, score_in_flight=False)
+            for i, q in enumerate(qs):
+                svc.submit(f"job{i}", expected_len=qlen)
+                svc.push(f"job{i}", q)
+            svc.tick()
+            return svc
+
+        def sequential():
+            svc = populate()
+            return [svc.finish(f"job{i}") for i in range(j)]
+
+        def batched():
+            svc = populate()
+            return svc.finish_many([f"job{i}" for i in range(j)])
+
+        d_seq = sequential()              # warm jit caches
+        d_bat = batched()
+        assert [d.matched for d in d_seq] == \
+            [d_bat[f"job{i}"].matched for i in range(j)]
+
+        reps = 2
+        us_seq = us_bat = 0.0
+        for _ in range(reps):             # time the verdicts only, not
+            svc = populate()              # the service setup/tick
+            t0 = time.time()
+            for i in range(j):
+                svc.finish(f"job{i}")
+            us_seq += (time.time() - t0) * 1e6
+        for _ in range(reps):
+            svc = populate()
+            t0 = time.time()
+            svc.finish_many([f"job{i}" for i in range(j)])
+            us_bat += (time.time() - t0) * 1e6
+        us_seq /= reps
+        us_bat /= reps
+        speedup = us_seq / max(us_bat, 1e-9)
+        print(f"[matching] finish J={j:3d}: sequential "
+              f"{us_seq/1e3:8.1f} ms  batched {us_bat/1e3:8.1f} ms  "
+              f"({us_bat/j/1e3:6.1f} ms/verdict, {speedup:4.1f}x, "
+              f"1 vs {j} offline dispatches)")
+        rows.append((f"finish_batched_J{j}", us_bat,
+                     f"vs sequential {speedup:.1f}x; "
+                     f"{us_bat/j/1e3:.1f} ms/verdict"))
+    return rows
+
+
 def run():
-    return _accuracy_rows() + _throughput_rows()
+    return (_accuracy_rows() + _throughput_rows() + _scored_rows()
+            + _finish_batched_rows())
 
 
 if __name__ == "__main__":

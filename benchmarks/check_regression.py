@@ -6,7 +6,11 @@ Exits non-zero when any row's ``us_per_call`` regressed more than
 in a non-blocking job, so a regression fails-with-warning instead of
 wedging the queue (shared runners are noisy; the committed baselines come
 from the bench host).  Rows present on only one side (new benches,
-retired benches) are reported but never fail the check.
+retired benches) are reported but never fail the check — EXCEPT that a
+bench named via ``--require`` must contribute at least one fresh row
+matching its committed baseline file, so a silently-crashed bench (its
+rows all "[skip] in baseline only") can no longer pass as a vacuous
+success: the guard genuinely diffs every required BENCH file.
 
 NOTE: ``run.py --json`` REWRITES the repo-root baselines as a side
 effect, so CI snapshots them (``--baseline-dir``) before running the
@@ -14,6 +18,7 @@ benches; comparing against the freshly rewritten files would be vacuous.
 
     python -m benchmarks.check_regression \
         --fresh fresh_matching.json --fresh fresh_streaming.json \
+        --require matching --require streaming \
         [--baseline-dir DIR] [--threshold 0.25]
 """
 
@@ -44,12 +49,20 @@ def main() -> None:
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="fail when us_per_call grows more than this "
                          "fraction over baseline")
+    ap.add_argument("--require", action="append", default=[],
+                    help="bench name (BENCH_<name>.json) that must "
+                         "contribute fresh rows; repeatable.  Guards "
+                         "against a crashed bench passing vacuously.")
     args = ap.parse_args()
 
     baseline: dict = {}
+    per_bench: dict = {}
     for path in sorted(glob.glob(os.path.join(args.baseline_dir,
                                               "BENCH_*.json"))):
-        baseline.update(load_rows(path))
+        rows = load_rows(path)
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        per_bench[name] = rows
+        baseline.update(rows)
     if not baseline:
         print(f"no BENCH_*.json baselines under {args.baseline_dir}; "
               "nothing to compare", file=sys.stderr)
@@ -58,6 +71,19 @@ def main() -> None:
     fresh: dict = {}
     for path in args.fresh:
         fresh.update(load_rows(path))
+
+    uncovered = []
+    for name in args.require:
+        base_rows = per_bench.get(name)
+        if base_rows is None:
+            uncovered.append((name, "no committed BENCH baseline"))
+            continue
+        hit = len(set(base_rows) & set(fresh))
+        print(f"[coverage] {name}: {hit}/{len(base_rows)} baseline rows "
+              "have fresh measurements")
+        if hit == 0:
+            uncovered.append((name, "no fresh rows (bench crashed or "
+                                    "not run?)"))
 
     regressions = []
     for name in sorted(baseline):
@@ -74,13 +100,21 @@ def main() -> None:
     for name in sorted(set(fresh) - set(baseline)):
         print(f"[new] {name}: {fresh[name]:.1f} us (no baseline yet)")
 
+    failed = False
+    if uncovered:
+        failed = True
+        for name, why in uncovered:
+            print(f"\nrequired bench {name!r} not covered: {why}",
+                  file=sys.stderr)
     if regressions:
+        failed = True
         print(f"\n{len(regressions)} row(s) regressed more than "
               f"{args.threshold:.0%} vs committed baselines:",
               file=sys.stderr)
         for name, base, now, ratio in regressions:
             print(f"  {name}: {base:.1f} -> {now:.1f} us ({ratio:+.1%})",
                   file=sys.stderr)
+    if failed:
         raise SystemExit(1)
     print("\nno perf regressions beyond threshold")
 

@@ -10,6 +10,8 @@ from .filters import (cheby1_design, lfilter, filtfilt, denoise, normalize01,
                       preprocess, preprocess_bank, StreamingFilter)
 from .dtw import (cost_matrix, dtw_matrix, dtw_distance, dtw_matrix_banded,
                   dtw_matrix_bank, dtw_matrix_pairs, dtw_distance_bank,
+                  dtw_score_bank, dtw_score_bank_many, dtw_score_pairs,
+                  query_moments, ScoreBankPlan, build_score_plan,
                   DtwBankState, dtw_bank_init, dtw_bank_extend,
                   backtrack, warp_to, dtw_warp)
 from .similarity import (correlation, similarity, similarity_bank,
@@ -31,6 +33,8 @@ __all__ = [
     "preprocess", "preprocess_bank", "StreamingFilter",
     "cost_matrix", "dtw_matrix", "dtw_distance", "dtw_matrix_banded",
     "dtw_matrix_bank", "dtw_matrix_pairs", "dtw_distance_bank",
+    "dtw_score_bank", "dtw_score_bank_many", "dtw_score_pairs",
+    "query_moments", "ScoreBankPlan", "build_score_plan",
     "DtwBankState", "dtw_bank_init", "dtw_bank_extend",
     "backtrack", "warp_to", "dtw_warp",
     "correlation", "similarity", "similarity_bank", "MatchResult",

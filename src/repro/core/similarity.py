@@ -20,28 +20,40 @@ Scoring one query against K references used to dispatch one jitted DTW per
 pair from a Python loop — O(K) device round-trips.  The batched path packs
 all references into a padded ``[K, M]`` bank with an ``int32 [K]`` vector
 of true lengths (``database.SeriesBank`` / ``pack_series``; padding repeats
-each series' edge value and never reaches a DTW distance) and solves every
-DP in **one** jit dispatch:
+each series' edge value and never reaches a DTW distance) and scores the
+whole bank **matrix-free and device-resident**: the warp-path correlation
+moments (sy, syy, sxy) are carried *through* the DP with
+backtrack-identical predecessor selection and read at the closed alignment
+endpoint ``(N-1, len_k-1)`` (``dtw.dtw_score_bank`` / ``dtw_score_pairs``;
+the Pallas offline kernel ``kernels.dtw.score`` on TPU backends), so one
+dispatch returns the final [K] correlations directly — no ``[K, N, M]``
+matrix is ever materialized and nothing per-cell crosses the device
+boundary:
 
-* :func:`similarity_bank` — one ``dtw_matrix_bank`` dispatch for all K
-  accumulated-cost matrices, then O(N+M) host-side backtracking/warping and
-  correlation per reference (Eq. 3's warp is data-dependent, so it stays in
-  numpy on the returned matrices).
+* :func:`similarity_bank` — one matrix-free scorer dispatch for all K
+  references.  ``matrix_path=True`` keeps the previous engine (batched
+  ``dtw_matrix_bank`` + O(N+M) host-side backtracking per reference) as
+  the debugging/reference path; it is also what ``dtw.dtw_warp``
+  consumers should reach for when they need the D matrix itself.
 * :func:`match_series` — dict-of-references convenience wrapper over
   :func:`similarity_bank`.
 * :func:`match_application` — batches every (parameter set, application)
-  pair of Fig. 4-b into a single ``dtw_matrix_pairs`` dispatch, ragged on
-  both the query and reference sides.
+  pair of Fig. 4-b into a single ``dtw.dtw_score_pairs`` dispatch, ragged
+  on both the query and reference sides.
 * :func:`prefix_similarity_bank` — scores a *partial* (in-flight) query
   from streamed DP rows: open-ended alignment + running-moment correlation
-  while the job runs, exact offline score once the series completes.
+  while the job runs.  Its closed-end branch (``open_end=False`` with
+  ``band=`` passed) routes to the matrix-free scorer too — exactly what
+  ``tuner.OnlineMatcher.final_scores`` does on completion.
 
-Very large banks are transparently chunked so the ``[K, N, M]`` matrix
-stack stays under ``MAX_MATRIX_ELEMS`` elements per dispatch (distance-only
-scoring via ``dtw.dtw_distance_bank`` never materializes the stack at all).
-The scalar :func:`similarity` remains the reference implementation and the
-right tool for one-off pairs; the bank functions agree with a scalar loop
-to float tolerance (``tests/test_batched_matching.py``).
+Device scores and the host backtrack agree bitwise-path on tie-free
+(dyadic-grid) data and to warp-path-tie tolerance elsewhere (float noise
+can flip near-tie argmin choices, moving individual warp paths but not
+match decisions; ``tests/test_scored_matching.py`` pins both regimes).
+The matrix path chunks very large banks so the ``[K, N, M]`` stack stays
+under ``MAX_MATRIX_ELEMS`` elements per dispatch; the matrix-free path
+needs no such cap.  The scalar :func:`similarity` remains the reference
+implementation and the right tool for one-off pairs.
 """
 
 from __future__ import annotations
@@ -140,12 +152,22 @@ def similarity_bank(x: np.ndarray,
                                       Sequence[np.ndarray]],
                     lengths: Optional[np.ndarray] = None, *,
                     preprocess: bool = False,
-                    band: Optional[int] = None) -> np.ndarray:
+                    band: Optional[int] = None,
+                    matrix_path: bool = False) -> np.ndarray:
     """SIM(X, Y_k) for every reference in a bank -> float64 [K].
 
-    All K DTW matrices come from a single batched jit dispatch
-    (``dtw.dtw_matrix_bank``); backtracking + correlation run per-row on
-    the host (O(K*(N+M)), negligible next to the O(K*N*M) DP).
+    Default engine: the matrix-free closed-end moment scorer
+    (``dtw.dtw_score_bank``) — one device dispatch returns all K warp
+    correlations with no ``[K, N, M]`` materialization and no host
+    backtracking; the bank's tiled device upload is memoized on the
+    :class:`SeriesBank` (``score_plan``), so repeated verdicts against
+    the same bank move no bank bytes.
+
+    ``matrix_path=True`` selects the previous engine — one batched
+    ``dtw.dtw_matrix_bank`` dispatch, then O(N+M) host-side backtracking
+    + correlation per reference — kept as the reference/debug path; the
+    two agree bitwise-path on tie-free data and to warp-path-tie
+    tolerance (~1e-3) elsewhere.
 
     ``preprocess=True`` applies the paper pipeline to the query (scalar)
     and the whole bank (``filters.preprocess_bank``: one dispatch per
@@ -157,9 +179,14 @@ def similarity_bank(x: np.ndarray,
         return np.zeros((0,), np.float64)
     if preprocess:
         x = np.asarray(_filters.preprocess(x))
-        bank = SeriesBank(
-            np.asarray(_filters.preprocess_bank(bank.series, bank.lengths)),
-            bank.lengths, bank.labels, bank.entries)
+        # memoized on the source bank: repeated preprocess=True calls
+        # reuse one filtered pack and one score-plan device upload.
+        bank = bank.preprocessed()
+
+    if not matrix_path:
+        return np.asarray(_dtw.dtw_score_bank(
+            x, bank.series, bank.lengths, band=band,
+            plan=bank.score_plan()), np.float64)
 
     k, m = bank.series.shape
     n = x.shape[0]
@@ -223,9 +250,17 @@ class RunningMoments:
         return float(np.clip(cov / denom, -1.0, 1.0))
 
 
+#: "No band argument given" sentinel for prefix_similarity_bank — the
+#: caller's streamed rows already embed whatever banding the stream used,
+#: so only an EXPLICIT band (None included) licenses the rows-free
+#: matrix-free closed-end path.
+_BAND_UNSET = object()
+
+
 def prefix_similarity_bank(x_prefix: np.ndarray, bank: SeriesBank,
-                           rows: np.ndarray, *,
-                           open_end: bool = True) -> np.ndarray:
+                           rows: Optional[np.ndarray] = None, *,
+                           open_end: bool = True,
+                           band=_BAND_UNSET) -> np.ndarray:
     """SIM of a *partial* query against every reference -> float64 [K].
 
     ``rows`` is the [n, K, M] stack of streamed DP rows (what
@@ -235,11 +270,26 @@ def prefix_similarity_bank(x_prefix: np.ndarray, bank: SeriesBank,
     matching *prefix* (backtrack from ``argmin`` of the last DP row — the
     open-ended alignment of online DTW); with ``open_end=False`` the full
     reference endpoint ``len_k - 1`` is used, which on a completed query
-    reproduces the offline :func:`similarity_bank` score exactly (same
-    matrix, same backtrack, same correlation — only the accumulation is
-    single-pass).
+    reproduces the offline :func:`similarity_bank` score (same DP, same
+    predecessor selection, single-pass accumulation).
+
+    The closed-end branch is **matrix-free** when ``band`` is passed
+    explicitly (``None`` meaning "unbanded"): the query is re-scored by
+    the device-resident moment scorer (``dtw.dtw_score_bank``) with the
+    Sakoe-Chiba corridor re-derived from the true query length, and
+    ``rows`` may be omitted entirely — this is the
+    ``OnlineMatcher.final_scores`` path.  Without an explicit band the
+    streamed ``rows`` (which already embed the stream's banding) are
+    backtracked on the host as before.
     """
     x = np.asarray(x_prefix, np.float64).reshape(-1)
+    if not open_end and band is not _BAND_UNSET:
+        return np.asarray(_dtw.dtw_score_bank(
+            x, bank.series, bank.lengths, band=band,
+            plan=bank.score_plan()), np.float64)
+    if rows is None:
+        raise ValueError("rows are required unless scoring closed-end "
+                         "with an explicit band= (the matrix-free path)")
     rows = np.asarray(rows)
     n, k, _ = rows.shape
     if n != x.shape[0]:
@@ -313,19 +363,10 @@ def match_application(query_series: Sequence[np.ndarray],
     # pair p = (app a, set j) -> query row j, reference row a * nsets + j
     qidx = np.tile(np.arange(nsets), len(names))
     xs, xl = qbank.series[qidx], qbank.lengths[qidx]
-    p_total = len(names) * nsets
-    n, m = xs.shape[1], rbank.series.shape[1]
-    chunk = max(1, int(MAX_MATRIX_ELEMS // max(n * m, 1)))
-    corr = np.empty((p_total,), np.float64)
-    for lo in range(0, p_total, chunk):
-        hi = min(lo + chunk, p_total)
-        D = np.asarray(_dtw.dtw_matrix_pairs(
-            xs[lo:hi], rbank.series[lo:hi], xl[lo:hi], rbank.lengths[lo:hi],
-            band=band))
-        for p in range(lo, hi):
-            ql, rl = int(xl[p]), int(rbank.lengths[p])
-            corr[p] = _warp_corr(qbank.series[qidx[p], :ql],
-                                 rbank.series[p, :rl], D[p - lo, :ql, :rl])
+    # matrix-free: every pair's closed-end warp correlation from ONE
+    # moment-carrying dispatch — no [P, N, M] stack, no host backtracks.
+    corr = np.asarray(_dtw.dtw_score_pairs(
+        xs, rbank.series, xl, rbank.lengths, band=band), np.float64)
 
     scores = {name: [float(corr[a * nsets + j]) for j in range(nsets)]
               for a, name in enumerate(names)}

@@ -16,9 +16,11 @@ deepseek-v2's signature and inherits its tuned sharding without search.
 Batched matching: :meth:`AutoTuner.match` scores the query against *every*
 candidate entry in the database with one batched DTW dispatch — the DB
 hands back a cached padded ``[K, M]`` bank (+ true-length vector) over the
-candidate entries (``ReferenceDB.bank``), ``similarity_bank`` solves all K
-DPs at once, and per-workload bests are reduced on the host from the bank's
-row labels.  The wavelet prefilter ranks candidates with the equally
+candidate entries (``ReferenceDB.bank``), ``similarity_bank`` scores all K
+references matrix-free in one dispatch (closed-end moment-carrying DP —
+no ``[K, N, M]`` stack, no host backtracking; the bank's tiled device
+upload is memoized on the SeriesBank), and per-workload bests are reduced
+on the host from the bank's row labels.  The wavelet prefilter ranks candidates with the equally
 batched ``wavelet_similarity_bank`` before the (narrowed) DTW dispatch.
 Entries are stored pre-processed (``profile`` runs the scalar paper
 pipeline at capture time), so matching never re-filters the bank.  Scores
@@ -297,5 +299,24 @@ class OnlineMatcher:
 
     def final_scores(self) -> np.ndarray:
         """Complete-series scores; equals the offline ``similarity_bank``
-        of the full (filtered) query against the bank."""
-        return self.prefix_scores(open_end=False)
+        of the full (filtered) query against the bank.
+
+        Matrix-free: re-scored by the closed-end moment scorer (one
+        device dispatch, no collected rows needed — this works with
+        ``collect_rows=False`` too), with the banded corridor re-derived
+        from the true consumed length.  A banded stream whose
+        ``query_len`` prediction did NOT come true falls back to
+        backtracking the collected rows when it has them (preserving the
+        stream's corridor placement exactly as scored in flight); without
+        collected rows it self-corrects like ``TuningService.finish``
+        does — the matrix-free solve anchors the corridor at the true
+        length, which IS the offline ``similarity_bank`` verdict.
+        """
+        if self.n < 2:
+            return np.zeros((len(self.bank),), np.float64)
+        band = self._state.band
+        if band is not None and self._state.query_len != self.n \
+                and self._collect:
+            return self.prefix_scores(open_end=False)
+        return prefix_similarity_bank(self.query(), self.bank, None,
+                                      open_end=False, band=band)

@@ -1,0 +1,174 @@
+"""Pallas TPU kernel: matrix-free offline bank scoring (the finish-path
+whole-DB match).
+
+One ``pallas_call`` renders the closed-end warp correlation of J complete
+queries against the whole padded [K, M] reference bank — the offline
+mirror of the fused streaming tick (``stream.py``).  The grid is
+(query, reference-tile); each program runs its query through the full DP
+with the [BK, M] row slice AND the three warp-path correlation-moment
+slabs (sy, syy, sxy) pinned in VMEM, then reduces to the [BK] scores and
+endpoint distances **in-kernel** — the only HBM writes are the [J, K]
+score/distance tiles, never a row, a moment slab, or a [K, N, M] matrix.
+
+Row updates and moment carries are the streaming scored kernel's
+(``stream._stream_scored_kernel``): min-plus Hillis-Steele row scan,
+backtrack-identical predecessor selection (diag, then vert, then horiz),
+horizontal runs telescoped through one log2(M) anchored forward-fill.
+The closed-end reduction reads row/moments at column ``lengths[k] - 1``
+(the alignment endpoint D(N, M_k) of paper Eq. 1) instead of the
+streaming open-end argmin, and evaluates ``core.dtw._corr_from_moments``
+— the same score tail the jnp wavefront uses, so kernel == jnp is pinned
+bit-identical on dyadic-grid data (tests/test_scored_matching.py) and
+differs elsewhere only by warp-path tie flips.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.experimental import pallas as pl
+
+from .stream import _INF, _MOM_SHIFT, _fill_from_anchor, _minplus_scan2
+
+__all__ = ["score_bank_offline_kernel", "score_bank_offline"]
+
+
+def _score_kernel(xlen_ref, sx_ref, sxx_ref, x_ref, len_ref, bank_ref,
+                  score_ref, dist_ref, *, n: int, m: int,
+                  band: Optional[int]):
+    """One (query, reference-tile) program: full-query DP + moments in
+    VMEM, closed-end score reduction, [BK] outputs."""
+    from ...core.dtw import _corr_from_moments
+
+    xlen = xlen_ref[0]
+    x = x_ref[0]                                   # [N]
+    bank = bank_ref[...]                           # [BK, M]
+    bk = bank.shape[0]
+    lens = len_ref[...]                            # [BK]
+    jj = jax.lax.iota(jnp.int32, m)
+    yc = bank - _MOM_SHIFT
+    yy = yc * yc
+
+    def body(i, carry):
+        row, moms = carry                          # [BK, M], [3, BK, M]
+        d = jnp.abs(x[i] - bank)
+        if band is not None:
+            centers = (i * (lens - 1)) // jnp.maximum(xlen - 1, 1)
+            d = jnp.where(jnp.abs(jj[None, :] - centers[:, None]) <= band,
+                          d, _INF)
+        corner = jnp.where(i == 0, 0.0, _INF)
+        p_diag = jnp.concatenate(
+            [jnp.broadcast_to(corner, (bk, 1)).astype(row.dtype),
+             row[:, :-1]], axis=1)
+        p_vert = row
+        mn = jnp.minimum(p_vert, p_diag)
+        new = _minplus_scan2(d, mn + d, m)
+        if band is not None:
+            new = jnp.where(d >= _INF, _INF, new)
+        new = jnp.minimum(new, _INF)
+        p_horiz = jnp.concatenate(
+            [jnp.full((bk, 1), _INF, new.dtype), new[:, :-1]], axis=1)
+        sel_diag = p_diag <= jnp.minimum(p_vert, p_horiz)
+        sel_vert = jnp.logical_and(~sel_diag, p_vert <= p_horiz)
+        anch = jnp.logical_or(sel_diag, sel_vert)
+        m_diag = jnp.concatenate(
+            [jnp.zeros((3, bk, 1), moms.dtype), moms[:, :, :-1]], axis=2)
+        base = jnp.where(sel_diag[None], m_diag,
+                         jnp.where(sel_vert[None], moms, 0.0))
+        base = _fill_from_anchor(base, anch, m)
+        xm = x[i] - _MOM_SHIFT
+        new_moms = base + jnp.stack([yc, yy, xm * yc])
+        valid = i < xlen
+        return (jnp.where(valid, new, row),
+                jnp.where(valid, new_moms, moms))
+
+    row0 = jnp.full((bk, m), _INF, jnp.float32)
+    moms0 = jnp.zeros((3, bk, m), jnp.float32)
+    row, moms = jax.lax.fori_loop(0, n, body, (row0, moms0))
+
+    # closed-end reduction: endpoint column len_k - 1 per reference.
+    onehot = jj[None, :] == (lens - 1)[:, None]              # [BK, M]
+    dist = jnp.sum(jnp.where(onehot, row, 0.0), axis=1)
+    msel = jnp.sum(jnp.where(onehot[None], moms, 0.0), axis=2)  # [3, BK]
+    nn = jnp.maximum(xlen, 1).astype(jnp.float32)
+    scores = _corr_from_moments(msel[0], msel[1], msel[2], sx_ref[0],
+                                sxx_ref[0], nn)
+    score_ref[0] = jnp.where(xlen > 0, scores, 0.0)
+    dist_ref[0] = dist
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("band", "block_k", "interpret"))
+def _score_call(xs, xlens, bank, lengths, sx, sxx, band: Optional[int],
+                block_k: int, interpret: bool):
+    j, n = xs.shape
+    k, m = bank.shape
+    kernel = functools.partial(_score_kernel, n=n, m=m, band=band)
+    scores, dists = pl.pallas_call(
+        kernel,
+        grid=(j, k // block_k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # xlen
+            pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # sx
+            pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # sxx
+            pl.BlockSpec((1, n), lambda ji, ki: (ji, 0)),      # query
+            pl.BlockSpec((block_k,), lambda ji, ki: (ki,)),    # lengths
+            pl.BlockSpec((block_k, m), lambda ji, ki: (ki, 0)),  # bank
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k), lambda ji, ki: (ji, ki)),
+            pl.BlockSpec((1, block_k), lambda ji, ki: (ji, ki)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((j, k), jnp.float32),
+            jax.ShapeDtypeStruct((j, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xlens, sx, sxx, xs, lengths, bank)
+    return scores, dists
+
+
+def score_bank_offline_kernel(xs, xlens, bank, lengths, sx, sxx,
+                              band: Optional[int] = None,
+                              block_k: int = 128,
+                              interpret: bool = True):
+    """Closed-end scores + endpoint distances of J queries vs the whole
+    bank — one pallas_call.
+
+    xs [J, N] f32 (padded; ``xlens`` [J] i32 true lengths); bank [K, M]
+    f32 with lengths [K] i32; sx/sxx [J] f32 centered query folds
+    (``core.dtw.query_moments``) -> (scores [J, K], dists [J, K]).  K is
+    padded up to a ``block_k`` multiple internally (padding rows never
+    influence real rows; their outputs are sliced away).
+    """
+    xs = jnp.asarray(xs, jnp.float32)
+    bank = jnp.asarray(bank, jnp.float32)
+    xlens = jnp.asarray(xlens, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    sx = jnp.asarray(sx, jnp.float32)
+    sxx = jnp.asarray(sxx, jnp.float32)
+    k, m = bank.shape
+    bk = min(block_k, k)
+    pad = (-k) % bk
+    if pad:
+        bank = jnp.concatenate(
+            [bank, jnp.zeros((pad, m), jnp.float32)], axis=0)
+        lengths = jnp.concatenate(
+            [lengths, jnp.ones((pad,), jnp.int32)], axis=0)
+    scores, dists = _score_call(xs, xlens, bank, lengths, sx, sxx, band,
+                                bk, interpret)
+    return scores[:, :k], dists[:, :k]
+
+
+def score_bank_offline(xs, xlens, bank, lengths, sx, sxx,
+                       band: Optional[int] = None,
+                       interpret: Optional[bool] = None):
+    """Backend-defaulted entry: compiled on TPU, interpret elsewhere."""
+    from ..common import default_interpret
+    interpret = default_interpret() if interpret is None else interpret
+    return score_bank_offline_kernel(xs, xlens, bank, lengths, sx, sxx,
+                                     band=band, interpret=interpret)

@@ -63,14 +63,22 @@ Architecture (device-resident tick)
   vacuously passing the margin gate (:meth:`finish` still renders the
   final verdict).
 * :meth:`finish` recomputes the final verdict offline from the job's full
-  (causally filtered) query — one batched ``similarity_bank`` dispatch,
-  counted in ``offline_dispatch_count`` — so the end-of-job score is the
-  exact offline score regardless of f32 in-flight accumulation or a
-  mispredicted ``expected_len`` (the banded corridor anchors to the
-  *predicted* length; the offline recompute re-derives it from the true
-  one).  When a :class:`ReferenceDB` backs the service, the decision
-  (with its ``decided_at_fraction``) is recorded into the DB's decision
-  history for margin/stable_ticks/min_fraction calibration.
+  (causally filtered) query — and the recompute is **matrix-free**: one
+  ``dtw.dtw_score_bank_many`` dispatch carries the warp-path correlation
+  moments through the DP on device and scores at the closed alignment
+  endpoint, so no ``[K, N, M]`` matrix is materialized and nothing is
+  backtracked on the host.  The banded corridor is re-derived from the
+  *true* length (the in-flight corridor anchored to the ``expected_len``
+  prediction).  Verdicts BATCH: :meth:`finish_many` renders J decisions
+  from one dispatch, and :meth:`finish_later` parks completed jobs in a
+  drain queue (slot freed immediately) that :meth:`drain_finishes` — or
+  an automatic drain at ``finish_batch`` pending verdicts — renders in
+  one dispatch, so ``offline_dispatch_count`` amortizes instead of
+  growing 1:1 with completions; batched and sequential verdicts are
+  bit-identical by construction.  When a :class:`ReferenceDB` backs the
+  service, each decision (with its ``decided_at_fraction``) is recorded
+  into the DB's decision history for margin/stable_ticks/min_fraction
+  calibration.
 
 ``denoise=True`` pushes raw samples through the causal streaming Chebyshev
 filter (``filters.StreamingFilter``) before matching — the online stand-in
@@ -92,7 +100,7 @@ from ..core import dtw as _dtw
 from ..core import wavelet as _wavelet
 from ..core.database import ReferenceDB, SeriesBank
 from ..core.filters import StreamingFilter
-from ..core.similarity import MATCH_THRESHOLD, similarity_bank
+from ..core.similarity import MATCH_THRESHOLD
 from ..core.tuner import TuneDecision, _RowBuffer
 from ..sharding.compat import shard_map as _shard_map
 
@@ -150,6 +158,11 @@ class TuningService:
     dispatch over the pruned survivor union instead of all K references
     (see the module docstring for the pruning rule and its soundness
     veto).  Composes with ``mesh=``; off by default.
+
+    ``finish_batch=`` sets the drain-queue auto-flush threshold: once
+    that many :meth:`finish_later` verdicts are pending they are rendered
+    in one batched offline dispatch (:meth:`drain_finishes` flushes
+    early).
     """
 
     def __init__(self, refs: Union[ReferenceDB, SeriesBank], *,
@@ -164,7 +177,8 @@ class TuningService:
                  prefilter_top: Optional[int] = None,
                  prefilter_margin: float = 0.05,
                  prefilter_min_fraction: float = 0.1,
-                 prefilter_coeffs: int = 64) -> None:
+                 prefilter_coeffs: int = 64,
+                 finish_batch: int = 16) -> None:
         if isinstance(refs, ReferenceDB):
             self.db: Optional[ReferenceDB] = refs
             self.bank = refs.bank()
@@ -201,6 +215,9 @@ class TuningService:
         self.prefilter_margin = prefilter_margin
         self.prefilter_min_fraction = prefilter_min_fraction
         self.prefilter_coeffs = prefilter_coeffs
+        if finish_batch < 1:
+            raise ValueError("finish_batch must be >= 1")
+        self.finish_batch = finish_batch
 
         k, m = self.bank.series.shape
         self._k = k
@@ -243,15 +260,23 @@ class TuningService:
         #: re-pack is state motion, not a tick dispatch, and the
         #: dispatches == data-ticks invariant must survive pruning.
         self.repack_count = 0
-        #: offline ``similarity_bank`` dispatches issued by :meth:`finish`
-        #: (the end-of-job exact-verdict recompute; not part of the tick
-        #: hot path).
+        #: offline verdict dispatches (the matrix-free
+        #: ``dtw.dtw_score_bank_many`` recompute): one per
+        #: :meth:`finish`, but one per *drain* for :meth:`finish_many` /
+        #: the :meth:`finish_later` queue — the counter grows sublinearly
+        #: in completions when verdicts batch.
         self.offline_dispatch_count = 0
         self.ticks = 0
         # early decisions emitted by a tick the caller didn't see (e.g.
         # the internal drain tick of another job's finish()); surfaced by
         # the next tick() return so no decision is ever dropped.
         self._undelivered: Dict[str, TuneDecision] = {}
+        # deferred-finish drain queue: (job_id, full query, early
+        # decision) triples awaiting one batched verdict dispatch, plus
+        # auto-drained decisions not yet handed to the caller.
+        self._finish_queue: List[Tuple[str, np.ndarray,
+                                       Optional[TuneDecision]]] = []
+        self._finished: Dict[str, TuneDecision] = {}
 
     # -- packed device state (full bank or pruned survivor subset) -----------
     def _put(self, arr, spec):
@@ -657,41 +682,160 @@ class TuningService:
         return None
 
     # -- completion ----------------------------------------------------------
-    def finish(self, job_id: str) -> TuneDecision:
-        """Final verdict for a completed job, recomputed offline from the
-        full streamed (causally filtered) query: exactly the batched
-        ``similarity_bank`` score, with the Sakoe-Chiba band re-derived
-        from the *true* length (the in-flight corridor was anchored to
-        the ``expected_len`` prediction).  Frees the slot and, when a
-        ReferenceDB backs the service, records the decision history.
-        """
-        job = self._jobs[job_id]
-        if job.buffered:
-            emitted = self.tick()
-            for jid, d in emitted.items():
-                if jid != job_id and d is not None:
-                    self._undelivered[jid] = d
-        x = job.x.view()
-        if job.n >= 2:
-            sims = similarity_bank(x, self.bank, band=self.band)
-            self.offline_dispatch_count += 1
-        else:
-            sims = np.zeros((len(self.bank),), np.float64)
+    #
+    # Final verdicts are MATRIX-FREE and batchable: one
+    # ``dtw.dtw_score_bank_many`` dispatch carries the warp-path
+    # correlation moments through the DP on device and reads them at the
+    # closed alignment endpoint, so J completed jobs cost one dispatch —
+    # not J ``[K, N, M]`` matrix materializations with host backtracking.
+    # Per-job scores are bitwise independent of how verdicts are batched
+    # (per-cell arithmetic plus host-side per-query moment folds), so
+    # ``finish``, ``finish_many`` and the deferred drain queue all render
+    # identical decisions for the same job.
+
+    def _verdict_scores(self, queries) -> np.ndarray:
+        """[J, K] float64 offline scores for J completed queries in ONE
+        matrix-free dispatch, the Sakoe-Chiba band re-derived from each
+        query's TRUE length (the in-flight corridor was anchored to the
+        ``expected_len`` prediction).  Queries with fewer than 2 samples
+        score 0 without touching the device; the bank's tiled device
+        upload is memoized on the SeriesBank (``score_plan``), so
+        verdicts move query bytes only."""
+        out = np.zeros((len(queries), self._k), np.float64)
+        live = [i for i, q in enumerate(queries) if q.shape[0] >= 2]
+        if not live:
+            return out
+        # pow2 buckets on both axes so repeat drains reuse jit shapes
+        jb = _dtw._pad_pow2(len(live), lo=1)
+        npad = _dtw._pad_pow2(max(queries[i].shape[0] for i in live))
+        xs = np.zeros((jb, npad), np.float32)
+        xl = np.zeros((jb,), np.int32)
+        sx = np.zeros((jb,), np.float32)
+        sxx = np.zeros((jb,), np.float32)
+        for r, i in enumerate(live):
+            q = queries[i]
+            xs[r, : q.shape[0]] = q
+            xl[r] = q.shape[0]
+            sx[r], sxx[r] = _dtw.query_moments(q)
+        scores = np.asarray(_dtw.dtw_score_bank_many(
+            xs, self.bank.series, self.bank.lengths, xlens=xl,
+            band=self.band, sx=sx, sxx=sxx,
+            plan=self.bank.score_plan()), np.float64)
+        self.offline_dispatch_count += 1
+        for r, i in enumerate(live):
+            out[i] = scores[r]
+        return out
+
+    def _render_verdict(self, job_id: str, sims: np.ndarray,
+                        early: Optional[TuneDecision]) -> TuneDecision:
         scores = self._reduce(sims)
         leader, ls, _ = self._rank(scores)
         matched = leader if ls >= self.threshold else None
         cfg = self.db.best_config(matched) \
             if self.db is not None and matched is not None else None
-        del self._jobs[job_id]
-        # a drain tick may have parked this job's own early decision for
-        # later delivery; it must not outlive the job (the id is reusable)
-        self._undelivered.pop(job_id, None)
-        self._free.append(job.slot)
         decision = TuneDecision(
             workload=job_id, matched=matched, corr=ls, config=cfg,
             scores=scores, fraction_seen=1.0, final=True,
-            decided_at_fraction=(job.early.decided_at_fraction
-                                 if job.early is not None else 1.0))
+            decided_at_fraction=(early.decided_at_fraction
+                                 if early is not None else 1.0))
         if self.db is not None:
             self.db.record_decision(decision)
         return decision
+
+    def _drain_tick_for(self, finishing) -> None:
+        """Flush buffered samples before a verdict (ONE tick covering
+        every live job) and park early decisions emitted for jobs that
+        are NOT being finished, so they surface from the next tick()."""
+        if any(self._jobs[j].buffered for j in finishing):
+            emitted = self.tick()
+            for jid, d in emitted.items():
+                if jid not in finishing and d is not None:
+                    self._undelivered[jid] = d
+
+    def _retire(self, job_id: str):
+        """Free a job's slot, returning its (full query, early decision).
+        A parked early decision must not outlive the job (the id is
+        reusable), so it is purged here."""
+        job = self._jobs.pop(job_id)
+        self._undelivered.pop(job_id, None)
+        self._free.append(job.slot)
+        return job.x.view(), job.early
+
+    def finish(self, job_id: str) -> TuneDecision:
+        """Final verdict for a completed job, recomputed offline from the
+        full streamed (causally filtered) query by the matrix-free
+        closed-end scorer.  Frees the slot and, when a ReferenceDB backs
+        the service, records the decision history.  For many jobs ending
+        together prefer :meth:`finish_many` (or the
+        :meth:`finish_later` drain queue): the verdict dispatch amortizes
+        across jobs instead of growing 1:1 with completions."""
+        return self.finish_many((job_id,))[job_id]
+
+    def finish_many(self, job_ids) -> Dict[str, TuneDecision]:
+        """Final verdicts for several completed jobs — ONE buffer-drain
+        tick plus ONE batched offline scoring dispatch
+        (``offline_dispatch_count`` grows per *drain*, not per job), each
+        decision identical to what a sequential :meth:`finish` would have
+        rendered."""
+        ids = list(job_ids)
+        if len(set(ids)) != len(ids):
+            raise ValueError("duplicate job ids in finish_many")
+        missing = [j for j in ids if j not in self._jobs]
+        if missing:
+            raise KeyError(f"unknown job(s): {missing}")
+        if not ids:
+            return {}
+        self._drain_tick_for(set(ids))
+        retired = [self._retire(j) for j in ids]
+        sims = self._verdict_scores([x for x, _ in retired])
+        return {jid: self._render_verdict(jid, sims[i], retired[i][1])
+                for i, jid in enumerate(ids)}
+
+    def finish_later(self, job_id: str) -> None:
+        """Deferred finish: the job leaves its slot now (so slots
+        recycle), but its verdict joins the drain queue and is rendered
+        by the next :meth:`drain_finishes` — or automatically once
+        ``finish_batch`` verdicts are pending — in one batched dispatch
+        with the others.
+
+        Job ids are reusable once retired, but a pending verdict claims
+        the id until it is delivered: deferring a reused id while its
+        predecessor's verdict is still undelivered would silently drop
+        one of the two decisions (they are keyed by id), so that is
+        refused — drain first.
+        """
+        if any(jid == job_id for jid, _, _ in self._finish_queue) \
+                or job_id in self._finished:
+            raise ValueError(
+                f"a verdict for job {job_id!r} is already pending "
+                "delivery; drain_finishes() before deferring a reused id")
+        self._drain_tick_for({job_id})
+        x, early = self._retire(job_id)
+        self._finish_queue.append((job_id, x, early))
+        if len(self._finish_queue) >= self.finish_batch:
+            self._finished.update(self._drain_queue())
+
+    def _drain_queue(self) -> Dict[str, TuneDecision]:
+        if not self._finish_queue:
+            return {}
+        queued, self._finish_queue = self._finish_queue, []
+        sims = self._verdict_scores([x for _, x, _ in queued])
+        return {jid: self._render_verdict(jid, sims[i], early)
+                for i, (jid, _, early) in enumerate(queued)}
+
+    def drain_finishes(self) -> Dict[str, TuneDecision]:
+        """Render every deferred verdict (one batched dispatch), plus any
+        decisions an automatic drain already rendered but has not yet
+        delivered."""
+        out = self._finished
+        self._finished = {}
+        out.update(self._drain_queue())
+        return out
+
+    @property
+    def pending_finishes(self) -> int:
+        """Verdicts owed to the caller: queued by :meth:`finish_later`
+        and not yet rendered, PLUS auto-drained decisions not yet
+        delivered — ``if svc.pending_finishes: svc.drain_finishes()`` is
+        the intended polling idiom and must not skip either kind."""
+        return len(self._finish_queue) + len(self._finished)

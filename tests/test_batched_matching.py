@@ -80,11 +80,20 @@ def test_matrix_pairs_ragged_both_sides():
 
 
 def test_similarity_bank_matches_scalar_loop(ragged_set):
+    """The matrix path reproduces the scalar loop to float tolerance; the
+    default (matrix-free moment scorer) agrees to warp-path-tie tolerance
+    on this continuous-noise data — float rounding differences between
+    the wavefront and the min-plus scan can flip near-tie backtrack
+    choices, which moves individual warp paths by ~1e-3 but never the
+    ranking-scale structure (exactness is pinned on tie-free data in
+    tests/test_scored_matching.py)."""
     x, series, bank = ragged_set
     for band in (None, 8):
-        got = similarity_bank(x, bank, band=band)
         want = np.array([similarity(x, s, band=band) for s in series])
-        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+        got_matrix = similarity_bank(x, bank, band=band, matrix_path=True)
+        np.testing.assert_allclose(got_matrix, want, rtol=1e-4, atol=1e-4)
+        got = similarity_bank(x, bank, band=band)
+        np.testing.assert_allclose(got, want, atol=5e-3)
 
 
 def test_preprocess_bank_rows_equal_scalar_preprocess(ragged_set):
@@ -99,18 +108,27 @@ def test_preprocess_bank_rows_equal_scalar_preprocess(ragged_set):
 
 def test_similarity_bank_preprocessed_matches_scalar_loop(ragged_set):
     x, series, bank = ragged_set
-    got = similarity_bank(x, bank, preprocess=True, band=8)
     want = np.array([similarity(x, s, preprocess=True, band=8)
                      for s in series])
-    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    got_matrix = similarity_bank(x, bank, preprocess=True, band=8,
+                                 matrix_path=True)
+    np.testing.assert_allclose(got_matrix, want, rtol=1e-4, atol=1e-4)
+    got = similarity_bank(x, bank, preprocess=True, band=8)
+    np.testing.assert_allclose(got, want, atol=5e-3)
 
 
 def test_match_series_is_batched_equivalent(ragged_set):
-    x, series, _ = ragged_set
+    x, series, bank = ragged_set
     refs = {f"r{k}": s for k, s in enumerate(series)}
     got = match_series(x, refs, preprocess=False, band=4)
-    for name, s in refs.items():
-        assert got[name] == pytest.approx(similarity(x, s, band=4), abs=1e-4)
+    # same engine as similarity_bank: exact agreement
+    sims = similarity_bank(x, bank, band=4)
+    for k, name in enumerate(refs):
+        assert got[name] == sims[k]
+        # scalar loop to warp-path-tie tolerance (see
+        # test_similarity_bank_matches_scalar_loop)
+        assert got[name] == pytest.approx(
+            similarity(x, series[k], band=4), abs=5e-3)
 
 
 def test_similarity_surfaces_negative_correlation():

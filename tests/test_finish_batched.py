@@ -1,0 +1,204 @@
+"""Batched finish verdicts (TuningService.finish_many / finish_later).
+
+Contract: J jobs finished in one drain produce TuneDecisions IDENTICAL to
+J sequential ``finish()`` calls — bitwise, not approximately: the
+matrix-free verdict scorer's per-cell arithmetic and the host-side
+per-query moment folds are both independent of how verdicts batch —
+while ``offline_dispatch_count`` grows per drain instead of per job.
+"""
+import numpy as np
+import pytest
+
+from repro import mrsim
+from repro.core.database import ReferenceDB, SeriesBank, pack_series
+from repro.core.filters import preprocess_bank
+from repro.serve.tuning import TuningService
+
+
+@pytest.fixture(scope="module")
+def paper_bank():
+    psets = mrsim.paper_param_sets()
+    series, labels = [], []
+    for app in ("wordcount", "terasort"):
+        for p in psets:
+            series.append(mrsim.simulate_cpu_series(app, p, dt=0.25))
+            labels.append(app)
+    bank = pack_series(series, labels=labels)
+    return SeriesBank(preprocess_bank(bank.series, bank.lengths),
+                      bank.lengths, bank.labels, bank.entries)
+
+
+@pytest.fixture(scope="module")
+def queries():
+    p = mrsim.paper_param_sets()[0]
+    return {f"{app}{r}": mrsim.simulate_cpu_series(app, p, run=r, dt=0.25)
+            for app in ("wordcount", "terasort", "exim") for r in (1, 2)}
+
+
+def _decisions_equal(a, b):
+    assert a.workload == b.workload
+    assert a.matched == b.matched
+    assert a.corr == b.corr                     # bitwise, not approx
+    assert a.scores == b.scores
+    assert a.config == b.config
+    assert a.decided_at_fraction == b.decided_at_fraction
+    assert a.final and b.final
+
+
+def _run(svc, queries, chunk=16):
+    for jid, q in queries.items():
+        svc.submit(jid, expected_len=len(q))
+    n = max(len(q) for q in queries.values())
+    for lo in range(0, n, chunk):
+        for jid, q in queries.items():
+            svc.push(jid, q[lo: lo + chunk])
+        svc.tick()
+
+
+def test_finish_many_equals_sequential_finish(paper_bank, queries):
+    svc_seq = TuningService(paper_bank, band=16, denoise=True)
+    svc_bat = TuningService(paper_bank, band=16, denoise=True)
+    _run(svc_seq, queries)
+    _run(svc_bat, queries)
+
+    ids = list(queries)
+    seq = {jid: svc_seq.finish(jid) for jid in ids}
+    bat = svc_bat.finish_many(ids)
+    assert set(bat) == set(ids)
+    for jid in ids:
+        _decisions_equal(bat[jid], seq[jid])
+    # the whole point: J verdicts, ONE batched dispatch (sublinear in J)
+    assert svc_seq.offline_dispatch_count == len(ids)
+    assert svc_bat.offline_dispatch_count == 1
+    assert svc_bat.n_active == 0
+    # slots all freed
+    svc_bat.submit("again", expected_len=32)
+
+
+def test_finish_many_drains_buffers_once(paper_bank, queries):
+    """Buffered samples are flushed by ONE internal tick for the whole
+    batch (sequential finishes reach the same state because the first
+    finish's tick drains every job's buffer)."""
+    svc = TuningService(paper_bank, band=16, denoise=True, threshold=0.85)
+    for jid, q in queries.items():
+        svc.submit(jid, expected_len=len(q))
+        svc.push(jid, q)                      # everything still buffered
+    dispatches_before = svc.dispatch_count
+    out = svc.finish_many(list(queries))
+    assert svc.dispatch_count == dispatches_before + 1
+    assert svc.offline_dispatch_count == 1
+    for jid in queries:
+        assert out[jid].final and set(out[jid].scores) == {"wordcount",
+                                                           "terasort"}
+    # the text-parse family resolves to wordcount (paper Table-1)
+    assert out["wordcount1"].matched == "wordcount"
+    assert out["exim1"].matched == "wordcount"
+
+
+def test_finish_many_rejects_duplicates_and_unknown(paper_bank):
+    svc = TuningService(paper_bank)
+    svc.submit("a", expected_len=8)
+    with pytest.raises(ValueError, match="duplicate"):
+        svc.finish_many(["a", "a"])
+    with pytest.raises(KeyError, match="ghost"):
+        svc.finish_many(["a", "ghost"])
+    assert svc.finish_many([]) == {}
+    assert "a" in svc._jobs                   # failed calls retired nothing
+
+
+def test_finish_later_drain_queue(paper_bank, queries):
+    """finish_later frees the slot immediately, parks the verdict, and a
+    drain renders every queued verdict in ONE dispatch — identical to
+    what finish() would have produced."""
+    svc_ref = TuningService(paper_bank, band=16, denoise=True)
+    svc = TuningService(paper_bank, band=16, denoise=True, slots=6,
+                        finish_batch=64)
+    _run(svc_ref, queries)
+    _run(svc, queries)
+    want = {jid: svc_ref.finish(jid) for jid in queries}
+
+    for jid in queries:
+        svc.finish_later(jid)
+    assert svc.n_active == 0                  # slots free before any drain
+    assert svc.pending_finishes == len(queries)
+    assert svc.offline_dispatch_count == 0    # nothing rendered yet
+    svc.submit("reuse", expected_len=16)      # slot genuinely reusable
+    out = svc.drain_finishes()
+    assert svc.pending_finishes == 0
+    assert svc.offline_dispatch_count == 1
+    assert set(out) == set(queries)
+    for jid in queries:
+        _decisions_equal(out[jid], want[jid])
+
+
+def test_finish_later_auto_drains_at_batch_size(paper_bank, queries):
+    ids = list(queries)
+    svc = TuningService(paper_bank, band=16, denoise=True, slots=6,
+                        finish_batch=3)
+    _run(svc, queries)
+    for jid in ids[:2]:
+        svc.finish_later(jid)
+    assert svc.pending_finishes == 2 and svc.offline_dispatch_count == 0
+    svc.finish_later(ids[2])                  # hits finish_batch=3
+    # rendered but NOT yet delivered: still owed to the caller, so the
+    # `if pending_finishes: drain_finishes()` polling idiom works
+    assert svc.pending_finishes == 3
+    assert svc.offline_dispatch_count == 1
+    # auto-drained decisions are delivered by the next drain_finishes,
+    # alongside any later queue
+    for jid in ids[3:]:
+        svc.finish_later(jid)
+    out = svc.drain_finishes()
+    assert set(out) == set(ids)
+    assert svc.offline_dispatch_count == 2    # 6 verdicts, 2 dispatches
+    assert svc.drain_finishes() == {}
+
+
+def test_finish_later_refuses_reused_id_with_pending_verdict(paper_bank):
+    """A pending verdict claims its job id until delivered: deferring a
+    reused id would silently drop one of the two decisions (the drain
+    dict is keyed by id), so it must refuse instead."""
+    q = mrsim.simulate_cpu_series("wordcount", mrsim.paper_param_sets()[0],
+                                  run=1, dt=0.25)
+    svc = TuningService(paper_bank, band=16, denoise=True,
+                        finish_batch=64)
+    svc.submit("a", expected_len=len(q))
+    svc.push("a", q)
+    svc.tick()
+    svc.finish_later("a")
+    svc.submit("a", expected_len=len(q))      # id reuse itself is fine
+    svc.push("a", q)
+    svc.tick()
+    with pytest.raises(ValueError, match="already pending"):
+        svc.finish_later("a")
+    out = svc.drain_finishes()                # delivers the first verdict
+    assert set(out) == {"a"}
+    svc.finish_later("a")                     # now the id is free again
+    assert set(svc.drain_finishes()) == {"a"}
+
+
+def test_finish_later_records_history_and_sublinear_dispatches():
+    """DB-backed drain records every decision; dispatch count stays
+    sublinear in completions (the acceptance-criteria pin)."""
+    p = mrsim.paper_param_sets()[0]
+    db = ReferenceDB()
+    for app in ("wordcount", "terasort"):
+        s = mrsim.simulate_cpu_series(app, p, dt=0.25)
+        db.add(app, {"p": 0}, preprocess_bank(
+            s[None].astype(np.float32),
+            np.asarray([len(s)], np.int32))[0])
+    svc = TuningService(db, band=16, denoise=True, slots=8,
+                        finish_batch=4)
+    q = mrsim.simulate_cpu_series("wordcount", p, run=1, dt=0.25)
+    n_jobs = 8
+    for j in range(n_jobs):
+        svc.submit(f"j{j}", expected_len=len(q))
+        svc.push(f"j{j}", q)
+    svc.tick()
+    for j in range(n_jobs):
+        svc.finish_later(f"j{j}")
+    out = svc.drain_finishes()
+    assert len(out) == n_jobs
+    assert svc.offline_dispatch_count == 2    # two finish_batch=4 drains
+    assert svc.offline_dispatch_count < n_jobs
+    assert len(db.decision_history(matched="wordcount")) == n_jobs
