@@ -20,6 +20,16 @@
    workload, lands within 3x of the distance-only tick, keeps every
    job's true reference alive, ranks the same leaders as the unpruned
    service, and dispatches == ticks with re-packs counted separately.
+5. Continuous-batching churn (stream_tick_S{8,64,256,1024}): seeded
+   Poisson arrivals and finishes EVERY tick against the 3-app paper
+   bank, jobs split across mixed 4/20/100 Hz tick-rate cohorts, slots
+   elastic (S-axis power-of-two buckets growing/compact-shrinking under
+   the live set), completions retired through the batched finish_later
+   drain queue.  Gates: the scenario runs end-to-end at every S with
+   dispatches bounded by data-ticks (one dispatch per tick however many
+   jobs/cohorts are live), and the elastic run's decisions — early and
+   final — are BIT-identical to a fixed-slot reference run of the same
+   schedule.
 """
 
 from __future__ import annotations
@@ -385,10 +395,118 @@ def _pruned_scored_rows():
     ]
 
 
+#: churn-scenario knobs: slot capacities swept, wall-clock ticks per
+#: scenario (the clock advances at the fastest cohort's 100 Hz), samples
+#: pushed per job per tick, and the mixed tick-rate cohorts jobs are
+#: assigned to round-robin.
+CHURN_SIZES = (8, 64, 256, 1024)
+CHURN_TICKS = 40
+CHURN_CHUNK = 2
+CHURN_RATES = (100.0, 20.0, 4.0)
+
+
+def _churn_run(bank, bases, s, elastic, seed=11):
+    """One churn scenario: Poisson arrivals (clamped to capacity), every
+    live job pushing CHURN_CHUNK samples per 10 ms beat, cohort-metered
+    ticks, and completions retired through the finish_later drain queue
+    once their ingest queue is empty (so a deferred finish never forces
+    an off-beat drain).  The event schedule is a pure function of
+    ``seed`` — identical for the elastic and fixed-slot runs."""
+    rng = np.random.default_rng(seed)
+    svc = TuningService(bank, band=BAND, denoise=True, slots=s,
+                        elastic_slots=elastic, finish_batch=16)
+    live, early, finals = {}, {}, {}
+    n_sub = 0
+    lam = max(1.0, s / 12)
+    for t in range(CHURN_TICKS):
+        for _ in range(int(rng.poisson(lam))):
+            if svc.n_active >= s:
+                break
+            base = bases[n_sub % len(bases)]
+            ln = int(rng.integers(48, 97))
+            off = int(rng.integers(0, max(1, len(base) - ln)))
+            q = base[off: off + ln]
+            jid = f"c{n_sub}"
+            svc.submit(jid, expected_len=len(q),
+                       tick_hz=CHURN_RATES[n_sub % len(CHURN_RATES)])
+            live[jid] = [q, 0]
+            n_sub += 1
+        for jid, st in live.items():
+            q, pos = st
+            if pos < len(q):
+                svc.push(jid, q[pos: pos + CHURN_CHUNK])
+                st[1] = min(pos + CHURN_CHUNK, len(q))
+        for jid, d in svc.tick(now=t / 100.0).items():
+            if d is not None:
+                early.setdefault(jid, d)
+        for jid in [j for j, (q, pos) in live.items()
+                    if pos >= len(q) and not svc._front.has_data(j)]:
+            svc.finish_later(jid)             # batched: drains at 16
+            del live[jid]
+    finals.update(svc.drain_finishes())
+    rest = sorted(live)
+    for i in range(0, len(rest), 32):
+        finals.update(svc.finish_many(rest[i: i + 32]))
+    finals.update(svc.drain_finishes())
+    assert len(finals) == n_sub, (len(finals), n_sub)
+    return svc, early, finals
+
+
+def _decision_keys(early, finals):
+    return ({j: (d.matched, d.corr, d.decided_at_fraction)
+             for j, d in early.items()},
+            {j: (d.matched, d.corr, d.decided_at_fraction)
+             for j, d in finals.items()})
+
+
+def _churn_rows():
+    bank = _paper_bank(tuple(mrsim.APPS))
+    psets = mrsim.paper_param_sets()
+    bases = [mrsim.simulate_cpu_series(app, psets[i], run=1, dt=DT)
+             for i, app in enumerate(mrsim.APPS)]
+    rows = []
+    for s in CHURN_SIZES:
+        _churn_run(bank, bases, s, elastic=True)   # warm the jit cache
+        t0 = time.time()
+        svc, early, finals = _churn_run(bank, bases, s, elastic=True)
+        us = (time.time() - t0) / CHURN_TICKS * 1e6
+
+        # one dispatch per data tick, however many jobs/cohorts are live
+        assert svc.dispatch_count <= svc.ticks, \
+            (svc.dispatch_count, svc.ticks)
+        if s > MIN_SLOT_BUCKET_SENTINEL:
+            assert svc.slot_repack_count > 0, \
+                "elastic churn never crossed an S bucket"
+
+        # the churn invariant, end to end: elastic decisions are
+        # bit-identical to the fixed-slot reference of the same schedule
+        _, ef, ff = _churn_run(bank, bases, s, elastic=False)
+        assert _decision_keys(early, finals) == _decision_keys(ef, ff), \
+            f"elastic vs fixed-slot decisions diverged at S={s}"
+
+        print(f"[streaming] S={s:4d}: {us / 1e3:7.2f} ms/tick churn "
+              f"({len(finals)} jobs, {svc.dispatch_count} dispatches / "
+              f"{svc.ticks} ticks, cap={svc.slot_capacity}, "
+              f"slot_repacks={svc.slot_repack_count}, "
+              f"verdict_dispatches={svc.offline_dispatch_count})")
+        rows.append((f"stream_tick_S{s}", us,
+                     f"jobs={len(finals)};dispatches={svc.dispatch_count}"
+                     f";ticks={svc.ticks};cap={svc.slot_capacity}"
+                     f";slot_repacks={svc.slot_repack_count}"
+                     f";verdicts={svc.offline_dispatch_count}"
+                     f";cohorts={len(CHURN_RATES)}"))
+    return rows
+
+
+#: smallest elastic bucket (mirrors serve.scheduler.MIN_SLOT_BUCKET): at
+#: or below it there is no capacity to grow through, so no repacks.
+MIN_SLOT_BUCKET_SENTINEL = 8
+
+
 def run():
     return (_early_decision_rows() + _multiplex_rows()
             + _equivalence_rows() + _throughput_rows()
-            + _pruned_scored_rows())
+            + _pruned_scored_rows() + _churn_rows())
 
 
 if __name__ == "__main__":

@@ -16,9 +16,15 @@ NOTE: ``run.py --json`` REWRITES the repo-root baselines as a side
 effect, so CI snapshots them (``--baseline-dir``) before running the
 benches; comparing against the freshly rewritten files would be vacuous.
 
+``--require-row NAME`` pins an individual row: the named row must be
+present in the fresh output (baseline or not), so a scenario silently
+dropped from a bench (e.g. one of the ``stream_tick_S*`` churn sizes)
+fails the guard even while the bench as a whole still contributes rows.
+
     python -m benchmarks.check_regression \
         --fresh fresh_matching.json --fresh fresh_streaming.json \
         --require matching --require streaming \
+        --require-row stream_tick_S1024 \
         [--baseline-dir DIR] [--threshold 0.25]
 """
 
@@ -53,6 +59,10 @@ def main() -> None:
                     help="bench name (BENCH_<name>.json) that must "
                          "contribute fresh rows; repeatable.  Guards "
                          "against a crashed bench passing vacuously.")
+    ap.add_argument("--require-row", action="append", default=[],
+                    help="row name that must appear in the fresh output; "
+                         "repeatable.  Guards against a scenario being "
+                         "silently dropped from a still-running bench.")
     args = ap.parse_args()
 
     baseline: dict = {}
@@ -84,6 +94,13 @@ def main() -> None:
         if hit == 0:
             uncovered.append((name, "no fresh rows (bench crashed or "
                                     "not run?)"))
+    for row in args.require_row:
+        if row in fresh:
+            print(f"[coverage] row {row}: present "
+                  f"({fresh[row]:.1f} us)")
+        else:
+            uncovered.append((row, "required row missing from fresh "
+                                    "output (scenario dropped?)"))
 
     regressions = []
     for name in sorted(baseline):

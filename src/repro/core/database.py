@@ -31,7 +31,33 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["Entry", "SeriesBank", "pack_series", "ReferenceDB"]
+__all__ = ["Entry", "SeriesBank", "pack_series", "ReferenceDB",
+           "atomic_write_npz", "atomic_write_json"]
+
+
+def atomic_write_npz(dir_path: str, filename: str,
+                     arrays: Mapping[str, np.ndarray]) -> str:
+    """Write ``dir_path/filename`` (an ``.npz``) atomically: compress
+    into a tmp file in the same directory, then ``os.replace`` — readers
+    (and crashed writers) never observe a torn archive.  Shared by the
+    reference-DB persistence and the serving trace log."""
+    fd, tmp = tempfile.mkstemp(dir=dir_path, suffix=".tmp")
+    os.close(fd)
+    np.savez_compressed(tmp + ".npz", **arrays)
+    final = os.path.join(dir_path, filename)
+    os.replace(tmp + ".npz", final)
+    os.unlink(tmp)
+    return final
+
+
+def atomic_write_json(dir_path: str, filename: str, obj: Any) -> str:
+    """Atomic (tmp+rename) JSON dump next to :func:`atomic_write_npz`."""
+    fd, tmp = tempfile.mkstemp(dir=dir_path, suffix=".json.tmp")
+    with os.fdopen(fd, "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+    final = os.path.join(dir_path, filename)
+    os.replace(tmp, final)
+    return final
 
 
 def _params_key(params: Mapping[str, Any]) -> str:
@@ -274,18 +300,10 @@ class ReferenceDB:
             arrays[key] = e.series
             index.append({"workload": e.workload, "params": e.params,
                           "meta": e.meta, "key": key})
-        # atomic: write into tmp files then rename (np.savez appends .npz)
-        fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp")
-        os.close(fd)
-        np.savez_compressed(tmp + ".npz", **arrays)
-        os.replace(tmp + ".npz", os.path.join(path, "series.npz"))
-        os.unlink(tmp)
-        fd, tmp = tempfile.mkstemp(dir=path, suffix=".json.tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump({"version": 1, "entries": index,
-                       "decisions": self._decisions}, f, indent=1,
-                      default=str)
-        os.replace(tmp, os.path.join(path, "index.json"))
+        atomic_write_npz(path, "series.npz", arrays)
+        atomic_write_json(path, "index.json",
+                          {"version": 1, "entries": index,
+                           "decisions": self._decisions})
 
     @classmethod
     def load(cls, path: str) -> "ReferenceDB":

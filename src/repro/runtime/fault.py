@@ -5,7 +5,10 @@ The control plane is deterministic and clock-injected so every policy is
 unit-testable without real failures:
 
 * :class:`HeartbeatTracker` — workers report (worker_id, step, t); a worker
-  whose last heartbeat is older than ``timeout`` is declared dead.
+  whose last heartbeat is older than ``timeout`` is declared dead.  Ids
+  are any hashable: host ints in the training runtime, job-id strings in
+  the streaming tuning service (``serve.ingest`` beats per push and the
+  slot scheduler evicts swept jobs).
 * :class:`StragglerDetector` — per-step durations; a worker consistently
   slower than ``factor`` x the median over a sliding window is flagged
   (the mitigation at the training-loop level is to drop it from the mesh
@@ -24,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict, deque
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Deque, Dict, Hashable, List, Optional, Sequence
 
 __all__ = ["WorkerState", "HeartbeatTracker", "StragglerDetector",
            "RescaleDecision", "ElasticController"]
@@ -32,7 +35,7 @@ __all__ = ["WorkerState", "HeartbeatTracker", "StragglerDetector",
 
 @dataclasses.dataclass
 class WorkerState:
-    worker_id: int
+    worker_id: Hashable
     last_step: int = -1
     last_time: float = 0.0
     alive: bool = True
@@ -41,15 +44,15 @@ class WorkerState:
 class HeartbeatTracker:
     def __init__(self, timeout: float = 60.0):
         self.timeout = timeout
-        self.workers: Dict[int, WorkerState] = {}
+        self.workers: Dict[Hashable, WorkerState] = {}
 
-    def beat(self, worker_id: int, step: int, now: float) -> None:
+    def beat(self, worker_id: Hashable, step: int, now: float) -> None:
         w = self.workers.setdefault(worker_id, WorkerState(worker_id))
         w.last_step = max(w.last_step, step)
         w.last_time = now
         w.alive = True
 
-    def sweep(self, now: float) -> List[int]:
+    def sweep(self, now: float) -> List[Hashable]:
         """Mark timed-out workers dead; return newly-dead ids."""
         dead = []
         for w in self.workers.values():
@@ -58,8 +61,14 @@ class HeartbeatTracker:
                 dead.append(w.worker_id)
         return sorted(dead)
 
-    def alive_workers(self) -> List[int]:
+    def alive_workers(self) -> List[Hashable]:
         return sorted(w.worker_id for w in self.workers.values() if w.alive)
+
+    def forget(self, worker_id: Hashable) -> None:
+        """Drop a worker that left cleanly (a finished/evicted serving
+        job, a decommissioned host) so it can never be swept as newly
+        dead after the fact — worker ids are reusable."""
+        self.workers.pop(worker_id, None)
 
 
 class StragglerDetector:
@@ -68,10 +77,10 @@ class StragglerDetector:
         self.window = window
         self.factor = factor
         self.min_samples = min_samples
-        self._durations: Dict[int, Deque[float]] = defaultdict(
+        self._durations: Dict[Hashable, Deque[float]] = defaultdict(
             lambda: deque(maxlen=window))
 
-    def record(self, worker_id: int, step_duration: float) -> None:
+    def record(self, worker_id: Hashable, step_duration: float) -> None:
         self._durations[worker_id].append(step_duration)
 
     def _median_of_medians(self) -> Optional[float]:
@@ -85,7 +94,7 @@ class StragglerDetector:
         meds.sort()
         return meds[len(meds) // 2]
 
-    def stragglers(self) -> List[int]:
+    def stragglers(self) -> List[Hashable]:
         base = self._median_of_medians()
         if base is None:
             return []

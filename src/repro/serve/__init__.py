@@ -1,5 +1,10 @@
 from .engine import make_prefill_step, make_decode_step, ServeEngine
-from .tuning import InFlightJob, TuningService
+from .ingest import BackpressureError, BoundedBuffer, IngestFront, TraceLog
+from .scheduler import (MIN_SLOT_BUCKET, SlotScheduler, TickCohorts,
+                        slot_bucket)
+from .tuning import InFlightJob, MultiTenantTuningService, TuningService
 
 __all__ = ["make_prefill_step", "make_decode_step", "ServeEngine",
-           "InFlightJob", "TuningService"]
+           "BackpressureError", "BoundedBuffer", "IngestFront", "TraceLog",
+           "MIN_SLOT_BUCKET", "SlotScheduler", "TickCohorts", "slot_bucket",
+           "InFlightJob", "MultiTenantTuningService", "TuningService"]

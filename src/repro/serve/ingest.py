@@ -1,0 +1,286 @@
+"""Ingest front end of the streaming tuning service.
+
+This is the first layer of the serving stack (``ingest -> scheduler ->
+tick engine -> verdicts``, see ``serve.tuning``): everything that happens
+to a job's samples BEFORE they reach the device-resident matcher lives
+here, so the tick engine only ever sees clean, causally-filtered chunks.
+
+* :class:`BoundedBuffer` — the per-job sample queue.  Monitoring agents
+  push at their own cadence while the service drains at tick rate; an
+  unbounded queue would let one stalled tick loop (or one runaway agent)
+  grow host memory without limit.  ``policy="reject"`` raises
+  :class:`BackpressureError` at the producer (the MapReduce-side agent
+  retries next beat), ``policy="drop_oldest"`` sheds the oldest buffered
+  samples instead (the matcher tolerates a gapped prefix far better than
+  the cluster tolerates a blocked agent).  Dropped samples are counted.
+* :class:`TraceLog` — append-only on-disk capture of every ingested
+  chunk, rotated by segment size and segment count.  The paper's offline
+  pipeline profiles jobs and stores their series in the reference DB;
+  the trace log is how a *serving* deployment gets those series — replay
+  yesterday's accepted traces into ``AutoTuner.profile`` instead of
+  re-running instrumented jobs.  Persistence reuses the reference DB's
+  atomic tmp+rename writers (``core.database``), so a crashed service
+  never leaves a torn segment.
+* :class:`IngestFront` — per-job composition of the above plus the
+  causal streaming Chebyshev filter (``denoise=True``) and heartbeat
+  stamping: every push beats a ``runtime.fault.HeartbeatTracker`` and
+  feeds a ``runtime.fault.StragglerDetector`` with the observed
+  inter-push gaps, which is what lets the scheduler layer evict a
+  stalled job's slot (``TuningService.sweep_stalled``) and flag jobs
+  whose monitoring agent has degraded.
+
+The filter is applied at *drain* time on the concatenated chunk — the
+same call structure the monolithic service used — so layering changes
+no numerics: a drained chunk is bit-identical to what the old
+``tick()`` computed inline.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from ..core.database import atomic_write_json, atomic_write_npz
+from ..core.filters import StreamingFilter
+from ..runtime.fault import HeartbeatTracker, StragglerDetector
+
+__all__ = ["BackpressureError", "BoundedBuffer", "TraceLog", "IngestFront"]
+
+
+class BackpressureError(RuntimeError):
+    """Raised by a full ``policy="reject"`` :class:`BoundedBuffer`."""
+
+
+class BoundedBuffer:
+    """Bounded per-job sample queue between the push side and the tick.
+
+    ``limit`` bounds the number of *samples* (not chunks) buffered;
+    ``None`` means unbounded (the pre-refactor behavior).  On overflow
+    ``policy="reject"`` refuses the whole push with
+    :class:`BackpressureError` — nothing is partially enqueued, so the
+    producer can retry the identical chunk — while ``"drop_oldest"``
+    sheds buffered samples from the front until the new chunk fits
+    (``dropped`` counts every sample lost this way).
+    """
+
+    def __init__(self, limit: Optional[int] = None,
+                 policy: str = "reject") -> None:
+        if policy not in ("reject", "drop_oldest"):
+            raise ValueError(f"unknown backpressure policy {policy!r}")
+        if limit is not None and limit < 1:
+            raise ValueError("queue limit must be >= 1 (or None)")
+        self.limit = limit
+        self.policy = policy
+        self.dropped = 0
+        self.total_in = 0
+        self._chunks: Deque[np.ndarray] = collections.deque()
+        self._pending = 0
+
+    def __len__(self) -> int:
+        return self._pending
+
+    def append(self, samples: np.ndarray) -> None:
+        s = np.asarray(samples, np.float32).reshape(-1)
+        if not s.shape[0]:
+            return
+        if self.limit is not None and self._pending + s.shape[0] > self.limit:
+            if self.policy == "reject":
+                raise BackpressureError(
+                    f"buffer full ({self._pending}/{self.limit} samples "
+                    f"pending); tick() the service or slow the producer")
+            if s.shape[0] >= self.limit:      # chunk alone overflows
+                self.dropped += self._pending + s.shape[0] - self.limit
+                self._chunks.clear()
+                self._pending = 0
+                s = s[-self.limit:]
+            else:
+                while self._pending + s.shape[0] > self.limit:
+                    head = self._chunks[0]
+                    need = self._pending + s.shape[0] - self.limit
+                    if head.shape[0] <= need:
+                        self._chunks.popleft()
+                        self._pending -= head.shape[0]
+                        self.dropped += head.shape[0]
+                    else:
+                        self._chunks[0] = head[need:]
+                        self._pending -= need
+                        self.dropped += need
+        self._chunks.append(s)
+        self._pending += s.shape[0]
+        self.total_in += s.shape[0]
+
+    def drain(self) -> Optional[np.ndarray]:
+        """All buffered samples as one chunk (None when empty)."""
+        if not self._pending:
+            return None
+        out = self._chunks.popleft() if len(self._chunks) == 1 \
+            else np.concatenate(self._chunks)
+        self._chunks.clear()
+        self._pending = 0
+        return out
+
+
+class TraceLog:
+    """Size-rotated on-disk capture of ingested chunks.
+
+    Chunks accumulate in memory and flush to ``seg-<n>.npz`` once
+    ``max_segment_bytes`` of float32 samples are pending (or on an
+    explicit :meth:`flush`); only the newest ``max_segments`` segment
+    files are kept.  A ``trace_index.json`` manifest records the live
+    segment names.  Writes are atomic (tmp+rename via
+    ``core.database``), so readers — and a service restarted mid-write —
+    never observe a torn file.
+    """
+
+    def __init__(self, path: str, *, max_segment_bytes: int = 1 << 20,
+                 max_segments: int = 8) -> None:
+        import os
+        if max_segment_bytes < 4 or max_segments < 1:
+            raise ValueError("rotation limits must be positive")
+        os.makedirs(path, exist_ok=True)
+        self.path = path
+        self.max_segment_bytes = max_segment_bytes
+        self.max_segments = max_segments
+        self._pending: List[tuple] = []        # (seq, job_id, chunk)
+        self._pending_bytes = 0
+        self._seq = 0
+        self._segments: List[str] = []
+
+    def append(self, job_id: str, samples: np.ndarray) -> None:
+        s = np.asarray(samples, np.float32).reshape(-1)
+        if not s.shape[0]:
+            return
+        self._pending.append((self._seq, job_id, s))
+        self._seq += 1
+        self._pending_bytes += 4 * s.shape[0]
+        if self._pending_bytes >= self.max_segment_bytes:
+            self.flush()
+
+    def flush(self) -> None:
+        import os
+        if not self._pending:
+            return
+        name = f"seg-{self._pending[0][0]:08d}.npz"
+        arrays = {f"c{seq:08d}__{job_id}": chunk
+                  for seq, job_id, chunk in self._pending}
+        atomic_write_npz(self.path, name, arrays)
+        self._pending = []
+        self._pending_bytes = 0
+        self._segments.append(name)
+        while len(self._segments) > self.max_segments:     # rotate
+            old = self._segments.pop(0)
+            try:
+                os.unlink(os.path.join(self.path, old))
+            except FileNotFoundError:
+                pass
+        atomic_write_json(self.path, "trace_index.json",
+                          {"version": 1, "segments": self._segments})
+
+    def segments(self) -> List[str]:
+        return list(self._segments)
+
+    def read_job(self, job_id: str) -> np.ndarray:
+        """Concatenated retained samples of one job, ingest order (the
+        replay path into ``AutoTuner.profile``).  Pending un-flushed
+        chunks are included."""
+        import os
+        parts: List[tuple] = []
+        for seg in self._segments:
+            with np.load(os.path.join(self.path, seg)) as z:
+                for key in z.files:
+                    seq, _, jid = key.partition("__")
+                    if jid == job_id:
+                        parts.append((int(seq[1:]), z[key]))
+        for seq, jid, chunk in self._pending:
+            if jid == job_id:
+                parts.append((seq, chunk))
+        if not parts:
+            return np.zeros((0,), np.float32)
+        return np.concatenate([c for _, c in sorted(parts,
+                                                    key=lambda p: p[0])])
+
+
+class _JobIngest:
+    """Per-job ingest state: queue + causal filter."""
+
+    __slots__ = ("buffer", "filt", "pushed")
+
+    def __init__(self, buffer: BoundedBuffer,
+                 filt: Optional[StreamingFilter]) -> None:
+        self.buffer = buffer
+        self.filt = filt
+        self.pushed = 0
+
+
+class IngestFront:
+    """Routes pushes into per-job bounded queues, stamps heartbeats, and
+    hands the tick engine causally-filtered chunks on drain."""
+
+    def __init__(self, *, denoise: bool = False,
+                 queue_limit: Optional[int] = None,
+                 queue_policy: str = "reject",
+                 trace: Optional[TraceLog] = None,
+                 heartbeat_timeout: Optional[float] = None,
+                 straggler_factor: float = 2.0) -> None:
+        BoundedBuffer(queue_limit, queue_policy)   # validate eagerly
+        self.denoise = denoise
+        self.queue_limit = queue_limit
+        self.queue_policy = queue_policy
+        self.trace = trace
+        self.heartbeats = HeartbeatTracker(timeout=heartbeat_timeout) \
+            if heartbeat_timeout is not None else None
+        self.stragglers = StragglerDetector(factor=straggler_factor)
+        self._jobs: Dict[str, _JobIngest] = {}
+        self._last_push: Dict[str, float] = {}
+
+    def register(self, job_id: str) -> None:
+        self._jobs[job_id] = _JobIngest(
+            BoundedBuffer(self.queue_limit, self.queue_policy),
+            StreamingFilter() if self.denoise else None)
+
+    def push(self, job_id: str, samples: np.ndarray,
+             now: Optional[float] = None) -> None:
+        ji = self._jobs[job_id]
+        s = np.asarray(samples, np.float32).reshape(-1)
+        ji.buffer.append(s)                      # may raise Backpressure
+        ji.pushed += s.shape[0]
+        if self.trace is not None and s.shape[0]:
+            self.trace.append(job_id, s)
+        if now is not None:
+            if self.heartbeats is not None:
+                self.heartbeats.beat(job_id, ji.pushed, now)
+            prev = self._last_push.get(job_id)
+            if prev is not None and now > prev:
+                self.stragglers.record(job_id, now - prev)
+            self._last_push[job_id] = now
+
+    def has_data(self, job_id: str) -> bool:
+        return len(self._jobs[job_id].buffer) > 0
+
+    def drain(self, job_id: str) -> Optional[np.ndarray]:
+        """Buffered samples as ONE causally-filtered chunk (None when
+        the queue is empty) — bit-identical to filtering the same
+        samples in any other push/drain grouping (the streaming filter
+        is stateful and causal)."""
+        ji = self._jobs[job_id]
+        chunk = ji.buffer.drain()
+        if chunk is None:
+            return None
+        return ji.filt(chunk) if ji.filt is not None else chunk
+
+    def dropped(self, job_id: str) -> int:
+        return self._jobs[job_id].buffer.dropped
+
+    def stalled(self, now: float) -> List[str]:
+        """Job ids newly declared dead by the heartbeat tracker."""
+        if self.heartbeats is None:
+            return []
+        return [j for j in self.heartbeats.sweep(now) if j in self._jobs]
+
+    def retire(self, job_id: str) -> None:
+        self._jobs.pop(job_id)
+        self._last_push.pop(job_id, None)
+        if self.heartbeats is not None:
+            self.heartbeats.forget(job_id)

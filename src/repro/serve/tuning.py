@@ -6,91 +6,102 @@ soon as the most probable execution pattern is clear, transfer that
 workload's tuned configuration.  The offline ``AutoTuner.match`` scores
 complete series only; this service runs the matching phase online.
 
-Architecture (device-resident tick)
------------------------------------
-* Each in-flight job occupies one of ``slots`` fixed slots (continuous-
-  batching style, like ``serve.engine.ServeEngine``).  Its incremental DTW
-  state — the DP row against the whole reference bank, plus the warp-path
-  correlation moments of every row cell — lives stacked with every other
-  job's as ``[S, M, K]`` / ``[3, S, M, K]`` device arrays (K last, so the
-  reference axis both vectorizes and shards).
-* :meth:`tick` drains every job's buffered samples in **one** jitted
-  dispatch of the wavefront chunk-extend (``core.dtw``), with prefix
-  scoring FUSED into the same dispatch: the device returns a ``[S, K]``
-  open-end warp-correlation array, not DP rows.  Nothing of shape
-  [C, S, K, M] ever crosses the device boundary — the PR-2 design shipped
-  the full row stack to the host and backtracked in numpy every tick.
-  ``dispatch_count`` records the invariant: dispatches == ticks(with data)
-  no matter how many jobs are in flight.  On TPU backends BOTH tick
-  flavors route to the Pallas streaming kernels (``kernels.dtw.stream``):
-  the distance-only tick pins the DP row in VMEM across the chunk, the
-  scoring tick additionally pins the three warp-path moment slabs and
-  carries them through the DP in the same program.
+Layered serving stack
+---------------------
+The service is a continuous-batching front split into four layers; this
+module is the tick engine and verdict renderer, and the facade that wires
+the stack together:
+
+* **ingest** (``serve.ingest``): bounded per-job sample queues with
+  backpressure, optional rotated trace persistence, the causal streaming
+  Chebyshev filter, and heartbeat/straggler stamping of every push.
+* **scheduler** (``serve.scheduler``): slot admission/eviction with
+  power-of-two S-axis capacity buckets (the device state is sized to the
+  ACTIVE job count, growing and compact-shrinking by on-device gathers —
+  the S twin of the prefilter's K-axis re-pack), plus tick-rate cohorts
+  so ``tick(now=...)`` drains a 4 Hz trace only on its own beats.
+* **tick engine** (this module + ``core.dtw``): the device-resident
+  fused scored-extend dispatch, unchanged numerics.
+* **verdicts** (this module): matrix-free batched finish rendering.
+
+Tick engine (device-resident tick)
+----------------------------------
+* Each in-flight job occupies one slot of the current S bucket.  Its
+  incremental DTW state — the DP row against the whole reference bank,
+  plus the warp-path correlation moments of every row cell — lives
+  stacked with every other job's as ``[S, M, K]`` / ``[3, S, M, K]``
+  device arrays (K last, so the reference axis both vectorizes and
+  shards).
+* :meth:`TuningService.tick` drains every due job's buffered samples in
+  **one** jitted dispatch of the wavefront chunk-extend (``core.dtw``),
+  with prefix scoring FUSED into the same dispatch: the device returns a
+  ``[S, K]`` open-end warp-correlation array, not DP rows.
+  ``dispatch_count`` records the invariant: dispatches == ticks(with
+  data) no matter how many jobs are in flight.  On TPU backends BOTH
+  tick flavors route to the Pallas streaming kernels
+  (``kernels.dtw.stream``).
 * ``mesh=`` shards the bank: a 1-D device mesh partitions the ``[M, K]``
-  reference bank and every ``[.., K]`` state slab over its single axis via
-  ``sharding.compat.shard_map`` (tick fan-out, ``[S, K]`` score gather).
-  K scales with device count; the computation is per-reference, so the
-  sharded tick is bit-identical to the unsharded one and remains ONE
-  dispatch.
-* ``prefilter_top=`` prunes the bank at large K: each in-flight job keeps
-  incremental streaming-Haar prefix coefficients
-  (``core.wavelet.StreamingHaar``), and once ``prefilter_min_fraction``
-  of the job has been observed its live-reference set shrinks (sticky,
-  per job) to the union of two top-P votes — the wavelet prefix ranking
-  (coarse, cheap, warp-blind) and the fused tick's own open-end DTW
-  scores (the soundness veto: a reference that matches only under
-  warping ranks poorly in the rigid wavelet domain but keeps a high warp
-  correlation, and must not be evicted), each widened by
-  ``prefilter_margin``.  The device state is RE-PACKED (K-last gather of
-  the ``[S, M, K]`` row/moment slabs and the ``[M, K]`` bank, padded to
-  a power-of-two, device-count-multiple bucket so sharding still
-  divides and jit shapes stay few) only when the survivor union crosses
-  a bucket boundary or a fresh job re-widens it; re-packs are counted in
-  ``repack_count``, never in ``dispatch_count`` — a tick stays one
-  dispatch.  Scores of pruned references surface as ``-inf`` in the
-  job's view and can never lead; :meth:`finish` always scores the FULL
-  bank offline, so final verdicts are pruning-independent by
-  construction, and tests pin the in-flight decisions (matched workload,
-  ``decided_at_fraction``) equal to the unpruned service's on the paper
-  traces.
+  reference bank and every ``[.., K]`` state slab over its single axis
+  via ``sharding.compat.shard_map``.  The sharded tick is bit-identical
+  to the unsharded one and remains ONE dispatch.  :meth:`rescale`
+  re-homes the state onto a different mesh mid-flight (or back to a
+  single device) — the hook a ``runtime.fault.ElasticController``
+  decision drives when hosts die or join.
+* ``prefilter_top=`` prunes the bank at large K exactly as before (the
+  streaming-Haar ranking with the in-flight DTW soundness veto, sticky
+  per job, bucket-padded K-axis re-packs counted in ``repack_count``).
+  S-axis slot re-packs are counted in ``slot_repack_count``; neither
+  ever inflates ``dispatch_count``.
 * The early-decision rule is confidence/abstain: emit a
   :class:`core.tuner.TuneDecision` only once the leading workload has
   cleared the threshold AND led the runner-up by ``margin`` for
   ``stable_ticks`` consecutive scoring ticks, with at least
-  ``min_fraction`` of the job observed.  The margin test requires >= 2
-  distinct workloads in the bank — with a single candidate there is no
-  runner-up to beat, so the service abstains in flight rather than
-  vacuously passing the margin gate (:meth:`finish` still renders the
-  final verdict).
-* :meth:`finish` recomputes the final verdict offline from the job's full
-  (causally filtered) query — and the recompute is **matrix-free**: one
-  ``dtw.dtw_score_bank_many`` dispatch carries the warp-path correlation
-  moments through the DP on device and scores at the closed alignment
-  endpoint, so no ``[K, N, M]`` matrix is materialized and nothing is
-  backtracked on the host.  The banded corridor is re-derived from the
-  *true* length (the in-flight corridor anchored to the ``expected_len``
-  prediction).  Verdicts BATCH: :meth:`finish_many` renders J decisions
-  from one dispatch, and :meth:`finish_later` parks completed jobs in a
-  drain queue (slot freed immediately) that :meth:`drain_finishes` — or
-  an automatic drain at ``finish_batch`` pending verdicts — renders in
-  one dispatch, so ``offline_dispatch_count`` amortizes instead of
-  growing 1:1 with completions; batched and sequential verdicts are
-  bit-identical by construction.  When a :class:`ReferenceDB` backs the
-  service, each decision (with its ``decided_at_fraction``) is recorded
-  into the DB's decision history for margin/stable_ticks/min_fraction
-  calibration.
+  ``min_fraction`` of the job observed (>= 2 distinct workloads
+  required — no vacuous margins).
 
-``denoise=True`` pushes raw samples through the causal streaming Chebyshev
-filter (``filters.StreamingFilter``) before matching — the online stand-in
-for the offline anti-causal ``filtfilt`` pipeline.  Reference banks are
-expected to be stored pre-processed (as ``AutoTuner.profile`` does).
+Verdicts
+--------
+:meth:`TuningService.finish` recomputes the final verdict offline from
+the job's full (causally filtered) query — matrix-free: one
+``dtw.dtw_score_bank_many`` dispatch carries the warp-path correlation
+moments through the DP on device and scores at the closed alignment
+endpoint.  Verdicts BATCH: :meth:`finish_many` renders J decisions from
+one drain tick + one dispatch, and :meth:`finish_later` parks completed
+jobs in a drain queue (slot freed immediately) that
+:meth:`drain_finishes` — or an automatic drain at ``finish_batch``
+pending verdicts — renders in one dispatch, so
+``offline_dispatch_count`` amortizes instead of growing 1:1 with
+completions; batched and sequential verdicts are bit-identical by
+construction.  When a :class:`ReferenceDB` backs the service, each
+decision is recorded into the DB's decision history.
+
+Multi-tenant serving
+--------------------
+:class:`MultiTenantTuningService` keys jobs to per-tenant reference
+banks at submit: each tenant owns an isolated tick engine (its own
+bank, device state and counters), the front routes
+push/tick/finish by job id, and a tick dispatches only for engines
+whose due jobs have data — total dispatches are bounded by data-ticks x
+tenants (x cohorts within each engine).
+
+The hard invariant across ALL of the above: a job's decisions (early
+and final — matched workload, correlation, ``decided_at_fraction``) are
+bit-for-bit independent of slot packing, admission order, tick-rate
+cohort, capacity history, sharding and verdict batching.  Per-job DP
+state is row-independent and per-reference, so none of the batching
+machinery can touch the numbers.
+
+``denoise=True`` pushes raw samples through the causal streaming
+Chebyshev filter (``filters.StreamingFilter``) before matching.
+Reference banks are expected to be stored pre-processed (as
+``AutoTuner.profile`` does).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Mapping, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -99,24 +110,25 @@ import numpy as np
 from ..core import dtw as _dtw
 from ..core import wavelet as _wavelet
 from ..core.database import ReferenceDB, SeriesBank
-from ..core.filters import StreamingFilter
 from ..core.similarity import MATCH_THRESHOLD
 from ..core.tuner import TuneDecision, _RowBuffer
 from ..sharding.compat import shard_map as _shard_map
+from .ingest import IngestFront, TraceLog
+from .scheduler import SlotScheduler
 
-__all__ = ["InFlightJob", "TuningService"]
+__all__ = ["InFlightJob", "TuningService", "MultiTenantTuningService"]
 
 
 @dataclasses.dataclass
 class InFlightJob:
     """Host-side bookkeeping for one slot (device state lives stacked in
-    the service's ``[S, M, K]`` arrays)."""
+    the service's ``[S, M, K]`` arrays; buffering/filtering lives in the
+    ingest layer)."""
     job_id: str
     slot: int
     expected_len: int
-    buffered: List[np.ndarray] = dataclasses.field(default_factory=list)
+    tick_hz: Optional[float] = None
     x: _RowBuffer = dataclasses.field(default_factory=_RowBuffer)
-    filt: Optional[StreamingFilter] = None
     n: int = 0
     leader: Optional[str] = None
     stable_for: int = 0
@@ -163,6 +175,26 @@ class TuningService:
     that many :meth:`finish_later` verdicts are pending they are rendered
     in one batched offline dispatch (:meth:`drain_finishes` flushes
     early).
+
+    Serving-front knobs (the layered stack):
+
+    * ``slots`` caps concurrent jobs; with ``elastic_slots=True`` (the
+      default) the device state is sized to the power-of-two bucket of
+      the ACTIVE job count and grows/compact-shrinks by S-axis device
+      gathers (``slot_repack_count``), instead of paying for ``slots``
+      rows around the clock.  ``elastic_slots=False`` pins the
+      pre-refactor fixed-capacity layout.
+    * ``queue_limit``/``queue_policy`` bound each job's ingest queue
+      (``"reject"`` raises ``serve.ingest.BackpressureError`` at the
+      producer, ``"drop_oldest"`` sheds and counts).
+    * ``trace_log`` (a :class:`serve.ingest.TraceLog`) persists every
+      accepted chunk with size/count rotation.
+    * ``heartbeat_timeout`` arms per-job heartbeats: pushes carrying a
+      ``now=`` timestamp beat the tracker, and :meth:`sweep_stalled`
+      evicts jobs whose agent went silent (slot freed, no verdict,
+      survivors untouched).
+    * ``submit(..., tick_hz=)`` assigns the job to a tick-rate cohort;
+      ``tick(now=...)`` drains only due cohorts.
     """
 
     def __init__(self, refs: Union[ReferenceDB, SeriesBank], *,
@@ -178,7 +210,12 @@ class TuningService:
                  prefilter_margin: float = 0.05,
                  prefilter_min_fraction: float = 0.1,
                  prefilter_coeffs: int = 64,
-                 finish_batch: int = 16) -> None:
+                 finish_batch: int = 16,
+                 elastic_slots: bool = True,
+                 queue_limit: Optional[int] = None,
+                 queue_policy: str = "reject",
+                 trace_log: Optional[TraceLog] = None,
+                 heartbeat_timeout: Optional[float] = None) -> None:
         if isinstance(refs, ReferenceDB):
             self.db: Optional[ReferenceDB] = refs
             self.bank = refs.bank()
@@ -239,13 +276,24 @@ class TuningService:
             self.bank.series.T.astype(np.float32))
         self._full_lengths = self.bank.lengths.astype(np.int32)
         self._wcoeff_cache: Dict[Tuple[int, int], np.ndarray] = {}
-        self._free: List[int] = list(range(slots - 1, -1, -1))
         self._jobs: Dict[str, InFlightJob] = {}
+        # slots awaiting their fresh-state reset (applied in one masked
+        # op at the top of the next data tick, see submit()).
+        self._dirty: List[int] = []
 
-        self._ns = self._put(np.zeros((slots,), np.int32), (None,))
-        self._sx = self._put(np.zeros((slots,), np.float32), (None,))
-        self._sxx = self._put(np.zeros((slots,), np.float32), (None,))
-        self._qlens = np.zeros((slots,), np.int32)
+        # serving-front layers: ingest (queues/filter/trace/heartbeats)
+        # and the S-axis slot scheduler (buckets, cohorts).
+        self._front = IngestFront(
+            denoise=denoise, queue_limit=queue_limit,
+            queue_policy=queue_policy, trace=trace_log,
+            heartbeat_timeout=heartbeat_timeout)
+        self._sched = SlotScheduler(slots, elastic=elastic_slots)
+        self._s_cap = self._sched.capacity
+
+        self._ns = self._put(np.zeros((self._s_cap,), np.int32), (None,))
+        self._sx = self._put(np.zeros((self._s_cap,), np.float32), (None,))
+        self._sxx = self._put(np.zeros((self._s_cap,), np.float32), (None,))
+        self._qlens = np.zeros((self._s_cap,), np.int32)
         self._packed_idx = np.arange(k)
         self._pack_device_state(self._packed_idx, rows=None, moms=None)
         self._tick_fn = self._build_tick_fn(axis)
@@ -260,6 +308,15 @@ class TuningService:
         #: re-pack is state motion, not a tick dispatch, and the
         #: dispatches == data-ticks invariant must survive pruning.
         self.repack_count = 0
+        #: S-axis capacity changes (elastic grow / compact-shrink, plus
+        #: stall evictions' compactions) — the slot twin of
+        #: ``repack_count``, likewise never a dispatch.
+        self.slot_repack_count = 0
+        #: mesh re-homes driven by :meth:`rescale`.
+        self.rescale_count = 0
+        #: jobs dropped by :meth:`evict`/:meth:`sweep_stalled` (no
+        #: verdict rendered).
+        self.evicted_count = 0
         #: offline verdict dispatches (the matrix-free
         #: ``dtw.dtw_score_bank_many`` recompute): one per
         #: :meth:`finish`, but one per *drain* for :meth:`finish_many` /
@@ -319,10 +376,10 @@ class TuningService:
         self._lengths = self._put(lengths, (axis,))
         if rows is None:
             self._rows = self._put(
-                np.full((self.slots, m, kp), float(_dtw._INF), np.float32),
+                np.full((self._s_cap, m, kp), float(_dtw._INF), np.float32),
                 (None, None, axis))
             self._moms = self._put(
-                np.zeros((3, self.slots, m, kp), np.float32),
+                np.zeros((3, self._s_cap, m, kp), np.float32),
                 (None, None, None, axis)) if self.score_in_flight else None
         else:
             pos = np.full((self._k,), -1, np.int64)
@@ -340,6 +397,75 @@ class TuningService:
                     (None, None, None, axis))
         self._packed_idx = np.asarray(idx)
         self._kp = kp
+
+    def _repack_slots(self, src: np.ndarray) -> None:
+        """Apply an S-axis gather plan from the scheduler (new slot ->
+        old slot, -1 = fresh) to every slot-indexed array — on device,
+        mirroring the K-axis `_pack_device_state` gather.  Per-job DP
+        state is row-independent, so a slot move is bit-exact; fresh
+        rows get the same +inf/zero init a ``submit`` reset would
+        write."""
+        axis = self._axis
+        gather = jnp.asarray(np.maximum(src, 0), jnp.int32)
+        fresh = jnp.asarray(src < 0)
+        self._rows = self._put(
+            jnp.where(fresh[:, None, None], _dtw._INF,
+                      jnp.take(self._rows, gather, axis=0)),
+            (None, None, axis))
+        if self._moms is not None:
+            self._moms = self._put(
+                jnp.where(fresh[None, :, None, None], 0.0,
+                          jnp.take(self._moms, gather, axis=1)),
+                (None, None, None, axis))
+        self._ns = self._put(jnp.where(fresh, 0,
+                                       jnp.take(self._ns, gather, axis=0)),
+                             (None,))
+        self._sx = self._put(jnp.where(fresh, 0.0,
+                                       jnp.take(self._sx, gather, axis=0)),
+                             (None,))
+        self._sxx = self._put(jnp.where(fresh, 0.0,
+                                        jnp.take(self._sxx, gather, axis=0)),
+                              (None,))
+        self._qlens = np.where(src >= 0, self._qlens[np.maximum(src, 0)],
+                               0).astype(np.int32)
+        self._s_cap = len(src)
+        self.slot_repack_count += 1
+
+    def _apply_resets(self) -> None:
+        """Fresh-initialize every slot submitted since the last data tick
+        (+inf DP row, zero moments/query stats) in ONE masked op per
+        array.  Runs before any state gather or dispatch, so lazy resets
+        are indistinguishable from the eager per-submit resets they
+        replace."""
+        if not self._dirty:
+            return
+        axis = self._axis
+        mask = np.zeros((self._s_cap,), bool)
+        mask[self._dirty] = True
+        md = jnp.asarray(mask)
+        self._rows = self._put(
+            jnp.where(md[:, None, None], _dtw._INF, self._rows),
+            (None, None, axis))
+        if self._moms is not None:
+            self._moms = self._put(
+                jnp.where(md[None, :, None, None], 0.0, self._moms),
+                (None, None, None, axis))
+        self._ns = self._put(jnp.where(md, 0, self._ns), (None,))
+        self._sx = self._put(jnp.where(md, 0.0, self._sx), (None,))
+        self._sxx = self._put(jnp.where(md, 0.0, self._sxx), (None,))
+        self._dirty = []
+
+    def _maybe_shrink_slots(self) -> None:
+        """Compact-shrink the S axis when the active set fits a smaller
+        power-of-two bucket (elastic mode; a data tick's preamble, like
+        the K-axis ``_maybe_repack``)."""
+        plan = self._sched.shrink_plan()
+        if plan is None:
+            return
+        src, moves = plan
+        self._repack_slots(src)
+        for jid, s in moves.items():
+            self._jobs[jid].slot = s
 
     # -- streaming wavelet prefilter -----------------------------------------
     def _ref_prefix_coeffs(self, size: int, n: int) -> np.ndarray:
@@ -513,48 +639,93 @@ class TuningService:
                       P(), P(), P()),
             out_specs=(P(None, None, axis), P())))
 
+    # -- elastic rescale ------------------------------------------------------
+    def rescale(self, mesh: Optional[jax.sharding.Mesh]) -> None:
+        """Re-home the device state onto a different 1-D mesh (or back
+        to a single device with ``mesh=None``) mid-flight — the hook a
+        ``runtime.fault.ElasticController`` rescale decision drives when
+        hosts die or join.  The bank re-pads to the new device-count
+        multiple and every state slab moves by the same on-device gather
+        a prefilter re-pack uses, so scores and decisions are unchanged
+        (sharding is exact); the tick callable recompiles for the new
+        mesh."""
+        ndev, axis = 1, None
+        if mesh is not None:
+            if len(mesh.axis_names) != 1:
+                raise ValueError("TuningService needs a 1-D mesh (one bank "
+                                 f"axis); got axes {mesh.axis_names}")
+            axis = mesh.axis_names[0]
+            ndev = mesh.devices.size
+        rows, moms = self._rows, self._moms
+        self.mesh, self._ndev, self._axis = mesh, ndev, axis
+        self._ns = self._put(np.asarray(self._ns), (None,))
+        self._sx = self._put(np.asarray(self._sx), (None,))
+        self._sxx = self._put(np.asarray(self._sxx), (None,))
+        self._pack_device_state(self._packed_idx, rows, moms)
+        self._tick_fn = self._build_tick_fn(axis)
+        self.rescale_count += 1
+
     # -- job lifecycle -------------------------------------------------------
     @property
     def n_active(self) -> int:
         return len(self._jobs)
 
-    def submit(self, job_id: str, expected_len: int) -> InFlightJob:
+    @property
+    def slot_capacity(self) -> int:
+        """Current S bucket (== ``slots`` when ``elastic_slots=False``)."""
+        return self._s_cap
+
+    def submit(self, job_id: str, expected_len: int,
+               tick_hz: Optional[float] = None) -> InFlightJob:
         """Register an in-flight job (``expected_len`` = predicted total
         sample count; it anchors the Sakoe-Chiba band and the
-        fraction-seen gate of the early-decision rule)."""
+        fraction-seen gate of the early-decision rule).  ``tick_hz``
+        assigns the job to a tick-rate cohort: ``tick(now=...)`` drains
+        it only on its own period (None = every tick)."""
         if job_id in self._jobs:
             raise ValueError(f"job {job_id!r} already in flight")
-        if not self._free:
-            raise RuntimeError(f"all {self.slots} slots busy")
         if expected_len < 1:
             raise ValueError("expected_len must be >= 1")
-        slot = self._free.pop()
-        self._rows = self._rows.at[slot].set(_dtw._INF)
-        self._ns = self._ns.at[slot].set(0)
-        if self._moms is not None:
-            self._moms = self._moms.at[:, slot].set(0.0)
-        self._sx = self._sx.at[slot].set(0.0)
-        self._sxx = self._sxx.at[slot].set(0.0)
+        slot, grow_src = self._sched.admit(job_id, tick_hz)
+        if grow_src is not None:
+            self._repack_slots(grow_src)
+        # the slot's device state is reset LAZILY (one masked op at the
+        # next data tick covers every submit since the last one) — a
+        # stale freed row is inert until then: its nvalid is 0 in every
+        # dispatch and only pending jobs' scores are ever read.  Under
+        # churn this turns S x M x K copies per *submit* into one per
+        # *tick*.
+        self._dirty.append(slot)
         self._qlens[slot] = expected_len
         job = InFlightJob(job_id=job_id, slot=slot, expected_len=expected_len,
-                          filt=StreamingFilter() if self.denoise else None,
+                          tick_hz=tick_hz,
                           haar=_wavelet.StreamingHaar(expected_len)
                           if self.prefilter_top is not None else None)
+        self._front.register(job_id)
         self._jobs[job_id] = job
         return job
 
-    def push(self, job_id: str, samples: np.ndarray) -> None:
-        """Buffer newly observed samples; consumed at the next tick."""
-        s = np.asarray(samples, np.float32).reshape(-1)
-        if s.shape[0]:
-            self._jobs[job_id].buffered.append(s)
+    def push(self, job_id: str, samples: np.ndarray,
+             now: Optional[float] = None) -> None:
+        """Buffer newly observed samples; consumed at the job's next due
+        tick.  ``now`` stamps the heartbeat/straggler trackers (when
+        armed) — a clock-less push is accepted but invisible to
+        :meth:`sweep_stalled`."""
+        if job_id not in self._jobs:
+            raise KeyError(job_id)
+        self._front.push(job_id, samples, now=now)
 
     # -- the hot path --------------------------------------------------------
-    def tick(self) -> Dict[str, Optional[TuneDecision]]:
-        """Drain every job's buffered samples in ONE jitted dispatch (DP
-        extend + prefix scoring fused, sharded over the bank when a mesh
-        is set), then apply the early-decision rule to the returned
+    def tick(self, now: Optional[float] = None
+             ) -> Dict[str, Optional[TuneDecision]]:
+        """Drain every due job's buffered samples in ONE jitted dispatch
+        (DP extend + prefix scoring fused, sharded over the bank when a
+        mesh is set), then apply the early-decision rule to the returned
         [S, K] score array.
+
+        ``now`` meters the tick-rate cohorts: only cohorts whose period
+        has elapsed drain (others keep buffering).  Without a clock
+        every job is due — the legacy cadence.
 
         Returns {job_id: TuneDecision} for decisions *newly emitted* this
         tick (None for touched jobs where the service abstains), plus any
@@ -564,14 +735,14 @@ class TuningService:
         self.ticks += 1
         out: Dict[str, Optional[TuneDecision]] = self._undelivered
         self._undelivered = {}
+        due = self._sched.due_jobs(now, self._jobs.keys())
         pending: List[Tuple[InFlightJob, np.ndarray]] = []
         for job in self._jobs.values():
-            if not job.buffered:
+            if job.job_id not in due:
                 continue
-            chunk = np.concatenate(job.buffered)
-            job.buffered.clear()
-            if job.filt is not None:
-                chunk = job.filt(chunk)
+            chunk = self._front.drain(job.job_id)
+            if chunk is None:
+                continue
             job.x.append(chunk)
             if job.haar is not None:
                 job.haar.update(chunk)
@@ -579,18 +750,20 @@ class TuningService:
         if not pending:
             return out
 
-        # prefilter re-pack: if the last tick's pruning shrank the union
-        # of live sets past a bucket boundary (or a fresh job re-widened
-        # it), re-pack the device state before dispatching (counted in
-        # ``repack_count``, NOT ``dispatch_count`` — the tick below stays
-        # the one dispatch).
+        # re-pack preamble (state motion, never a dispatch): deferred
+        # fresh-slot resets first (so no gather ever moves stale rows),
+        # then K-axis when the prefilter's survivor union crossed a
+        # bucket boundary, then S-axis when the active set fits a
+        # smaller slot bucket.
+        self._apply_resets()
         if self.prefilter_top is not None:
             self._maybe_repack()
+        self._maybe_shrink_slots()
         k_live = len(self._packed_idx)
 
         c = _dtw._chunk_bucket(max(ch.shape[0] for _, ch in pending))
-        chunks = np.zeros((self.slots, c), np.float32)
-        nvalid = np.zeros((self.slots,), np.int32)
+        chunks = np.zeros((self._s_cap, c), np.float32)
+        nvalid = np.zeros((self._s_cap,), np.int32)
         for job, ch in pending:
             chunks[job.slot, : ch.shape[0]] = ch
             nvalid[job.slot] = ch.shape[0]
@@ -605,7 +778,7 @@ class TuningService:
             # the tick's ONLY device->host transfer: the [S, K_live]
             # scores, scattered back to full-bank columns (pruned-out
             # references read -inf — never a leader, never a runner-up).
-            sims_all = np.full((self.slots, self._k), -np.inf)
+            sims_all = np.full((self._s_cap, self._k), -np.inf)
             sims_all[:, self._packed_idx] = \
                 np.asarray(scores, np.float64)[:, :k_live]
         else:
@@ -681,6 +854,36 @@ class TuningService:
             return job.early
         return None
 
+    # -- fault handling ------------------------------------------------------
+    def evict(self, job_id: str) -> Optional[TuneDecision]:
+        """Drop an in-flight job WITHOUT a verdict: slot freed, queue and
+        heartbeat state discarded, device rows left to be compacted away
+        by the next data tick's S-axis shrink.  Returns the job's early
+        decision if one was emitted (the only tuning signal a stalled
+        job ever produced).  Survivors are untouched — per-job state is
+        row-independent, so eviction cannot perturb their scores."""
+        if job_id not in self._jobs:
+            raise KeyError(job_id)
+        _, early = self._retire(job_id)
+        self.evicted_count += 1
+        return early
+
+    def sweep_stalled(self, now: float) -> Dict[str, Optional[TuneDecision]]:
+        """Evict every job whose heartbeat (stamped by ``push(...,
+        now=)``) is older than the service's ``heartbeat_timeout`` —
+        stalled ingest must not pin a slot forever.  Returns {job_id:
+        early decision or None} for the evicted set; a no-op (empty
+        dict) when heartbeats are not armed."""
+        return {jid: self.evict(jid) for jid in self._front.stalled(now)}
+
+    def stragglers(self) -> List[str]:
+        """In-flight jobs whose observed push cadence is consistently
+        slower than the cohort median (``runtime.fault
+        .StragglerDetector`` over inter-push gaps) — candidates for a
+        slower tick-rate cohort or eviction."""
+        return [j for j in self._front.stragglers.stragglers()
+                if j in self._jobs]
+
     # -- completion ----------------------------------------------------------
     #
     # Final verdicts are MATRIX-FREE and batchable: one
@@ -746,7 +949,7 @@ class TuningService:
         """Flush buffered samples before a verdict (ONE tick covering
         every live job) and park early decisions emitted for jobs that
         are NOT being finished, so they surface from the next tick()."""
-        if any(self._jobs[j].buffered for j in finishing):
+        if any(self._front.has_data(j) for j in finishing):
             emitted = self.tick()
             for jid, d in emitted.items():
                 if jid not in finishing and d is not None:
@@ -758,7 +961,8 @@ class TuningService:
         reusable), so it is purged here."""
         job = self._jobs.pop(job_id)
         self._undelivered.pop(job_id, None)
-        self._free.append(job.slot)
+        self._sched.release(job_id)
+        self._front.retire(job_id)
         return job.x.view(), job.early
 
     def finish(self, job_id: str) -> TuneDecision:
@@ -839,3 +1043,120 @@ class TuningService:
         delivered — ``if svc.pending_finishes: svc.drain_finishes()`` is
         the intended polling idiom and must not skip either kind."""
         return len(self._finish_queue) + len(self._finished)
+
+
+class MultiTenantTuningService:
+    """Continuous-batching front over per-tenant reference banks.
+
+    ``banks`` maps tenant name -> :class:`ReferenceDB` or
+    :class:`SeriesBank`; each tenant gets an isolated
+    :class:`TuningService` engine (its own bank, device state, cohorts
+    and counters) built with the shared ``**engine_kwargs``.  Jobs are
+    keyed to a tenant at :meth:`submit` and routed by job id afterwards
+    — ids are unique across the front, so ``push``/``finish`` need no
+    tenant argument.  A :meth:`tick` drains every engine (each engine
+    dispatches only when one of its due jobs has data), so total device
+    dispatches are bounded by data-ticks x tenants, and by data-ticks x
+    cohorts within each engine when tick rates are declared.
+    """
+
+    def __init__(self, banks: Mapping[str, Union[ReferenceDB, SeriesBank]],
+                 **engine_kwargs) -> None:
+        if not banks:
+            raise ValueError("no tenants")
+        self._engines: Dict[str, TuningService] = {
+            t: TuningService(bank, **engine_kwargs)
+            for t, bank in banks.items()}
+        self._tenant_of: Dict[str, str] = {}
+
+    # -- routing --------------------------------------------------------------
+    def engine(self, tenant: str) -> TuningService:
+        """The tenant's tick engine (for counters/diagnostics)."""
+        return self._engines[tenant]
+
+    @property
+    def tenants(self) -> Tuple[str, ...]:
+        return tuple(self._engines)
+
+    @property
+    def n_active(self) -> int:
+        return sum(e.n_active for e in self._engines.values())
+
+    @property
+    def dispatch_count(self) -> int:
+        return sum(e.dispatch_count for e in self._engines.values())
+
+    @property
+    def offline_dispatch_count(self) -> int:
+        return sum(e.offline_dispatch_count for e in self._engines.values())
+
+    def _engine_of(self, job_id: str) -> TuningService:
+        return self._engines[self._tenant_of[job_id]]
+
+    # -- lifecycle ------------------------------------------------------------
+    def submit(self, job_id: str, expected_len: int, *, tenant: str,
+               tick_hz: Optional[float] = None) -> InFlightJob:
+        if tenant not in self._engines:
+            raise KeyError(f"unknown tenant {tenant!r}")
+        if job_id in self._tenant_of:
+            raise ValueError(f"job {job_id!r} already in flight "
+                             f"(tenant {self._tenant_of[job_id]!r})")
+        job = self._engines[tenant].submit(job_id, expected_len,
+                                           tick_hz=tick_hz)
+        self._tenant_of[job_id] = tenant
+        return job
+
+    def push(self, job_id: str, samples, now: Optional[float] = None) -> None:
+        self._engine_of(job_id).push(job_id, samples, now=now)
+
+    def tick(self, now: Optional[float] = None
+             ) -> Dict[str, Optional[TuneDecision]]:
+        out: Dict[str, Optional[TuneDecision]] = {}
+        for engine in self._engines.values():
+            out.update(engine.tick(now=now))
+        return out
+
+    def finish(self, job_id: str) -> TuneDecision:
+        return self.finish_many((job_id,))[job_id]
+
+    def finish_many(self, job_ids) -> Dict[str, TuneDecision]:
+        """Batched verdicts, grouped per tenant: one drain tick + one
+        offline dispatch per tenant with completing jobs."""
+        ids = list(job_ids)
+        if len(set(ids)) != len(ids):
+            raise ValueError("duplicate job ids in finish_many")
+        missing = [j for j in ids if j not in self._tenant_of]
+        if missing:
+            raise KeyError(f"unknown job(s): {missing}")
+        by_tenant: Dict[str, List[str]] = {}
+        for jid in ids:
+            by_tenant.setdefault(self._tenant_of[jid], []).append(jid)
+        out: Dict[str, TuneDecision] = {}
+        for tenant, group in by_tenant.items():
+            out.update(self._engines[tenant].finish_many(group))
+            for jid in group:
+                del self._tenant_of[jid]
+        return out
+
+    def finish_later(self, job_id: str) -> None:
+        self._engine_of(job_id).finish_later(job_id)
+        del self._tenant_of[job_id]
+
+    def drain_finishes(self) -> Dict[str, TuneDecision]:
+        out: Dict[str, TuneDecision] = {}
+        for engine in self._engines.values():
+            out.update(engine.drain_finishes())
+        return out
+
+    @property
+    def pending_finishes(self) -> int:
+        return sum(e.pending_finishes for e in self._engines.values())
+
+    def sweep_stalled(self, now: float) -> Dict[str, Optional[TuneDecision]]:
+        out: Dict[str, Optional[TuneDecision]] = {}
+        for engine in self._engines.values():
+            evicted = engine.sweep_stalled(now)
+            for jid in evicted:
+                self._tenant_of.pop(jid, None)
+            out.update(evicted)
+        return out

@@ -1,0 +1,163 @@
+"""Fault wiring of the serving front: heartbeats -> eviction, straggler
+flagging, and elastic rescale — `runtime.fault` is no longer dormant.
+
+The safety pin behind all of it: eviction and rescale move STATE, never
+numbers.  Survivors of a stalled job's eviction score bit-identically to
+a run that never saw the stalled job, and a rescaled service keeps
+rendering the same decisions.
+"""
+import numpy as np
+import pytest
+
+from repro import mrsim
+from repro.core.database import SeriesBank, pack_series
+from repro.runtime.fault import ElasticController
+from repro.serve.tuning import TuningService
+
+
+@pytest.fixture(scope="module")
+def paper_bank():
+    from repro.core.filters import preprocess_bank
+
+    psets = mrsim.paper_param_sets()
+    series, labels = [], []
+    for app in ("wordcount", "terasort"):
+        for p in psets:
+            series.append(mrsim.simulate_cpu_series(app, p, dt=0.25))
+            labels.append(app)
+    bank = pack_series(series, labels=labels)
+    return SeriesBank(preprocess_bank(bank.series, bank.lengths),
+                      bank.lengths, bank.labels, bank.entries)
+
+
+@pytest.fixture(scope="module")
+def queries():
+    psets = mrsim.paper_param_sets()
+    return {f"job{i}": mrsim.simulate_cpu_series(app, psets[i], run=i + 1,
+                                                 dt=0.25)
+            for i, app in enumerate(("wordcount", "exim", "terasort"))}
+
+
+def _kw():
+    return dict(band=16, threshold=0.85, margin=0.02, stable_ticks=2,
+                min_fraction=0.15, denoise=True, slots=8)
+
+
+def test_sweep_stalled_evicts_without_perturbing_survivors(paper_bank,
+                                                           queries):
+    svc = TuningService(paper_bank, heartbeat_timeout=0.5, **_kw())
+    solo = TuningService(paper_bank, **_kw())   # never sees the staller
+    for jid, q in queries.items():
+        svc.submit(jid, expected_len=len(q))
+        if jid != "job1":
+            solo.submit(jid, expected_len=len(q))
+
+    stall_after = 3
+    sims_svc, sims_solo = [], []
+    n = max(len(q) for q in queries.values())
+    for t, lo in enumerate(range(0, n, 16)):
+        now = 0.1 * t
+        for jid, q in queries.items():
+            if jid == "job1" and t >= stall_after:
+                continue                        # job1's agent goes silent
+            svc.push(jid, q[lo: lo + 16], now=now)
+            if jid != "job1":
+                solo.push(jid, q[lo: lo + 16], now=now)
+        swept = svc.sweep_stalled(now)
+        if t < stall_after + 5:
+            assert swept == {}                  # not timed out yet
+        svc.tick()
+        solo.tick()
+        sims_svc.append({jid: svc._jobs[jid].last_sims.copy()
+                         for jid in svc._jobs
+                         if svc._jobs[jid].last_sims is not None})
+        sims_solo.append({jid: j.last_sims.copy()
+                          for jid, j in solo._jobs.items()
+                          if j.last_sims is not None})
+
+    # the stalled job was evicted (slot freed, no verdict), exactly once
+    assert "job1" not in svc._jobs
+    assert svc.evicted_count == 1
+    with pytest.raises(KeyError):
+        svc.finish("job1")
+
+    # survivors' every tick score is BIT-identical to the run that never
+    # had the stalled job — before and after the eviction/compaction
+    for tick_a, tick_b in zip(sims_svc, sims_solo):
+        for jid in tick_b:
+            np.testing.assert_array_equal(tick_a[jid], tick_b[jid])
+    fin_a = svc.finish_many([j for j in queries if j != "job1"])
+    fin_b = solo.finish_many([j for j in queries if j != "job1"])
+    for jid in fin_b:
+        assert fin_a[jid].matched == fin_b[jid].matched
+        assert fin_a[jid].corr == fin_b[jid].corr
+
+
+def test_sweep_returns_early_decision_of_stalled_job(paper_bank):
+    p = mrsim.paper_param_sets()[0]
+    q = mrsim.simulate_cpu_series("wordcount", p, dt=0.25)
+    svc = TuningService(paper_bank, heartbeat_timeout=0.5, band=16,
+                        threshold=0.85, margin=0.02, stable_ticks=2,
+                        min_fraction=0.1, denoise=True)
+    svc.submit("j", expected_len=len(q))
+    early = None
+    for t, lo in enumerate(range(0, len(q) // 2, 8)):
+        svc.push("j", q[lo: lo + 8], now=0.1 * t)
+        d = svc.tick().get("j")
+        early = early or d
+    assert early is not None                    # decided in flight
+    swept = svc.sweep_stalled(now=100.0)        # then the agent died
+    # the early decision is the only tuning signal the job produced;
+    # the sweep surfaces it instead of dropping it with the slot
+    assert swept == {"j": early}
+    assert svc.n_active == 0
+
+
+def test_straggler_flagging(paper_bank):
+    svc = TuningService(paper_bank, band=16, denoise=True)
+    for jid in ("steady0", "steady1", "laggard"):
+        svc.submit(jid, expected_len=256)
+    for t in range(20):
+        for jid in ("steady0", "steady1"):
+            svc.push(jid, np.full(4, 0.5, np.float32), now=0.1 * t)
+        if t % 4 == 0:                          # 4x slower cadence
+            svc.push("laggard", np.full(4, 0.5, np.float32), now=0.1 * t)
+    assert svc.stragglers() == ["laggard"]
+    # finishing the laggard removes it from the report
+    svc.tick()
+    svc.finish("laggard")
+    assert svc.stragglers() == []
+
+
+def test_elastic_controller_decision_drives_rescale(paper_bank, queries):
+    """Host-only rescale path: an ElasticController shrink decision
+    re-homes the device state mid-run (mesh=None -> mesh=None re-pack +
+    tick recompile) without touching any score.  The sharded 8->4 device
+    version of this lives in test_streaming_sharded.py."""
+    ctl = ElasticController(model_parallel=1)
+    base = TuningService(paper_bank, **_kw())
+    resc = TuningService(paper_bank, **_kw())
+    for jid, q in queries.items():
+        base.submit(jid, expected_len=len(q))
+        resc.submit(jid, expected_len=len(q))
+    n = max(len(q) for q in queries.values())
+    for t, lo in enumerate(range(0, n, 16)):
+        if t == 3:
+            d = ctl.decide(current_data_parallel=2,
+                           alive=[0, 1], stragglers=[1])
+            assert d.should_rescale and d.new_data_parallel == 1
+            resc.rescale(None)
+        for jid, q in queries.items():
+            base.push(jid, q[lo: lo + 16])
+            resc.push(jid, q[lo: lo + 16])
+        base.tick()
+        resc.tick()
+        for jid in queries:
+            np.testing.assert_array_equal(base._jobs[jid].last_sims,
+                                          resc._jobs[jid].last_sims)
+    assert resc.rescale_count == 1
+    fin_a = base.finish_many(list(queries))
+    fin_b = resc.finish_many(list(queries))
+    for jid in queries:
+        assert fin_a[jid].matched == fin_b[jid].matched
+        assert fin_a[jid].corr == fin_b[jid].corr

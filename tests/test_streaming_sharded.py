@@ -134,6 +134,61 @@ SCRIPT = textwrap.dedent("""
     assert shd.repack_count == ref.repack_count
     print(f"SHARDED_PRUNED_OK repacks={shd.repack_count} "
           f"survivors={len(shd._packed_idx)}/{len(bank)}")
+
+    # elastic rescale mid-flight: an ElasticController decision (two of
+    # the eight hosts flagged as stragglers -> data axis snaps to the
+    # pow2 floor 4) drives TuningService.rescale onto a 4-device mesh.
+    # The re-homed service keeps ticking bit-compatibly with the
+    # unsharded reference: rescale moves state, never numbers.
+    from repro.runtime.fault import ElasticController
+
+    bank = make_bank()
+    queries = {}
+    for j in range(3):
+        t = np.linspace(0, 1, 42, dtype=np.float32)
+        q = 0.5 + 0.3 * np.sin(2 * np.pi * (1.5 + 0.7 * j) * t) \\
+            + 0.04 * rng.normal(size=42)
+        queries[f"job{j}"] = np.clip(q, 0, 1).astype(np.float32)
+    kw = dict(band=6, threshold=0.5, margin=0.01, stable_ticks=2,
+              min_fraction=0.2, slots=4)
+    ref = TuningService(bank, **kw)
+    shd = TuningService(bank, mesh=mesh, **kw)
+    for jid, q in queries.items():
+        ref.submit(jid, expected_len=len(q))
+        shd.submit(jid, expected_len=len(q))
+
+    ctl = ElasticController(model_parallel=1)
+    pos = {jid: 0 for jid in queries}
+    t = 0
+    while any(pos[jid] < len(q) for jid, q in queries.items()):
+        if t == 3:      # hosts 6, 7 degrade mid-run
+            d = ctl.decide(current_data_parallel=8, alive=list(range(8)),
+                           stragglers=[6, 7])
+            assert d.should_rescale and d.new_data_parallel == 4, d
+            shd.rescale(jax.make_mesh(
+                (d.new_data_parallel,), ("bank",),
+                devices=jax.devices()[:d.new_data_parallel]))
+        for jid, q in queries.items():
+            ref.push(jid, q[pos[jid]: pos[jid] + 7])
+            shd.push(jid, q[pos[jid]: pos[jid] + 7])
+            pos[jid] = min(pos[jid] + 7, len(q))
+        t += 1
+        ref.tick()
+        shd.tick()
+        for jid in queries:
+            a = ref._jobs[jid].last_sims
+            b = shd._jobs[jid].last_sims
+            err = float(np.abs(a - b).max())
+            assert err < 1e-6, ("rescale", t, jid, err)
+    fin_r = ref.finish_many(list(queries))
+    fin_s = shd.finish_many(list(queries))
+    for jid in queries:
+        assert fin_r[jid].matched == fin_s[jid].matched
+        assert abs(fin_r[jid].corr - fin_s[jid].corr) < 1e-9
+    assert shd.rescale_count == 1 and shd.mesh.devices.size == 4
+    assert shd.dispatch_count == shd.ticks
+    print(f"SHARDED_RESCALE_OK ndev={shd.mesh.devices.size} "
+          f"rescales={shd.rescale_count}")
 """)
 
 
@@ -146,3 +201,4 @@ def test_sharded_tick_equals_unsharded():
     assert r.returncode == 0, r.stdout + r.stderr
     assert r.stdout.count("SHARDED_TICK_OK") == 2, r.stdout + r.stderr
     assert "SHARDED_PRUNED_OK" in r.stdout, r.stdout + r.stderr
+    assert "SHARDED_RESCALE_OK" in r.stdout, r.stdout + r.stderr
