@@ -15,7 +15,11 @@
    closed-end moment scorer that now backs ``similarity_bank`` and every
    ``TuningService`` verdict.  Gate: >= MIN_SCORED_SPEEDUP_AT_256 at
    K=256.
-4. Batched finish: J completed jobs rendered by ONE
+4. Probabilistic scoring (``match_prob_K256``): the PR-7
+   variance-carrying scorer (scores + calibrated match probabilities)
+   vs the exact moment scorer, with the zero-variance bitwise reduction
+   checked unconditionally.
+5. Batched finish: J completed jobs rendered by ONE
    ``TuningService.finish_many`` drain vs J sequential ``finish()``
    calls (``finish_batched_J{8,32}``).
 """
@@ -178,6 +182,61 @@ def _scored_rows():
     return rows
 
 
+def _prob_rows():
+    """match_prob_K256: the variance-carrying probabilistic scorer
+    (seven-channel moment slab + factored-tail match probabilities) vs
+    the exact moment scorer on the same queries/bank, one dispatch each.
+
+    Correctness is checked unconditionally (zero variance reduces the
+    probabilistic scores bitwise to the exact ones with probs in {0,1});
+    the emitted ratio vs the exact path is informational here — the
+    wall-clock gate lives in bench_streaming's stream_tick_prob_K256,
+    where the serving tick is the thing the paper cares about."""
+    rows = []
+    rng = np.random.default_rng(3)
+    k = max(BANK_SIZES)
+    _, bank = _make_bank(rng, k)
+    j = 8
+    xs = np.clip(0.5 + 0.3 * np.sin(
+        np.linspace(0, 12, 256)[None] * (1 + 0.1 * np.arange(j)[None].T)),
+        0, 1).astype(np.float32)
+    xv = np.full_like(xs, 1e-3)
+
+    def exact():
+        return np.asarray(jax.block_until_ready(dtw.dtw_score_bank_many(
+            xs, bank.series, bank.lengths, threshold=0.85)))
+
+    def prob():
+        s, p = dtw.dtw_score_bank_many(
+            xs, bank.series, bank.lengths, xvars=xv, threshold=0.85)
+        return np.asarray(jax.block_until_ready(s)), np.asarray(p)
+
+    s_exact = exact()                     # warm jit caches
+    prob()
+    # zero-variance reduction: exact scores bitwise, degenerate probs
+    s0, p0 = dtw.dtw_score_bank_many(
+        xs, bank.series, bank.lengths, xvars=np.zeros_like(xs),
+        threshold=0.85)
+    np.testing.assert_array_equal(np.asarray(s0), s_exact)
+    assert set(np.unique(np.asarray(p0))) <= {0.0, 1.0}
+
+    reps = 3
+    t0 = time.time()
+    for _ in range(reps):
+        exact()
+    us_exact = (time.time() - t0) / reps * 1e6
+    t0 = time.time()
+    for _ in range(reps):
+        prob()
+    us_prob = (time.time() - t0) / reps * 1e6
+    ratio = us_prob / max(us_exact, 1e-9)
+    print(f"[matching] K={k:4d}: exact {us_exact/1e3:8.1f} ms  "
+          f"prob {us_prob/1e3:8.1f} ms  ratio {ratio:4.2f}x (J={j})")
+    rows.append((f"match_prob_K{k}", us_prob,
+                 f"vs_exact={ratio:.2f}x;jobs={j}"))
+    return rows
+
+
 #: samples still in flight when a job's completion lands: a finishing
 #: job arrives WITH its last chunk, so every verdict is preceded by a
 #: buffer drain (the production completion shape finish_many amortizes).
@@ -273,7 +332,7 @@ def _finish_batched_rows():
 
 def run():
     return (_accuracy_rows() + _throughput_rows() + _scored_rows()
-            + _finish_batched_rows())
+            + _prob_rows() + _finish_batched_rows())
 
 
 if __name__ == "__main__":

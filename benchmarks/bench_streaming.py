@@ -10,8 +10,11 @@
    (causally filtered) query to 1e-4 — going online costs no accuracy.
 3. Throughput: chunks/sec through the multiplexed tick at bank size
    K in {8, 64, 256} — distance-only mode, plus (at K=256) the fused
-   on-device scoring tick and the PR-2 row-formulation jnp baseline.
-   Gate: the device-resident wavefront tick is >= 3x the PR-2 path.
+   on-device scoring tick, the PR-7 variance-carrying probabilistic
+   scoring tick, and the PR-2 row-formulation jnp baseline.  Gates:
+   the device-resident wavefront tick is >= 3x the PR-2 path, and the
+   probabilistic tick stays within PROB_TICK_GATE of the exact scored
+   tick (the exact 6-channel moment slab sets a ~1.7-2x floor).
 4. Pruned scoring (the production scored tick at large K): a DIVERSE
    256-reference bank (one distinct workload signature per row — the
    regime the streaming wavelet prefilter targets) with every in-flight
@@ -57,6 +60,11 @@ BANK_SIZES = (8, 64, 256)
 TPUT_JOBS = 8
 TPUT_TICKS = 16
 TPUT_CHUNK = 16
+#: ceiling on the variance-carrying (probabilistic) scored tick relative
+#: to the exact scored tick at K=256.  Measured 1.7-2.0x on the exact
+#: 6-channel slab (bandwidth-bound doubling of the 3-channel moment
+#: traffic); 2.5 leaves machine-variance slack above that floor.
+PROB_TICK_GATE = 2.5
 
 
 def _paper_bank(apps) -> SeriesBank:
@@ -236,16 +244,24 @@ def _throughput_rows():
     for k in BANK_SIZES:
         bank = _throughput_bank(rng, k)
 
-        def run_stream(score):
-            svc = TuningService(bank, score_in_flight=score)
+        def run_stream(score, prob=False):
+            if prob:
+                svc = TuningService(bank, score_in_flight=True,
+                                    min_probability=0.5)
+            else:
+                svc = TuningService(bank, score_in_flight=score)
             for j in range(TPUT_JOBS):
                 svc.submit(f"job{j}", expected_len=TPUT_TICKS * TPUT_CHUNK)
             qs = rng.random((TPUT_JOBS, TPUT_TICKS * TPUT_CHUNK),
                             dtype=np.float32)
+            vs = np.full_like(qs, 1e-3) if prob else None
             for t in range(TPUT_TICKS):
+                sl = slice(t * TPUT_CHUNK, (t + 1) * TPUT_CHUNK)
                 for j in range(TPUT_JOBS):
-                    svc.push(f"job{j}",
-                             qs[j, t * TPUT_CHUNK:(t + 1) * TPUT_CHUNK])
+                    if prob:
+                        svc.push(f"job{j}", qs[j, sl], variance=vs[j, sl])
+                    else:
+                        svc.push(f"job{j}", qs[j, sl])
                 svc.tick()
             assert svc.dispatch_count == TPUT_TICKS
             return svc
@@ -275,6 +291,32 @@ def _throughput_rows():
             rows.append((f"stream_tick_scored_K{k}",
                          dts / TPUT_TICKS * 1e6,
                          f"chunks_per_s={chunks / dts:.0f};jobs={TPUT_JOBS}"))
+            # probabilistic (variance-carrying) scoring tick: the same
+            # fused wavefront with the 6-channel moment slab and the
+            # factored-tail match probabilities.  Gate: the prob tick
+            # stays within PROB_TICK_GATE of the exact scored tick.
+            # The exact slab doubles the moment channels 3 -> 6 (the
+            # delta-method sigma^2 needs three path-dependent sums
+            # Sum v*y, Sum v*y^2, Sum v*xy on top of the base three),
+            # and the wavefront scan is bandwidth-bound on slab
+            # traffic, so ~1.7-2x is the structural floor of the EXACT
+            # formulation — the ISSUE's 1.3x aspiration would need an
+            # approximate single-channel sigma tail (ROADMAP follow-up)
+            # rather than the exact path-carried moments shipped here.
+            run_stream(True, prob=True)
+            t0 = time.time()
+            run_stream(True, prob=True)
+            dtp = time.time() - t0
+            ratio = dtp / dts
+            print(f"[streaming] K={k:4d}: {1e3 * dtp / TPUT_TICKS:7.2f} "
+                  f"ms/tick (prob scoring) -> {ratio:.2f}x exact scored")
+            rows.append((f"stream_tick_prob_K{k}",
+                         dtp / TPUT_TICKS * 1e6,
+                         f"chunks_per_s={chunks / dtp:.0f}"
+                         f";vs_exact_scored={ratio:.2f}x;jobs={TPUT_JOBS}"))
+            assert ratio <= PROB_TICK_GATE, (
+                f"probabilistic scored tick regressed: {ratio:.2f}x > "
+                f"{PROB_TICK_GATE}x the exact scored tick")
             # PR-2 baseline + speedup gate: the device-resident wavefront
             # tick must beat the row-formulation jnp tick >= 3x here
             legacy_us = _legacy_tick_us(bank, rng)

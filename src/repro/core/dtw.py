@@ -65,6 +65,26 @@ every DP in a single jit dispatch:
   :func:`bank_extend_tick_scored_dispatch` (DP row AND the three moment
   slabs pinned in VMEM across the whole chunk).
 
+Uncertain-series matching (variance mode)
+-----------------------------------------
+Real traces carry per-sample measurement noise; the variance-mode
+entry points (:func:`bank_extend_tick_scored_var`,
+``dtw_score_bank_many(xvars=...)`` and their Pallas twins) propagate a
+per-sample variance ``v_i`` through the SAME warp path and emit a match
+*probability* P[true warp correlation >= threshold] beside the point
+score.  Slab layout: the moment slab doubles from three channels
+(sy, syy, sxy) to SIX — (sy, syy, sxy, svy, svyy, svxy), where channel
+3 + c's per-cell delta is exactly ``v_i * delta_c`` — and the
+path-independent query folds grow a [·, 3] ``vstats`` = (sv, svx, svxx)
+companion to sx/sxx.  The probability tail (:func:`_prob_from_moments`,
+one definition shared by every path, exactly like
+:func:`_corr_from_moments` for the point score) disattenuates the
+observed correlation for noise-inflated query variance and applies
+first-order (delta-method) error propagation; zero input variance
+reduces BITWISE to the point rule, so variance mode is a strict
+generalization.  Exact-mode entry points are untouched (separate jitted
+functions, unchanged compiled graphs).
+
 Padding correctness: ``D[:, j]`` only ever depends on columns ``<= j`` and
 rows ``<= i``, so values in the padded tail cannot reach ``D[n-1, len_k-1]``
 — banks may be padded with anything; we pad with the series' edge value.
@@ -96,6 +116,7 @@ __all__ = [
     "dtw_score_bank_many",
     "dtw_score_pairs",
     "query_moments",
+    "query_var_moments",
     "ScoreBankPlan",
     "build_score_plan",
     "DtwBankState",
@@ -103,8 +124,10 @@ __all__ = [
     "dtw_bank_extend",
     "bank_extend_tick",
     "bank_extend_tick_scored",
+    "bank_extend_tick_scored_var",
     "bank_extend_tick_dispatch",
     "bank_extend_tick_scored_dispatch",
+    "bank_extend_tick_scored_var_dispatch",
     "backtrack",
     "warp_to",
     "dtw_warp",
@@ -495,7 +518,8 @@ _Y_VALID = jnp.float32(1.0e30)
 
 def _bank_extend_diag_impl(rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
                            nvalid, qlens, *, band: Optional[int],
-                           score: bool):
+                           score: bool, vchunks=None, vstats=None,
+                           threshold: Optional[float] = None):
     """Wavefront chunk-extend of J streaming bank DPs, optionally fused
     with on-device open-end prefix scoring.  Pure function of arrays (jit
     and shard_map wrappers live below / in serve.tuning) — everything is
@@ -510,10 +534,21 @@ def _bank_extend_diag_impl(rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
     chunks  [J, C]       new samples (tail beyond ``nvalid[j]`` ignored)
     qlens   [J] int32    total expected query length (banded only)
 
+    Variance mode (``vchunks`` [J, C] per-sample measurement variances,
+    ``vstats`` [J, 3] running (sv, svx, svxx) folds, ``threshold`` the
+    static match threshold): ``moms`` doubles to SIX channels
+    [6, J, M, K] — (sy, syy, sxy, svy, svyy, svxy), where each variance
+    channel's per-cell delta is exactly ``v_i *`` the matching base
+    channel's delta, so the identical anchored/telescoped transitions
+    propagate them along the same backtrack-identical warp path.
+
     Returns ``(rows, moms, ns, sx, sxx, scores)``; ``scores`` is the
     [J, K] open-end warp correlation per (job, reference) when ``score``
     (the fused replacement for host ``prefix_similarity_bank``), else a
-    zero-size placeholder.  Cell values match ``_bank_extend_many`` to f32
+    zero-size placeholder.  In variance mode two more results follow:
+    ``(..., vstats2, probs)`` with ``probs`` [J, K] the
+    :func:`_prob_from_moments` match probabilities at the same open-end
+    endpoints.  Cell values match ``_bank_extend_many`` to f32
     tolerance (same recurrence, different evaluation order).
     """
     j, c = chunks.shape
@@ -531,11 +566,12 @@ def _bank_extend_diag_impl(rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
     prow = jnp.concatenate(
         [jnp.broadcast_to(corner[:, None, None], (j, 1, k)), rows,
          jnp.full((j, c, k), _INF)], axis=1)                       # [J,M+C+1,K]
+    nch = moms.shape[0]                       # 3, or 6 in variance mode
     if score:
         bpad = jnp.concatenate(
             [prow[None], jnp.concatenate(
-                [jnp.zeros((3, j, 1, k)), moms,
-                 jnp.zeros((3, j, c, k))], axis=2)], axis=0)       # [4,J,.,K]
+                [jnp.zeros((nch, j, 1, k)), moms,
+                 jnp.zeros((nch, j, c, k))], axis=2)], axis=0)  # [1+nch,J,.,K]
     else:
         bpad = prow[None]
     valid = ii[None, :] < nvalid[:, None]                          # [J, C]
@@ -546,21 +582,26 @@ def _bank_extend_diag_impl(rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
                                lengths[None, None, :])             # [J, C, K]
 
     def step(carry, t):
-        prev, prev2, mprev, mprev2 = carry          # [J,C,K] / [3,J,C,K]
-        # y diagonal; one size-(C+1) slice serves both column j (slot i ->
-        # y[t-i]) and column j-1 (shift by one) for the horiz moment swap.
-        ysl = jax.lax.dynamic_slice(yrp, (c + m - 1 - t, 0), (c + 1, k))
-        yd, ydm1 = ysl[:c], ysl[1:]
+        # Diagonal-reuse carry: step t's diag predecessors and previous-
+        # column deltas equal step t-1's vert predecessors and deltas
+        # bit-for-bit (both splice bpad[..., t] ahead of the t-2
+        # diagonal; delta(t-1) pairs x_i with y[t-1-i] exactly as
+        # delta_prev(t) would), so they ride in the carry instead of
+        # being re-gathered/re-multiplied every step — one slab copy per
+        # moment channel per step instead of two, which is what keeps
+        # the 6-channel variance slab's tick well under 2x the
+        # 3-channel tick's cost.
+        prev, pvert, mprev, mvert, dprev = carry    # [J,C,K] / [nch,J,C,K]
+        # y diagonal: slot i of diagonal t reads y[t - i].
+        yd = jax.lax.dynamic_slice(yrp, (c + m - 1 - t, 0), (c, k))
         d = jnp.abs(chunks[:, :, None] - yd[None])                 # [J,C,K]
         if band is not None:
             d = jnp.where(jnp.abs((t - ii)[None, :, None] - centers)
                           <= band, d, _INF)
-        bsl = jax.lax.dynamic_slice(bpad, (0, 0, t, 0),
-                                    (bpad.shape[0], j, 2, k))
-        p_vert = jnp.concatenate([bsl[0, :, 1:2], prev[:, : c - 1]],
-                                 axis=1)
-        p_diag = jnp.concatenate([bsl[0, :, 0:1], prev2[:, : c - 1]],
-                                 axis=1)
+        bsl = jax.lax.dynamic_slice(bpad, (0, 0, t + 1, 0),
+                                    (bpad.shape[0], j, 1, k))
+        p_vert = jnp.concatenate([bsl[0], prev[:, : c - 1]], axis=1)
+        p_diag = pvert
         p_horiz = prev
         best = jnp.minimum(jnp.minimum(p_diag, p_vert), p_horiz)
         # clamp at _INF: keeps banded / out-of-grid cells finite (f32
@@ -570,36 +611,40 @@ def _bank_extend_diag_impl(rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
         # down unchanged, so slot C-1 always carries the last VALID row.
         cell = jnp.where(valid[:, :, None], cell, p_vert)
         if not score:
-            return (cell, prev, mprev, mprev2), cell[:, c - 1]
+            return (cell, p_vert, mprev, mvert, dprev), cell[:, c - 1]
 
         # -- fused warp-path moments ------------------------------------
         yc = jnp.where(jnp.abs(yd) < _Y_VALID, yd - _MOM_SHIFT, 0.0)
-        ycm1 = jnp.where(jnp.abs(ydm1) < _Y_VALID, ydm1 - _MOM_SHIFT, 0.0)
         ycb = jnp.broadcast_to(yc[None, None], (1, j, c, k))
         delta = jnp.concatenate(
             [ycb, ycb * ycb, xm[None, :, :, None] * ycb], axis=0)
-        ycb1 = jnp.broadcast_to(ycm1[None, None], (1, j, c, k))
-        delta_prev = jnp.concatenate(
-            [ycb1, ycb1 * ycb1, xm[None, :, :, None] * ycb1], axis=0)
-        m_vert = jnp.concatenate([bsl[1:, :, 1:2], mprev[:, :, : c - 1]],
-                                 axis=2)
-        m_diag = jnp.concatenate([bsl[1:, :, 0:1], mprev2[:, :, : c - 1]],
-                                 axis=2)
+        if vchunks is not None:
+            # variance channels: v_i times the matching base channel,
+            # so the same transitions carry them along the same path.
+            delta = jnp.concatenate(
+                [delta, vchunks[None, :, :, None] * delta], axis=0)
+        m_vert = jnp.concatenate([bsl[1:], mprev[:, :, : c - 1]], axis=2)
+        m_diag = mvert
         # predecessor choice mirrors backtrack()'s np.argmin tie order:
         # diag first, then vert, then horiz.
         sel_diag = p_diag <= jnp.minimum(p_vert, p_horiz)          # [J,C,K]
         sel_vert = jnp.logical_and(~sel_diag, p_vert <= p_horiz)
         m_base = jnp.where(sel_diag[None], m_diag,
                            jnp.where(sel_vert[None], m_vert,
-                                     mprev - delta_prev))
+                                     mprev - dprev))
         m_cell = jnp.where(valid[None, :, :, None], m_base + delta,
                            m_vert)
-        return (cell, prev, m_cell, mprev), (cell[:, c - 1],
-                                             m_cell[:, :, c - 1])
+        return (cell, p_vert, m_cell, m_vert, delta), (cell[:, c - 1],
+                                                       m_cell[:, :, c - 1])
 
-    minit = jnp.zeros((3, j, c, k)) if score else jnp.zeros((3, 1, 1, 1))
-    init = (jnp.full((j, c, k), _INF), jnp.full((j, c, k), _INF),
-            minit, minit)
+    minit = jnp.zeros((nch, j, c, k)) if score else jnp.zeros((3, 1, 1, 1))
+    # pvert's init is step 0's diag predecessor: the boundary column
+    # bpad[..., 0] (the virtual corner / carried row) ahead of +inf;
+    # dprev's init is delta(-1) == 0 (step 0's previous column is the
+    # all-sentinel diagonal, whose masked deltas vanish).
+    pvinit = jnp.concatenate([prow[:, 0:1], jnp.full((j, c - 1, k), _INF)],
+                             axis=1)
+    init = (jnp.full((j, c, k), _INF), pvinit, minit, minit, minit)
     _, outs = jax.lax.scan(step, init,
                            jnp.arange(c + m - 1, dtype=jnp.int32),
                            unroll=_WAVEFRONT_UNROLL)
@@ -614,12 +659,21 @@ def _bank_extend_diag_impl(rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
     if not score:
         return new_rows, moms, ns2, sx, sxx, jnp.zeros((j, 0))
 
-    new_moms = mom_outs[c - 1:].transpose(1, 2, 0, 3)              # [3,J,M,K]
+    new_moms = mom_outs[c - 1:].transpose(1, 2, 0, 3)            # [nch,J,M,K]
     vmask = valid.astype(jnp.float32)
     sx2 = sx + jnp.sum(xm * vmask, axis=1)
     sxx2 = sxx + jnp.sum(xm * xm * vmask, axis=1)
-    scores = _moment_scores(new_rows, new_moms, ns2, sx2, sxx2, lengths)
-    return new_rows, new_moms, ns2, sx2, sxx2, scores
+    if vchunks is None:
+        scores = _moment_scores(new_rows, new_moms, ns2, sx2, sxx2, lengths)
+        return new_rows, new_moms, ns2, sx2, sxx2, scores
+    vq = vchunks * vmask
+    vstats2 = vstats + jnp.stack(
+        [jnp.sum(vq, axis=1), jnp.sum(vq * xm, axis=1),
+         jnp.sum(vq * xm * xm, axis=1)], axis=1)                 # [J, 3]
+    scores = _moment_scores(new_rows, new_moms[:3], ns2, sx2, sxx2, lengths)
+    probs = _moment_scores_prob(new_rows, new_moms, ns2, sx2, sxx2,
+                                vstats2, lengths, threshold)
+    return new_rows, new_moms, ns2, sx2, sxx2, scores, vstats2, probs
 
 
 def _corr_from_moments(sy, syy, sxy, sx, sxx, n):
@@ -634,8 +688,18 @@ def _corr_from_moments(sy, syy, sxy, sx, sxx, n):
     cov = sxy - sx * sy / n
     denom = jnp.sqrt(vx * vy)
     corr = jnp.clip(cov / jnp.where(denom > 0, denom, 1.0), -1.0, 1.0)
-    degen = (vx < 1e-9) & (vy < 1e-9) & (jnp.abs(sx - sy) / n < 1e-6)
-    return jnp.where(denom < 1e-12, jnp.where(degen, 1.0, 0.0), corr)
+    # Degeneracy is judged RELATIVE to the cancellation scale: a constant
+    # f32 prefix does not yield vx == 0 but vx ~ eps * (sxx + sx^2/n)
+    # (rounding garbage from the catastrophic cancellation), so an
+    # absolute epsilon let garbage/garbage through as an arbitrary
+    # clipped "correlation" that silently poisoned rankings.  Variance
+    # within ~1e-5 of the cancellation scale is rounding noise, not
+    # signal: the score is pinned to the degenerate conventions (1.0
+    # for an identical constant pair, else 0.0).
+    degx = vx <= 1e-5 * (sxx + sx * sx / n) + 1e-12
+    degy = vy <= 1e-5 * (syy + sy * sy / n) + 1e-12
+    both = degx & degy & (jnp.abs(sx - sy) / n < 1e-6)
+    return jnp.where(degx | degy, jnp.where(both, 1.0, 0.0), corr)
 
 
 def _moment_scores(rows, moms, ns, sx, sxx, lengths):
@@ -658,6 +722,86 @@ def _moment_scores(rows, moms, ns, sx, sxx, lengths):
     # empty slots (no samples yet) follow RunningMoments' n == 0
     # convention — score 0, not the vacuous all-zero-moments 1.0.
     return jnp.where(ns[:, None] > 0, out, 0.0)
+
+
+def _prob_from_moments(sy, syy, sxy, svy, svyy, svxy, sx, sxx,
+                       sv, svx, svxx, n, threshold):
+    """Match probability P[true warp correlation >= threshold] from the
+    variance-carrying moment slabs — THE single probabilistic score tail
+    (streaming tick, offline jnp scorer and the Pallas twins all call
+    this, exactly like :func:`_corr_from_moments` for the point score).
+
+    Model: each query sample x_i carries measurement variance v_i.  With
+    the warp path held fixed (one aligned pair per query row, the
+    ``warp_to`` convention), the observed correlation r is a smooth
+    function of the moment sums, so first-order (delta-method) error
+    propagation gives
+
+        dr/dx_i  = a + 2 b x~_i + c y~_j(i)
+        sigma_r^2 = a^2 sv + 4ab svx + 4b^2 svxx
+                    + 2ac svy + 4bc svxy + c^2 svyy
+
+    with a = dr/dsx, b = dr/dsxx, c = dr/dsxy = 1/sqrt(vx*vy) — every
+    sum is one of the six path accumulators, carried through the DP by
+    the same telescoping transitions as (sy, syy, sxy) (the variance
+    channels are exactly ``v_i *`` the base channels).  Noise also
+    BIASES r downward (it inflates vx while leaving cov unbiased), so r
+    is disattenuated by sqrt(vx / (vx - sv)) — capped at 2x so a
+    variance overestimate cannot manufacture a match — before the tail
+    probability Phi((r^ - threshold) / sigma_r) is taken.
+
+    Zero input variance makes every v-moment zero: the disattenuation
+    factor is exactly 1.0 (vx/vx), sigma_r is exactly 0, and the result
+    reduces BITWISE to the point rule ``r >= threshold`` (probability in
+    {0.0, 1.0}), which is what pins probabilistic == point decisions on
+    noise-free traces.
+    """
+    r = _corr_from_moments(sy, syy, sxy, sx, sxx, n)
+    vx = jnp.maximum(sxx - sx * sx / n, 0.0)
+    vy = jnp.maximum(syy - sy * sy / n, 0.0)
+    denom = jnp.sqrt(vx * vy)
+    safe_vx = jnp.where(vx > 0, vx, 1.0)
+    # disattenuation: E[vx_obs] = vx_true + sv, cov unbiased.
+    den = jnp.clip(vx - sv, vx * 0.25, vx)
+    g = jnp.where(den > 0, jnp.sqrt(vx / jnp.where(den > 0, den, 1.0)),
+                  1.0)
+    r_hat = jnp.clip(r * g, -1.0, 1.0)
+    c = 1.0 / jnp.where(denom > 0, denom, 1.0)
+    a = -c * sy / n + r * sx / (n * safe_vx)
+    b = -r / (2.0 * safe_vx)
+    var_r = (a * a * sv + 4.0 * a * b * svx + 4.0 * b * b * svxx
+             + 2.0 * a * c * svy + 4.0 * b * c * svxy + c * c * svyy)
+    sigma = jnp.sqrt(jnp.maximum(var_r, 0.0))
+    z = (r_hat - threshold) / jnp.where(sigma > 0, sigma, 1.0)
+    phi = 0.5 * jax.lax.erfc(-z / jnp.sqrt(jnp.float32(2.0)))
+    point = (r_hat >= threshold).astype(phi.dtype)
+    return jnp.where(sigma > 0, phi, point)
+
+
+def _moment_scores_prob(rows, moms, ns, sx, sxx, vstats, lengths,
+                        threshold):
+    """Open-end match probability per (job, reference) -> [J, K].
+
+    The probabilistic twin of :func:`_moment_scores`: same masked
+    open-end argmin endpoint, but the gather reads all SIX moment
+    channels ([6, J, M, K] slab: (sy, syy, sxy, svy, svyy, svxy)) and
+    the tail is :func:`_prob_from_moments` with the path-independent
+    variance folds ``vstats`` = [J, 3] (sv, svx, svxx).  Empty slots
+    get probability 0.0 (no evidence -> abstain).
+    """
+    m = rows.shape[1]
+    colmask = jnp.arange(m, dtype=jnp.int32)[:, None] < lengths[None, :]
+    masked = jnp.where(colmask[None], rows, _INF)
+    j_end = jnp.argmin(masked, axis=1)                             # [J, K]
+    msel = jnp.take_along_axis(moms, j_end[None, :, None, :],
+                               axis=2)[:, :, 0, :]                 # [6, J, K]
+    n = jnp.maximum(ns, 1).astype(jnp.float32)[:, None]            # [J, 1]
+    probs = _prob_from_moments(
+        msel[0], msel[1], msel[2], msel[3], msel[4], msel[5],
+        sx[:, None], sxx[:, None], vstats[:, 0][:, None],
+        vstats[:, 1][:, None], vstats[:, 2][:, None], n,
+        jnp.float32(threshold))
+    return jnp.where(ns[:, None] > 0, probs, 0.0)
 
 
 @functools.partial(jax.jit, static_argnames=("band",))
@@ -685,6 +829,30 @@ def bank_extend_tick_scored(rows, moms, ns, sx, sxx, bank_t, lengths,
     return _bank_extend_diag_impl(rows, moms, ns, sx, sxx, bank_t, lengths,
                                   chunks, nvalid, qlens, band=band,
                                   score=True)
+
+
+@functools.partial(jax.jit, static_argnames=("band", "threshold"))
+def bank_extend_tick_scored_var(rows, moms, ns, sx, sxx, vstats, bank_t,
+                                lengths, chunks, vchunks, nvalid, qlens,
+                                band: Optional[int] = None,
+                                threshold: float = 0.9):
+    """Variance-carrying fused scoring tick (jnp wavefront) ->
+    ``(rows, moms, ns, sx, sxx, scores, vstats, probs)``.
+
+    Same recurrence as :func:`bank_extend_tick_scored` with the moment
+    slab doubled to six channels ([6, J, M, K]: sy, syy, sxy, svy, svyy,
+    svxy), per-sample variances ``vchunks`` [J, C] riding beside the
+    samples and the [J, 3] path-independent variance folds ``vstats``
+    (sv, svx, svxx) riding beside sx/sxx.  ``probs`` [J, K] are the
+    :func:`_prob_from_moments` match probabilities at the open-end
+    endpoints; ``scores`` stays the point correlation.  A separate entry
+    point (not a flag on the exact tick) so the exact tick's compiled
+    graph and cost are untouched when variance mode is off.
+    """
+    return _bank_extend_diag_impl(rows, moms, ns, sx, sxx, bank_t, lengths,
+                                  chunks, nvalid, qlens, band=band,
+                                  score=True, vchunks=vchunks,
+                                  vstats=vstats, threshold=threshold)
 
 
 def bank_extend_tick_dispatch(rows, ns, bank_t, lengths, chunks, nvalid,
@@ -760,6 +928,70 @@ def bank_extend_tick_scored_dispatch(rows, moms, ns, sx, sxx, bank_t,
     return bank_extend_tick_scored(rows, moms, ns, sx, sxx, bank_t,
                                    lengths, chunks, nvalid, qlens,
                                    band=band)
+
+
+@functools.partial(jax.jit, static_argnames=("band", "threshold",
+                                             "interpret", "block_k"))
+def _scored_kernel_tick_var(rows, moms, ns, sx, sxx, vstats, bank_t,
+                            lengths, chunks, vchunks, nvalid, qlens,
+                            band: Optional[int], threshold: float,
+                            interpret: bool, block_k: int):
+    """Variance-carrying Pallas scoring tick in tick (K-last) layout —
+    the six-channel twin of :func:`_scored_kernel_tick`."""
+    from ..kernels.dtw import stream_bank_extend_scored_kernel
+    rows_km, moms_km, _ = stream_bank_extend_scored_kernel(
+        rows.transpose(0, 2, 1), moms.transpose(0, 1, 3, 2), ns,
+        bank_t.T, lengths, chunks, nvalid, qlens, band=band,
+        block_k=block_k, interpret=interpret, vchunks=vchunks)
+    new_rows = rows_km.transpose(0, 2, 1)                  # [J, M, K]
+    new_moms = moms_km.transpose(0, 1, 3, 2)               # [6, J, M, K]
+    c = chunks.shape[1]
+    xm = chunks - _MOM_SHIFT
+    vmask = (jnp.arange(c, dtype=jnp.int32)[None, :]
+             < nvalid[:, None]).astype(jnp.float32)
+    sx2 = sx + jnp.sum(xm * vmask, axis=1)
+    sxx2 = sxx + jnp.sum(xm * xm * vmask, axis=1)
+    vq = vchunks * vmask
+    vstats2 = vstats + jnp.stack(
+        [jnp.sum(vq, axis=1), jnp.sum(vq * xm, axis=1),
+         jnp.sum(vq * xm * xm, axis=1)], axis=1)
+    ns2 = ns + nvalid
+    scores = _moment_scores(new_rows, new_moms[:3], ns2, sx2, sxx2,
+                            lengths)
+    probs = _moment_scores_prob(new_rows, new_moms, ns2, sx2, sxx2,
+                                vstats2, lengths, threshold)
+    return new_rows, new_moms, ns2, sx2, sxx2, scores, vstats2, probs
+
+
+def bank_extend_tick_scored_var_dispatch(rows, moms, ns, sx, sxx, vstats,
+                                         bank_t, lengths, chunks, vchunks,
+                                         nvalid, qlens,
+                                         band: Optional[int] = None,
+                                         threshold: float = 0.9,
+                                         use_kernel: Optional[bool] = None,
+                                         interpret: Optional[bool] = None,
+                                         block_k: int = 128):
+    """Variance-carrying fused scoring tick routed to the best backend
+    (Pallas streaming kernel with six VMEM moment slabs on TPU, jnp
+    wavefront elsewhere) — the probabilistic twin of
+    :func:`bank_extend_tick_scored_dispatch`, returning the 8-tuple of
+    :func:`bank_extend_tick_scored_var`."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        if interpret is None:
+            from ..kernels.common import default_interpret
+            interpret = default_interpret()
+        return _scored_kernel_tick_var(rows, moms, ns, sx, sxx, vstats,
+                                       bank_t, lengths, chunks, vchunks,
+                                       nvalid, qlens, band=band,
+                                       threshold=threshold,
+                                       interpret=interpret,
+                                       block_k=block_k)
+    return bank_extend_tick_scored_var(rows, moms, ns, sx, sxx, vstats,
+                                       bank_t, lengths, chunks, vchunks,
+                                       nvalid, qlens, band=band,
+                                       threshold=threshold)
 
 
 # ---------------------------------------------------------------------------
@@ -947,6 +1179,112 @@ def _score_tile_many(xs, xlens, bank_km, lengths, sx, sxx,
         return _score_tile(x, xlen, bank_km, lengths, sxj, sxxj, band)
 
     return jax.lax.map(one_job, (xs, xlens, sx, sxx))
+
+
+def _score_tile_var(x, xv, xlen, bank_km, lengths, sx, sxx, sv, svx, svxx,
+                    band: Optional[int], threshold: float,
+                    unroll: int = _WAVEFRONT_UNROLL):
+    """Variance-carrying twin of :func:`_score_tile`: one query [N] with
+    per-sample variances ``xv`` [N] vs one reference tile [BK, M] ->
+    (scores, probs, dists) [BK].
+
+    The P pack grows to SEVEN channels [cell; sy; syy; sxy; svy; svyy;
+    svxy]: each variance channel's predecessor delta is the matching base
+    delta times the predecessor row's variance (the same BASE-form
+    anchored/copy transitions carry all six), and the endpoint
+    reconstruction adds ``v[xlen-1] *`` the base endpoint delta.  The
+    variance window is ZERO-sentinel-padded (unlike the _BIG query
+    sentinel): out-of-grid reads only feed don't-care cells, and zeros
+    can never overflow a moment accumulator.
+    """
+    bk, m = bank_km.shape
+    n = x.shape[0]
+    jj = jnp.arange(m, dtype=jnp.int32)
+    ts = jnp.arange(n + m - 1, dtype=jnp.int32)
+    xrp = jnp.concatenate([jnp.full((m,), _BIG), x[::-1],
+                           jnp.full((m,), _BIG)])
+    vrp = jnp.concatenate([jnp.zeros((m,)), xv[::-1], jnp.zeros((m,))])
+    if band is not None:
+        centers = _band_center(ts[:, None, None] - jj[None, None, :],
+                               xlen, lengths[None, :, None])
+        inband = jnp.abs(jj[None, None, :] - centers) <= band
+    else:
+        inband = jnp.zeros((ts.shape[0], 1, 1), jnp.bool_)
+    ii = ts[:, None] - jj[None, :]
+    lives = jnp.logical_and(ii >= 0, ii < xlen)          # [T, M]
+    yc = bank_km - _MOM_SHIFT
+    yc_sh = jnp.concatenate([jnp.zeros((bk, 1)), yc[:, :-1]], axis=1)
+    yc2, yc_sh2 = yc * yc, yc_sh * yc_sh
+
+    bcol = jnp.concatenate([jnp.full((1, bk, 1), _INF),
+                            jnp.zeros((6, bk, 1))], axis=0)
+
+    def step(carry, scanned):
+        t, ok, live = scanned
+        P1, P2 = carry                                       # [7, BK, M]
+        xsl = jax.lax.dynamic_slice(xrp, (m + n - 1 - t,), (m + 1,))
+        vsl = jax.lax.dynamic_slice(vrp, (m + n - 1 - t,), (m + 1,))
+        d = jnp.abs(xsl[:m][None, :] - bank_km)
+        if band is not None:
+            d = jnp.where(ok, d, _INF)
+        P1s = jnp.concatenate([bcol, P1[:, :, :-1]], axis=2)
+        ccol = bcol.at[0].set(jnp.where(t == 0, 0.0, _INF))
+        P2s = jnp.concatenate([ccol, P2[:, :, :-1]], axis=2)
+        pd, pv, ph = P2s[0], P1[0], P1s[0]
+        m1 = jnp.minimum(pv, ph)
+        cell = jnp.minimum(d + jnp.minimum(pd, m1), _INF)
+        sd = pd <= m1
+        anch = jnp.logical_or(sd, pv <= ph)
+        xp = xsl[1:][None, :] - _MOM_SHIFT
+        vp = vsl[1:][None, :]            # predecessor row's variance
+        ysel = jnp.where(sd, yc_sh, yc)
+        dpred3 = jnp.stack([ysel, jnp.where(sd, yc_sh2, yc2), xp * ysel])
+        dpred = jnp.concatenate([dpred3, vp[None] * dpred3], axis=0)
+        Bnew = jnp.where(anch[None],
+                         jnp.where(sd[None], P2s[1:], P1[1:]) + dpred,
+                         P1s[1:])
+        Pnew = jnp.concatenate([cell[None], Bnew], axis=0)
+        Pnew = jnp.where(live[None, None, :], Pnew, P1)
+        return (Pnew, P1), None
+
+    init = jnp.concatenate([jnp.full((1, bk, m), _INF),
+                            jnp.zeros((6, bk, m))], axis=0)
+    (P1, _), _ = jax.lax.scan(step, (init, init), (ts, inband, lives),
+                              unroll=unroll)
+    jend = (lengths - 1).astype(jnp.int32)
+    sel = jnp.take_along_axis(P1, jnp.broadcast_to(
+        jend[None, :, None], (7, bk, 1)), axis=2)[:, :, 0]  # [7, BK]
+    dist, Bf = sel[0], sel[1:]
+    yce = jnp.take_along_axis(bank_km, jend[:, None], axis=1)[:, 0] \
+        - _MOM_SHIFT
+    xme = jnp.take_along_axis(
+        x, jnp.maximum(xlen - 1, 0)[None], axis=0)[0] - _MOM_SHIFT
+    vme = jnp.take_along_axis(
+        xv, jnp.maximum(xlen - 1, 0)[None], axis=0)[0]
+    base_d = jnp.stack([yce, yce * yce, xme * yce])
+    mf = Bf + jnp.concatenate([base_d, vme * base_d], axis=0)
+    nn = jnp.maximum(xlen, 1).astype(jnp.float32)
+    scores = _corr_from_moments(mf[0], mf[1], mf[2], sx, sxx, nn)
+    probs = _prob_from_moments(mf[0], mf[1], mf[2], mf[3], mf[4], mf[5],
+                               sx, sxx, sv, svx, svxx, nn,
+                               jnp.float32(threshold))
+    return (jnp.where(xlen > 0, scores, 0.0),
+            jnp.where(xlen > 0, probs, 0.0), dist)
+
+
+@functools.partial(jax.jit, static_argnames=("band", "threshold"))
+def _score_tile_var_many(xs, xvs, xlens, bank_km, lengths, sx, sxx,
+                         vstats, band: Optional[int], threshold: float):
+    """J queries (with variances) x one reference tile ->
+    (scores, probs, dists) [J, BK]; the variance-mode column of
+    :func:`_score_tile_many` (``lax.map`` over jobs, [7, BK, M] slabs)."""
+
+    def one_job(args):
+        x, xv, xlen, sxj, sxxj, vst = args
+        return _score_tile_var(x, xv, xlen, bank_km, lengths, sxj, sxxj,
+                               vst[0], vst[1], vst[2], band, threshold)
+
+    return jax.lax.map(one_job, (xs, xvs, xlens, sx, sxx, vstats))
 
 
 #: Inner vmap width of one batched-verdict dispatch: wide enough to
@@ -1240,6 +1578,18 @@ def query_moments(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     return (np.float32(xm.sum()), np.float32((xm * xm).sum()))
 
 
+def query_var_moments(x: np.ndarray, v: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side path-independent variance folds (sv, svx, svxx) of a
+    query with per-sample variances ``v`` — the variance-mode companions
+    of :func:`query_moments` (same float64 accumulation, same
+    batch-invariance argument)."""
+    xm = np.asarray(x, np.float64).reshape(-1) - float(_MOM_SHIFT)
+    vv = np.asarray(v, np.float64).reshape(-1)
+    return (np.float32(vv.sum()), np.float32((vv * xm).sum()),
+            np.float32((vv * xm * xm).sum()))
+
+
 def _pad_pow2(n: int, lo: int = 8) -> int:
     return max(lo, 1 << (max(n, 1) - 1).bit_length())
 
@@ -1282,6 +1632,8 @@ def build_score_plan(series, lengths=None,
 def dtw_score_bank_many(xs, bank, lengths=None, xlens=None,
                         band: Optional[int] = None,
                         sx=None, sxx=None, *,
+                        xvars=None, vstats=None,
+                        threshold: float = 0.9,
                         plan: Optional[ScoreBankPlan] = None,
                         use_kernel: Optional[bool] = None,
                         interpret: Optional[bool] = None,
@@ -1297,6 +1649,15 @@ def dtw_score_bank_many(xs, bank, lengths=None, xlens=None,
     they are computed here on the host.  Scores equal
     ``similarity_bank``'s host backtrack + correlation: bitwise-path on
     tie-free (dyadic-grid) data, to warp-path-tie tolerance elsewhere.
+
+    Variance mode: passing ``xvars`` [J, N] (per-sample measurement
+    variances; ``vstats`` [J, 3] = (sv, svx, svxx) folds optional, see
+    :func:`query_var_moments`) switches to the seven-channel scorer and
+    the return value becomes ``(scores, probs)`` (plus dists when
+    ``return_distances``), where ``probs`` [J, K] is
+    P[true warp correlation >= ``threshold``] per
+    :func:`_prob_from_moments` — all-zero ``xvars`` reduces ``probs``
+    to the point rule ``scores >= threshold`` exactly.
 
     Routed to the Pallas offline kernel (``kernels.dtw.score``) on TPU
     backends — DP row and moment slabs pinned in VMEM per (query,
@@ -1319,11 +1680,58 @@ def dtw_score_bank_many(xs, bank, lengths=None, xlens=None,
         folds = [query_moments(xs[i, :xlens[i]]) for i in range(j)]
         sx = np.asarray([f[0] for f in folds], np.float32)
         sxx = np.asarray([f[1] for f in folds], np.float32)
+    if xvars is not None:
+        xvars = np.asarray(xvars, np.float32)
+        if xvars.shape != xs.shape:
+            raise ValueError(f"xvars must match xs shape {xs.shape}, "
+                             f"got {xvars.shape}")
+        if vstats is None:
+            vstats = np.asarray(
+                [query_var_moments(xs[i, :xlens[i]], xvars[i, :xlens[i]])
+                 for i in range(j)], np.float32)
+        vstats = np.asarray(vstats, np.float32)
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if k == 0:
         z = jnp.zeros((j, 0), jnp.float32)
-        return (z, z) if return_distances else z
+        out = (z, z) if xvars is not None else (z,)
+        out = out + (z,) if return_distances else out
+        return out if len(out) > 1 else out[0]
+    if xvars is not None:
+        if use_kernel:
+            if interpret is None:
+                from ..kernels.common import default_interpret
+                interpret = default_interpret()
+            from ..kernels.dtw import score_bank_offline_var_kernel
+            scores, probs, dists = score_bank_offline_var_kernel(
+                jnp.asarray(xs), jnp.asarray(xvars), jnp.asarray(xlens),
+                jnp.asarray(series), jnp.asarray(lengths),
+                jnp.asarray(sx), jnp.asarray(sxx), jnp.asarray(vstats),
+                band=band, threshold=float(threshold),
+                block_k=min(128, _pad_pow2(k)), interpret=interpret)
+            return (scores, probs, dists) if return_distances \
+                else (scores, probs)
+        # jnp path: the simple tiled wavefront always (the windowed /
+        # batched-verdict perf variants have no variance twins —
+        # _score_tile_var supports the band mask directly).
+        if plan is None:
+            plan = build_score_plan(series, lengths, block_k)
+        parts = []
+        for lo in range(0, j, _SCORE_J_GROUP):
+            hi = min(lo + _SCORE_J_GROUP, j)
+            parts.append([
+                _score_tile_var_many(
+                    jnp.asarray(xs[lo:hi]), jnp.asarray(xvars[lo:hi]),
+                    jnp.asarray(xlens[lo:hi]), tb, tl,
+                    jnp.asarray(sx[lo:hi]), jnp.asarray(sxx[lo:hi]),
+                    jnp.asarray(vstats[lo:hi]), band, float(threshold))
+                for tb, tl in plan.tiles])
+        jax.block_until_ready(parts)
+        scores, probs, dists = (np.concatenate(
+            [np.concatenate([np.asarray(p[i]) for p in grp], axis=1)
+             for grp in parts], axis=0)[:, plan.inv] for i in range(3))
+        return (scores, probs, dists) if return_distances \
+            else (scores, probs)
     if use_kernel:
         if interpret is None:
             from ..kernels.common import default_interpret

@@ -87,10 +87,17 @@ def correlation(x: np.ndarray, y: np.ndarray) -> float:
         raise ValueError(f"shape mismatch {x.shape} vs {y.shape}")
     xc = x - x.mean()
     yc = y - y.mean()
-    denom = np.sqrt((xc * xc).sum() * (yc * yc).sum())
-    if denom < 1e-12:
+    vx = (xc * xc).sum()
+    vy = (yc * yc).sum()
+    # Relative degeneracy guard: catastrophic cancellation on a constant
+    # series leaves a residue proportional to the uncentered energy, not an
+    # absolute epsilon, so an absolute cutoff misses it at larger
+    # magnitudes and the 0/0 would poison downstream ranking.
+    degx = vx <= 1e-10 * (x * x).sum() + 1e-12
+    degy = vy <= 1e-10 * (y * y).sum() + 1e-12
+    if degx or degy:
         return 1.0 if np.allclose(x, y) else 0.0
-    return float((xc * yc).sum() / denom)
+    return float((xc * yc).sum() / np.sqrt(vx * vy))
 
 
 def similarity(x: np.ndarray, y: np.ndarray, *, preprocess: bool = False,
@@ -239,15 +246,17 @@ class RunningMoments:
     def corr(self) -> float:
         if self.n == 0:
             return 0.0
-        vx = self.sxx - self.sx * self.sx / self.n
-        vy = self.syy - self.sy * self.sy / self.n
-        denom = float(np.sqrt(max(vx, 0.0) * max(vy, 0.0)))
-        if denom < 1e-12:
+        vx = max(self.sxx - self.sx * self.sx / self.n, 0.0)
+        vy = max(self.syy - self.sy * self.sy / self.n, 0.0)
+        # Relative degeneracy guard (see :func:`correlation`): cancellation
+        # residue on constant series scales with the uncentered moments.
+        degx = vx <= 1e-10 * (self.sxx + self.sx * self.sx / self.n) + 1e-12
+        degy = vy <= 1e-10 * (self.syy + self.sy * self.sy / self.n) + 1e-12
+        if degx or degy:
             mean_close = abs(self.sx - self.sy) / self.n < 1e-6
-            return 1.0 if max(vx, 0.0) < 1e-9 and max(vy, 0.0) < 1e-9 \
-                and mean_close else 0.0
+            return 1.0 if degx and degy and mean_close else 0.0
         cov = self.sxy - self.sx * self.sy / self.n
-        return float(np.clip(cov / denom, -1.0, 1.0))
+        return float(np.clip(cov / np.sqrt(vx * vy), -1.0, 1.0))
 
 
 #: "No band argument given" sentinel for prefix_similarity_bank — the

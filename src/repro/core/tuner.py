@@ -66,6 +66,12 @@ class TuneDecision:
     # margin / stable_ticks / min_fraction rule can be calibrated per
     # workload family instead of fixed constants (ROADMAP).
     decided_at_fraction: Optional[float] = None
+    # Calibrated match probability P[true warp correlation >= threshold]
+    # under the query's per-sample measurement variance (the uncertain-
+    # series matcher, arXiv:1112.5505).  None when the decision came from
+    # the exact (point-correlation) rule; at zero input variance the
+    # probability is exactly 0.0/1.0 and the two rules coincide bitwise.
+    probability: Optional[float] = None
 
     def to_record(self) -> Dict[str, Any]:
         """JSON-serializable form for ``ReferenceDB`` decision history
@@ -76,7 +82,9 @@ class TuneDecision:
                 "scores": {k: float(v) for k, v in self.scores.items()},
                 "fraction_seen": self.fraction_seen,
                 "decided_at_fraction": self.decided_at_fraction,
-                "final": bool(self.final)}
+                "final": bool(self.final),
+                "probability": (None if self.probability is None
+                                else float(self.probability))}
 
     @classmethod
     def from_record(cls, rec: Dict[str, Any]) -> "TuneDecision":
@@ -85,7 +93,8 @@ class TuneDecision:
                    scores=dict(rec.get("scores", {})),
                    fraction_seen=rec.get("fraction_seen"),
                    final=bool(rec.get("final", True)),
-                   decided_at_fraction=rec.get("decided_at_fraction"))
+                   decided_at_fraction=rec.get("decided_at_fraction"),
+                   probability=rec.get("probability"))
 
 
 class AutoTuner:
@@ -301,22 +310,22 @@ class OnlineMatcher:
         """Complete-series scores; equals the offline ``similarity_bank``
         of the full (filtered) query against the bank.
 
-        Matrix-free: re-scored by the closed-end moment scorer (one
-        device dispatch, no collected rows needed — this works with
-        ``collect_rows=False`` too), with the banded corridor re-derived
-        from the true consumed length.  A banded stream whose
-        ``query_len`` prediction did NOT come true falls back to
-        backtracking the collected rows when it has them (preserving the
-        stream's corridor placement exactly as scored in flight); without
-        collected rows it self-corrects like ``TuningService.finish``
-        does — the matrix-free solve anchors the corridor at the true
-        length, which IS the offline ``similarity_bank`` verdict.
+        With ``collect_rows=True`` the streamed DP rows already hold the
+        full accumulated-cost matrix of the consumed query, so the final
+        verdict is a pure host backtrack of those rows — no second device
+        dispatch re-running the whole DP (that re-solve was the PR-5
+        ``stream_offline_equiv`` regression).  This also preserves the
+        stream's corridor placement exactly as scored in flight when a
+        banded ``query_len`` prediction did not come true.  With
+        ``collect_rows=False`` there are no rows to backtrack, so the
+        matrix-free closed-end moment scorer re-solves in one device
+        dispatch, with the banded corridor re-derived from the true
+        consumed length — which IS the offline ``similarity_bank``
+        verdict.
         """
         if self.n < 2:
             return np.zeros((len(self.bank),), np.float64)
-        band = self._state.band
-        if band is not None and self._state.query_len != self.n \
-                and self._collect:
+        if self._collect:
             return self.prefix_scores(open_end=False)
         return prefix_similarity_bank(self.query(), self.bank, None,
-                                      open_end=False, band=band)
+                                      open_end=False, band=self._state.band)

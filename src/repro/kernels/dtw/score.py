@@ -34,7 +34,8 @@ from jax.experimental import pallas as pl
 
 from .stream import _INF, _MOM_SHIFT, _fill_from_anchor, _minplus_scan2
 
-__all__ = ["score_bank_offline_kernel", "score_bank_offline"]
+__all__ = ["score_bank_offline_kernel", "score_bank_offline",
+           "score_bank_offline_var_kernel"]
 
 
 def _score_kernel(xlen_ref, sx_ref, sxx_ref, x_ref, len_ref, bank_ref,
@@ -172,3 +173,151 @@ def score_bank_offline(xs, xlens, bank, lengths, sx, sxx,
     interpret = default_interpret() if interpret is None else interpret
     return score_bank_offline_kernel(xs, xlens, bank, lengths, sx, sxx,
                                      band=band, interpret=interpret)
+
+
+def _score_var_kernel(xlen_ref, sx_ref, sxx_ref, vstats_ref, x_ref, vx_ref,
+                      len_ref, bank_ref, score_ref, prob_ref, dist_ref, *,
+                      n: int, m: int, band: Optional[int],
+                      threshold: float):
+    """Variance-carrying twin of :func:`_score_kernel`: six moment slabs
+    ([6, BK, M]: sy, syy, sxy, svy, svyy, svxy — each variance channel's
+    delta is ``v_i *`` the matching base delta) plus an in-kernel
+    probabilistic reduction (``core.dtw._prob_from_moments``, the single
+    shared probability tail) beside the point score."""
+    from ...core.dtw import _corr_from_moments, _prob_from_moments
+
+    xlen = xlen_ref[0]
+    x = x_ref[0]                                   # [N]
+    xv = vx_ref[0]                                 # [N]
+    bank = bank_ref[...]                           # [BK, M]
+    bk = bank.shape[0]
+    lens = len_ref[...]                            # [BK]
+    jj = jax.lax.iota(jnp.int32, m)
+    yc = bank - _MOM_SHIFT
+    yy = yc * yc
+
+    def body(i, carry):
+        row, moms = carry                          # [BK, M], [6, BK, M]
+        d = jnp.abs(x[i] - bank)
+        if band is not None:
+            centers = (i * (lens - 1)) // jnp.maximum(xlen - 1, 1)
+            d = jnp.where(jnp.abs(jj[None, :] - centers[:, None]) <= band,
+                          d, _INF)
+        corner = jnp.where(i == 0, 0.0, _INF)
+        p_diag = jnp.concatenate(
+            [jnp.broadcast_to(corner, (bk, 1)).astype(row.dtype),
+             row[:, :-1]], axis=1)
+        p_vert = row
+        mn = jnp.minimum(p_vert, p_diag)
+        new = _minplus_scan2(d, mn + d, m)
+        if band is not None:
+            new = jnp.where(d >= _INF, _INF, new)
+        new = jnp.minimum(new, _INF)
+        p_horiz = jnp.concatenate(
+            [jnp.full((bk, 1), _INF, new.dtype), new[:, :-1]], axis=1)
+        sel_diag = p_diag <= jnp.minimum(p_vert, p_horiz)
+        sel_vert = jnp.logical_and(~sel_diag, p_vert <= p_horiz)
+        anch = jnp.logical_or(sel_diag, sel_vert)
+        m_diag = jnp.concatenate(
+            [jnp.zeros((6, bk, 1), moms.dtype), moms[:, :, :-1]], axis=2)
+        base = jnp.where(sel_diag[None], m_diag,
+                         jnp.where(sel_vert[None], moms, 0.0))
+        base = _fill_from_anchor(base, anch, m)
+        xm = x[i] - _MOM_SHIFT
+        dm = jnp.stack([yc, yy, xm * yc])
+        new_moms = base + jnp.concatenate([dm, xv[i] * dm], axis=0)
+        valid = i < xlen
+        return (jnp.where(valid, new, row),
+                jnp.where(valid, new_moms, moms))
+
+    row0 = jnp.full((bk, m), _INF, jnp.float32)
+    moms0 = jnp.zeros((6, bk, m), jnp.float32)
+    row, moms = jax.lax.fori_loop(0, n, body, (row0, moms0))
+
+    onehot = jj[None, :] == (lens - 1)[:, None]              # [BK, M]
+    dist = jnp.sum(jnp.where(onehot, row, 0.0), axis=1)
+    msel = jnp.sum(jnp.where(onehot[None], moms, 0.0), axis=2)  # [6, BK]
+    nn = jnp.maximum(xlen, 1).astype(jnp.float32)
+    scores = _corr_from_moments(msel[0], msel[1], msel[2], sx_ref[0],
+                                sxx_ref[0], nn)
+    probs = _prob_from_moments(
+        msel[0], msel[1], msel[2], msel[3], msel[4], msel[5],
+        sx_ref[0], sxx_ref[0], vstats_ref[0, 0], vstats_ref[0, 1],
+        vstats_ref[0, 2], nn, jnp.float32(threshold))
+    score_ref[0] = jnp.where(xlen > 0, scores, 0.0)
+    prob_ref[0] = jnp.where(xlen > 0, probs, 0.0)
+    dist_ref[0] = dist
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("band", "threshold", "block_k",
+                                    "interpret"))
+def _score_var_call(xs, xvars, xlens, bank, lengths, sx, sxx, vstats,
+                    band: Optional[int], threshold: float, block_k: int,
+                    interpret: bool):
+    j, n = xs.shape
+    k, m = bank.shape
+    kernel = functools.partial(_score_var_kernel, n=n, m=m, band=band,
+                               threshold=threshold)
+    scores, probs, dists = pl.pallas_call(
+        kernel,
+        grid=(j, k // block_k),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # xlen
+            pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # sx
+            pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # sxx
+            pl.BlockSpec((1, 3), lambda ji, ki: (ji, 0)),      # vstats
+            pl.BlockSpec((1, n), lambda ji, ki: (ji, 0)),      # query
+            pl.BlockSpec((1, n), lambda ji, ki: (ji, 0)),      # variances
+            pl.BlockSpec((block_k,), lambda ji, ki: (ki,)),    # lengths
+            pl.BlockSpec((block_k, m), lambda ji, ki: (ki, 0)),  # bank
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k), lambda ji, ki: (ji, ki)),
+            pl.BlockSpec((1, block_k), lambda ji, ki: (ji, ki)),
+            pl.BlockSpec((1, block_k), lambda ji, ki: (ji, ki)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((j, k), jnp.float32),
+            jax.ShapeDtypeStruct((j, k), jnp.float32),
+            jax.ShapeDtypeStruct((j, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xlens, sx, sxx, vstats, xs, xvars, lengths, bank)
+    return scores, probs, dists
+
+
+def score_bank_offline_var_kernel(xs, xvars, xlens, bank, lengths, sx,
+                                  sxx, vstats,
+                                  band: Optional[int] = None,
+                                  threshold: float = 0.9,
+                                  block_k: int = 128,
+                                  interpret: bool = True):
+    """Closed-end scores + match probabilities + endpoint distances of J
+    uncertain queries vs the whole bank — one pallas_call.
+
+    As :func:`score_bank_offline_kernel` plus ``xvars`` [J, N] per-sample
+    variances and ``vstats`` [J, 3] = (sv, svx, svxx) folds
+    (``core.dtw.query_var_moments``) -> (scores, probs, dists) [J, K],
+    with ``probs`` = P[true warp correlation >= ``threshold``].
+    """
+    xs = jnp.asarray(xs, jnp.float32)
+    xvars = jnp.asarray(xvars, jnp.float32)
+    bank = jnp.asarray(bank, jnp.float32)
+    xlens = jnp.asarray(xlens, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    sx = jnp.asarray(sx, jnp.float32)
+    sxx = jnp.asarray(sxx, jnp.float32)
+    vstats = jnp.asarray(vstats, jnp.float32)
+    k, m = bank.shape
+    bk = min(block_k, k)
+    pad = (-k) % bk
+    if pad:
+        bank = jnp.concatenate(
+            [bank, jnp.zeros((pad, m), jnp.float32)], axis=0)
+        lengths = jnp.concatenate(
+            [lengths, jnp.ones((pad,), jnp.int32)], axis=0)
+    scores, probs, dists = _score_var_call(
+        xs, xvars, xlens, bank, lengths, sx, sxx, vstats, band,
+        float(threshold), bk, interpret)
+    return scores[:, :k], probs[:, :k], dists[:, :k]

@@ -133,17 +133,31 @@ def _fill_from_anchor(vals, anch, m_len: int):
     return vals
 
 
-def _stream_scored_kernel(ns_ref, nv_ref, ql_ref, x_ref, len_ref, rows_ref,
-                          moms_ref, bank_ref, out_ref, mout_ref, *, c: int,
-                          m: int, band: Optional[int]):
+def _stream_scored_kernel(ns_ref, nv_ref, ql_ref, x_ref, *refs, c: int,
+                          m: int, band: Optional[int],
+                          variance: bool = False):
     """One (job, reference-tile) program of the FUSED tick: advance the
     [BK, M] DP row slice AND its [3, BK, M] warp-path moment slabs by up
     to ``c`` samples, entirely in VMEM.
+
+    ``variance=True`` doubles the slab to [6, BK, M] (sy, syy, sxy, svy,
+    svyy, svxy) and takes an extra per-sample variance ref right after
+    the chunk ref: each variance channel's delta is ``v_i *`` the
+    matching base channel's delta, so the identical anchored
+    forward-fill carries all six (channels 0..2 arithmetic is untouched
+    — bit-identity with the three-channel kernel and the jnp wavefront
+    is preserved).
 
     Rows are clamped at ``_INF`` each update (like the wavefront jnp twin)
     so predecessor selection ties resolve identically in saturated
     regions; the moments of saturated cells are don't-care (no finite
     path can descend from them) but stay finite."""
+    if variance:
+        (vx_ref, len_ref, rows_ref, moms_ref, bank_ref,
+         out_ref, mout_ref) = refs
+        vx = vx_ref[0]                             # [C]
+    else:
+        len_ref, rows_ref, moms_ref, bank_ref, out_ref, mout_ref = refs
     n0 = ns_ref[0]
     nv = nv_ref[0]
     ql = ql_ref[0]
@@ -155,7 +169,7 @@ def _stream_scored_kernel(ns_ref, nv_ref, ql_ref, x_ref, len_ref, rows_ref,
     yy = yc * yc
 
     def body(i, carry):
-        row, moms = carry                          # [BK, M], [3, BK, M]
+        row, moms = carry                          # [BK, M], [nch, BK, M]
         d = jnp.abs(x[i] - bank)
         if band is not None:
             lens = len_ref[...]
@@ -183,14 +197,18 @@ def _stream_scored_kernel(ns_ref, nv_ref, ql_ref, x_ref, len_ref, rows_ref,
         # anchor cells read their predecessor's moments directly (the
         # virtual corner / first-sample boundary shifts in zeros)...
         m_diag = jnp.concatenate(
-            [jnp.zeros((3, bk, 1), moms.dtype), moms[:, :, :-1]], axis=2)
+            [jnp.zeros((moms.shape[0], bk, 1), moms.dtype),
+             moms[:, :, :-1]], axis=2)
         base = jnp.where(sel_diag[None], m_diag,
                          jnp.where(sel_vert[None], moms, 0.0))
         # ...horizontal runs telescope to base(anchor) + pair(j): fill
         # each run from its anchor, then add this cell's aligned pair.
         base = _fill_from_anchor(base, anch, m)
         xm = x[i] - _MOM_SHIFT
-        new_moms = base + jnp.stack([yc, yy, xm * yc])
+        dm = jnp.stack([yc, yy, xm * yc])
+        if variance:
+            dm = jnp.concatenate([dm, vx[i] * dm], axis=0)
+        new_moms = base + dm
         valid = i < nv
         return (jnp.where(valid, new, row),
                 jnp.where(valid, new_moms, moms))
@@ -205,35 +223,47 @@ def _stream_scored_kernel(ns_ref, nv_ref, ql_ref, x_ref, len_ref, rows_ref,
                    static_argnames=("band", "block_k", "interpret"))
 def _stream_scored_call(rows, moms, ns, bank, lengths, chunks, nvalid,
                         qlens, band: Optional[int], block_k: int,
-                        interpret: bool):
+                        interpret: bool, vchunks=None):
     j, k, m = rows.shape
     c = chunks.shape[1]
-    kernel = functools.partial(_stream_scored_kernel, c=c, m=m, band=band)
+    nch = moms.shape[1]                   # 3, or 6 in variance mode
+    variance = vchunks is not None
+    kernel = functools.partial(_stream_scored_kernel, c=c, m=m, band=band,
+                               variance=variance)
+    in_specs = [
+        pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # ns
+        pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # nvalid
+        pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # qlens
+        pl.BlockSpec((1, c), lambda ji, ki: (ji, 0)),      # chunk
+    ]
+    operands = [ns, nvalid, qlens, chunks]
+    if variance:
+        in_specs.append(pl.BlockSpec((1, c), lambda ji, ki: (ji, 0)))
+        operands.append(vchunks)                           # variances
+    in_specs += [
+        pl.BlockSpec((block_k,), lambda ji, ki: (ki,)),    # lengths
+        pl.BlockSpec((1, block_k, m),
+                     lambda ji, ki: (ji, ki, 0)),          # rows
+        pl.BlockSpec((1, nch, block_k, m),
+                     lambda ji, ki: (ji, 0, ki, 0)),       # moments
+        pl.BlockSpec((block_k, m), lambda ji, ki: (ki, 0)),  # bank
+    ]
+    operands += [lengths, rows, moms, bank]
     new_rows, new_moms = pl.pallas_call(
         kernel,
         grid=(j, k // block_k),
-        in_specs=[
-            pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # ns
-            pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # nvalid
-            pl.BlockSpec((1,), lambda ji, ki: (ji,)),          # qlens
-            pl.BlockSpec((1, c), lambda ji, ki: (ji, 0)),      # chunk
-            pl.BlockSpec((block_k,), lambda ji, ki: (ki,)),    # lengths
-            pl.BlockSpec((1, block_k, m),
-                         lambda ji, ki: (ji, ki, 0)),          # rows
-            pl.BlockSpec((1, 3, block_k, m),
-                         lambda ji, ki: (ji, 0, ki, 0)),       # moments
-            pl.BlockSpec((block_k, m), lambda ji, ki: (ki, 0)),  # bank
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, block_k, m), lambda ji, ki: (ji, ki, 0)),
-            pl.BlockSpec((1, 3, block_k, m), lambda ji, ki: (ji, 0, ki, 0)),
+            pl.BlockSpec((1, nch, block_k, m),
+                         lambda ji, ki: (ji, 0, ki, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((j, k, m), jnp.float32),
-            jax.ShapeDtypeStruct((j, 3, k, m), jnp.float32),
+            jax.ShapeDtypeStruct((j, nch, k, m), jnp.float32),
         ],
         interpret=interpret,
-    )(ns, nvalid, qlens, chunks, lengths, rows, moms, bank)
+    )(*operands)
     return new_rows, new_moms, ns + nvalid
 
 
@@ -313,16 +343,20 @@ def stream_bank_extend_scored_kernel(rows, moms, ns, bank, lengths, chunks,
                                      nvalid, qlens,
                                      band: Optional[int] = None,
                                      block_k: int = 128,
-                                     interpret: bool = True):
+                                     interpret: bool = True,
+                                     vchunks=None):
     """Advance J streaming DPs AND their warp-path correlation moments by
     one padded chunk — one pallas_call.
 
     rows [J, K, M] f32; moms [3, J, K, M] f32 (sy, syy, sxy slabs of the
     current DP row's cells); other args as
     :func:`stream_bank_extend_kernel`.  Returns ``(rows, moms, ns)`` with
-    the same layouts.  The open-end score reduction over the returned
-    slabs lives in ``core.dtw`` (``bank_extend_tick_scored_dispatch``)
-    so the moment semantics stay defined in exactly one place.
+    the same layouts.  Variance mode: pass ``vchunks`` [J, C] per-sample
+    variances with a SIX-channel ``moms`` [6, J, K, M] (sy, syy, sxy,
+    svy, svyy, svxy) — the extra slabs ride the same VMEM row-scan.  The
+    open-end score reduction over the returned slabs lives in
+    ``core.dtw`` (``bank_extend_tick_scored[_var]_dispatch``) so the
+    moment semantics stay defined in exactly one place.
     """
     rows = jnp.asarray(rows, jnp.float32)
     moms = jnp.asarray(moms, jnp.float32)
@@ -332,21 +366,27 @@ def stream_bank_extend_scored_kernel(rows, moms, ns, bank, lengths, chunks,
     nvalid = jnp.asarray(nvalid, jnp.int32)
     qlens = jnp.asarray(qlens, jnp.int32)
     lengths = jnp.asarray(lengths, jnp.int32)
+    if vchunks is not None:
+        vchunks = jnp.asarray(vchunks, jnp.float32)
+        if moms.shape[0] != 6:
+            raise ValueError("variance mode needs a six-channel moment "
+                             f"slab, got {moms.shape[0]} channels")
     j, k, m = rows.shape
+    nch = moms.shape[0]
     bk = min(block_k, k)
     pad = (-k) % bk
     if pad:
         rows = jnp.concatenate(
             [rows, jnp.full((j, pad, m), _INF, jnp.float32)], axis=1)
         moms = jnp.concatenate(
-            [moms, jnp.zeros((3, j, pad, m), jnp.float32)], axis=2)
+            [moms, jnp.zeros((nch, j, pad, m), jnp.float32)], axis=2)
         bank = jnp.concatenate(
             [bank, jnp.zeros((pad, m), jnp.float32)], axis=0)
         lengths = jnp.concatenate(
             [lengths, jnp.ones((pad,), jnp.int32)], axis=0)
     new_rows, new_moms, ns2 = _stream_scored_call(
         rows, moms.transpose(1, 0, 2, 3), ns, bank, lengths, chunks,
-        nvalid, qlens, band, bk, interpret)
+        nvalid, qlens, band, bk, interpret, vchunks=vchunks)
     return (new_rows[:, :k], new_moms.transpose(1, 0, 2, 3)[:, :, :k],
             ns2)
 

@@ -63,6 +63,11 @@ class BoundedBuffer:
     producer can retry the identical chunk — while ``"drop_oldest"``
     sheds buffered samples from the front until the new chunk fits
     (``dropped`` counts every sample lost this way).
+
+    Counter invariant (conservation): ``total_in`` counts every sample
+    *accepted* into the buffer (pre-shed size, including the samples a
+    ``drop_oldest`` shed immediately discards), so at any quiescent point
+    ``total_in == drained-so-far + len(buffer) + dropped``.
     """
 
     def __init__(self, limit: Optional[int] = None,
@@ -85,6 +90,10 @@ class BoundedBuffer:
         s = np.asarray(samples, np.float32).reshape(-1)
         if not s.shape[0]:
             return
+        # Count the ORIGINAL push size before any overflow truncation
+        # below rebinds ``s`` — counting after the `s = s[-limit:]` shed
+        # undercounted total_in and broke the conservation invariant.
+        pushed = s.shape[0]
         if self.limit is not None and self._pending + s.shape[0] > self.limit:
             if self.policy == "reject":
                 raise BackpressureError(
@@ -109,7 +118,7 @@ class BoundedBuffer:
                         self.dropped += need
         self._chunks.append(s)
         self._pending += s.shape[0]
-        self.total_in += s.shape[0]
+        self.total_in += pushed
 
     def drain(self) -> Optional[np.ndarray]:
         """All buffered samples as one chunk (None when empty)."""
@@ -203,32 +212,49 @@ class TraceLog:
 
 
 class _JobIngest:
-    """Per-job ingest state: queue + causal filter."""
+    """Per-job ingest state: queue (+ optional variance queue) + causal
+    filter."""
 
-    __slots__ = ("buffer", "filt", "pushed")
+    __slots__ = ("buffer", "vbuffer", "filt", "pushed")
 
     def __init__(self, buffer: BoundedBuffer,
-                 filt: Optional[StreamingFilter]) -> None:
+                 filt: Optional[StreamingFilter],
+                 vbuffer: Optional[BoundedBuffer] = None) -> None:
         self.buffer = buffer
+        self.vbuffer = vbuffer
         self.filt = filt
         self.pushed = 0
 
 
 class IngestFront:
     """Routes pushes into per-job bounded queues, stamps heartbeats, and
-    hands the tick engine causally-filtered chunks on drain."""
+    hands the tick engine causally-filtered chunks on drain.
+
+    ``track_variance=True`` adds a per-job *variance* queue riding in
+    lockstep with the sample queue (same limit/policy, identical chunk
+    sizes, so ``drop_oldest`` sheds both by the same counts and
+    ``reject`` raises before either mutates): :meth:`push` then accepts
+    optional per-sample measurement variances and
+    ``drain(with_variance=True)`` returns an aligned ``(chunk, vchunk)``
+    pair.  Samples pushed *without* an explicit variance get a default at
+    drain time: the squared causal-filter residual ``(raw - filtered)^2``
+    when ``denoise=True`` (the filter's own estimate of per-sample
+    measurement noise), else 0.0 — so exact pushes stay exact.
+    """
 
     def __init__(self, *, denoise: bool = False,
                  queue_limit: Optional[int] = None,
                  queue_policy: str = "reject",
                  trace: Optional[TraceLog] = None,
                  heartbeat_timeout: Optional[float] = None,
-                 straggler_factor: float = 2.0) -> None:
+                 straggler_factor: float = 2.0,
+                 track_variance: bool = False) -> None:
         BoundedBuffer(queue_limit, queue_policy)   # validate eagerly
         self.denoise = denoise
         self.queue_limit = queue_limit
         self.queue_policy = queue_policy
         self.trace = trace
+        self.track_variance = track_variance
         self.heartbeats = HeartbeatTracker(timeout=heartbeat_timeout) \
             if heartbeat_timeout is not None else None
         self.stragglers = StragglerDetector(factor=straggler_factor)
@@ -238,13 +264,35 @@ class IngestFront:
     def register(self, job_id: str) -> None:
         self._jobs[job_id] = _JobIngest(
             BoundedBuffer(self.queue_limit, self.queue_policy),
-            StreamingFilter() if self.denoise else None)
+            StreamingFilter() if self.denoise else None,
+            BoundedBuffer(self.queue_limit, self.queue_policy)
+            if self.track_variance else None)
 
     def push(self, job_id: str, samples: np.ndarray,
+             variance: Optional[np.ndarray] = None,
              now: Optional[float] = None) -> None:
         ji = self._jobs[job_id]
         s = np.asarray(samples, np.float32).reshape(-1)
+        if variance is not None and ji.vbuffer is None:
+            raise ValueError("per-sample variance requires "
+                             "track_variance=True on the IngestFront")
+        if ji.vbuffer is not None:
+            # NaN marks "no variance supplied" — resolved to the causal
+            # filter residual (or 0.0) at drain time, when the filtered
+            # values exist.
+            v = np.full((s.shape[0],), np.nan, np.float32) \
+                if variance is None \
+                else np.asarray(variance, np.float32).reshape(-1)
+            if v.shape[0] != s.shape[0]:
+                raise ValueError(f"{s.shape[0]} samples but "
+                                 f"{v.shape[0]} variances")
+            if np.any(v[~np.isnan(v)] < 0.0):
+                raise ValueError("variances must be >= 0")
         ji.buffer.append(s)                      # may raise Backpressure
+        if ji.vbuffer is not None and s.shape[0]:
+            # Same pre-push pending count and same chunk length as the
+            # sample buffer, so this cannot raise after buffer accepted.
+            ji.vbuffer.append(v)
         ji.pushed += s.shape[0]
         if self.trace is not None and s.shape[0]:
             self.trace.append(job_id, s)
@@ -259,16 +307,33 @@ class IngestFront:
     def has_data(self, job_id: str) -> bool:
         return len(self._jobs[job_id].buffer) > 0
 
-    def drain(self, job_id: str) -> Optional[np.ndarray]:
+    def drain(self, job_id: str, with_variance: bool = False):
         """Buffered samples as ONE causally-filtered chunk (None when
         the queue is empty) — bit-identical to filtering the same
         samples in any other push/drain grouping (the streaming filter
-        is stateful and causal)."""
+        is stateful and causal).
+
+        ``with_variance=True`` (requires ``track_variance=True``)
+        returns an aligned ``(chunk, vchunk)`` pair instead, with
+        unsupplied variances defaulted from the filter residual."""
         ji = self._jobs[job_id]
-        chunk = ji.buffer.drain()
-        if chunk is None:
-            return None
-        return ji.filt(chunk) if ji.filt is not None else chunk
+        if with_variance and ji.vbuffer is None:
+            raise ValueError("drain(with_variance=True) requires "
+                             "track_variance=True on the IngestFront")
+        raw = ji.buffer.drain()
+        if raw is None:
+            return (None, None) if with_variance else None
+        chunk = ji.filt(raw) if ji.filt is not None else raw
+        if ji.vbuffer is not None:
+            vchunk = ji.vbuffer.drain()
+            if not with_variance:
+                return chunk
+            resid = (raw - chunk) ** 2 if ji.filt is not None \
+                else np.zeros_like(raw)
+            vchunk = np.where(np.isnan(vchunk), resid, vchunk) \
+                .astype(np.float32)
+            return chunk, vchunk
+        return (chunk, None) if with_variance else chunk
 
     def dropped(self, job_id: str) -> int:
         return self._jobs[job_id].buffer.dropped

@@ -59,6 +59,30 @@ Tick engine (device-resident tick)
   ``min_fraction`` of the job observed (>= 2 distinct workloads
   required — no vacuous margins).
 
+Probabilistic (uncertain-series) mode
+-------------------------------------
+``min_probability=`` switches the decision gates from the point
+correlation to a calibrated match probability (arXiv:1112.5505): pushes
+may carry per-sample measurement variances (``push(..., variance=)``;
+unsupplied variances default to the causal filter's squared residual,
+or 0.0 without ``denoise``), the tick's moment slab doubles to SIX
+channels ([6, S, M, K]: sy, syy, sxy and their variance-weighted twins
+svy, svyy, svxy carried along the SAME backtrack-identical warp path)
+beside a per-slot [S, 3] (sv, svx, svxx) fold, and the fused dispatch
+returns a ``[S, K]`` probability array
+``P[true warp correlation >= threshold]`` beside the scores
+(``core.dtw._prob_from_moments`` — one factored tail shared by the
+streaming tick, the offline jnp scorer and both Pallas kernels).  The
+leader is still ranked by point correlation, but the commit gate
+becomes ``P >= min_probability`` (in flight AND at the final verdict),
+so the service *abstains* while the posterior is flat instead of
+committing on a lucky noisy prefix; the emitted ``TuneDecision``
+records the probability.  At zero input variance the probability is
+exactly 1.0 iff the correlation clears ``threshold``, so probabilistic
+decisions reduce bitwise to the point rule.  The exact tick's compiled
+graph is untouched when the mode is off (separate jitted entry
+points).
+
 Verdicts
 --------
 :meth:`TuningService.finish` recomputes the final verdict offline from
@@ -133,9 +157,14 @@ class InFlightJob:
     leader: Optional[str] = None
     stable_for: int = 0
     early: Optional[TuneDecision] = None
+    #: per-sample measurement variances aligned with ``x`` (filled only
+    #: in probabilistic mode; empty otherwise).
+    vx: _RowBuffer = dataclasses.field(default_factory=_RowBuffer)
     #: last [K] on-device prefix-score row seen for this job (float64 on
     #: the host side; None until the first scoring tick touches the job).
     last_sims: Optional[np.ndarray] = None
+    #: last [K] match-probability row (probabilistic mode only).
+    last_probs: Optional[np.ndarray] = None
     #: streaming-Haar prefix coefficients of the (filtered) query — the
     #: wavelet prefilter's per-job transform state (None w/o prefilter).
     haar: Optional[_wavelet.StreamingHaar] = None
@@ -154,7 +183,13 @@ class TuningService:
     """Multiplexed online matcher over a fixed reference bank.
 
     ``refs`` is a :class:`ReferenceDB` (bank + config transfer) or a bare
-    :class:`SeriesBank` (matching only).  ``score_in_flight=False`` is the
+    :class:`SeriesBank` (matching only).  ``min_probability=`` enables the
+    probabilistic (uncertain-series) decision rule — see the module
+    docstring; it requires ``score_in_flight=True`` and gates BOTH the
+    early decision and the final verdict on the leader's calibrated match
+    probability instead of its point correlation (``threshold`` keeps its
+    role as the correlation level the probability is calibrated
+    against).  ``score_in_flight=False`` is the
     distance-only throughput mode: the tick skips the fused scoring (so no
     early decisions; :meth:`finish` still renders the offline verdict) and
     carries no moment slabs — marginally cheaper at very large K.
@@ -200,6 +235,7 @@ class TuningService:
     def __init__(self, refs: Union[ReferenceDB, SeriesBank], *,
                  band: Optional[int] = None,
                  threshold: float = MATCH_THRESHOLD,
+                 min_probability: Optional[float] = None,
                  margin: float = 0.02, stable_ticks: int = 3,
                  min_fraction: float = 0.15, slots: int = 8,
                  denoise: bool = False,
@@ -229,8 +265,16 @@ class TuningService:
         self._labels: Tuple[str, ...] = self.bank.labels or tuple(
             f"ref{k}" for k in range(len(self.bank)))
         self._n_workloads = len(set(self._labels))
+        if min_probability is not None:
+            if not (0.0 < min_probability <= 1.0):
+                raise ValueError("min_probability must be in (0, 1]")
+            if not score_in_flight:
+                raise ValueError("min_probability needs "
+                                 "score_in_flight=True (the probability "
+                                 "rides the fused scoring tick)")
         self.band = band
         self.threshold = threshold
+        self.min_probability = min_probability
         self.margin = margin
         self.stable_ticks = stable_ticks
         self.min_fraction = min_fraction
@@ -286,13 +330,19 @@ class TuningService:
         self._front = IngestFront(
             denoise=denoise, queue_limit=queue_limit,
             queue_policy=queue_policy, trace=trace_log,
-            heartbeat_timeout=heartbeat_timeout)
+            heartbeat_timeout=heartbeat_timeout,
+            track_variance=min_probability is not None)
         self._sched = SlotScheduler(slots, elastic=elastic_slots)
         self._s_cap = self._sched.capacity
 
         self._ns = self._put(np.zeros((self._s_cap,), np.int32), (None,))
         self._sx = self._put(np.zeros((self._s_cap,), np.float32), (None,))
         self._sxx = self._put(np.zeros((self._s_cap,), np.float32), (None,))
+        # probabilistic mode: per-slot (sv, svx, svxx) variance folds —
+        # K-independent like sx/sxx, so replicated under a mesh.
+        self._vstats = self._put(
+            np.zeros((self._s_cap, 3), np.float32), (None, None)) \
+            if min_probability is not None else None
         self._qlens = np.zeros((self._s_cap,), np.int32)
         self._packed_idx = np.arange(k)
         self._pack_device_state(self._packed_idx, rows=None, moms=None)
@@ -328,10 +378,12 @@ class TuningService:
         # the internal drain tick of another job's finish()); surfaced by
         # the next tick() return so no decision is ever dropped.
         self._undelivered: Dict[str, TuneDecision] = {}
-        # deferred-finish drain queue: (job_id, full query, early
-        # decision) triples awaiting one batched verdict dispatch, plus
-        # auto-drained decisions not yet handed to the caller.
+        # deferred-finish drain queue: (job_id, full query, variances or
+        # None, early decision) tuples awaiting one batched verdict
+        # dispatch, plus auto-drained decisions not yet handed to the
+        # caller.
         self._finish_queue: List[Tuple[str, np.ndarray,
+                                       Optional[np.ndarray],
                                        Optional[TuneDecision]]] = []
         self._finished: Dict[str, TuneDecision] = {}
 
@@ -378,8 +430,9 @@ class TuningService:
             self._rows = self._put(
                 np.full((self._s_cap, m, kp), float(_dtw._INF), np.float32),
                 (None, None, axis))
+            nch = 6 if self.min_probability is not None else 3
             self._moms = self._put(
-                np.zeros((3, self._s_cap, m, kp), np.float32),
+                np.zeros((nch, self._s_cap, m, kp), np.float32),
                 (None, None, None, axis)) if self.score_in_flight else None
         else:
             pos = np.full((self._k,), -1, np.int64)
@@ -426,6 +479,11 @@ class TuningService:
         self._sxx = self._put(jnp.where(fresh, 0.0,
                                         jnp.take(self._sxx, gather, axis=0)),
                               (None,))
+        if self._vstats is not None:
+            self._vstats = self._put(
+                jnp.where(fresh[:, None], 0.0,
+                          jnp.take(self._vstats, gather, axis=0)),
+                (None, None))
         self._qlens = np.where(src >= 0, self._qlens[np.maximum(src, 0)],
                                0).astype(np.int32)
         self._s_cap = len(src)
@@ -453,6 +511,9 @@ class TuningService:
         self._ns = self._put(jnp.where(md, 0, self._ns), (None,))
         self._sx = self._put(jnp.where(md, 0.0, self._sx), (None,))
         self._sxx = self._put(jnp.where(md, 0.0, self._sxx), (None,))
+        if self._vstats is not None:
+            self._vstats = self._put(
+                jnp.where(md[:, None], 0.0, self._vstats), (None, None))
         self._dirty = []
 
     def _maybe_shrink_slots(self) -> None:
@@ -524,7 +585,7 @@ class TuningService:
         DP column never has to re-enter for a job that already has
         samples (re-entry would be stale)."""
         p = self.prefilter_top
-        for job, _ in pending:
+        for job, *_ in pending:
             if job.haar is None or job.n < 2:
                 continue
             if job.fraction_seen < self.prefilter_min_fraction:
@@ -601,6 +662,35 @@ class TuningService:
         and the [S, K] score gather is the only cross-device output."""
         band = self.band
         if self.score_in_flight:
+            if self.min_probability is not None:
+                threshold = float(self.threshold)
+                if self.mesh is None:
+                    # probabilistic twin: six moment slabs + variance
+                    # folds through the same kernel machinery, probs
+                    # beside scores.  Separate entry point, so the exact
+                    # tick's compiled graph is untouched.
+                    return functools.partial(
+                        _dtw.bank_extend_tick_scored_var_dispatch,
+                        band=band, threshold=threshold)
+
+                def inner_var(rows, moms, ns, sx, sxx, vstats, bank_t,
+                              lengths, chunks, vchunks, nvalid, qlens):
+                    return _dtw._bank_extend_diag_impl(
+                        rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
+                        nvalid, qlens, band=band, score=True,
+                        vchunks=vchunks, vstats=vstats,
+                        threshold=threshold)
+                P = jax.sharding.PartitionSpec
+                return jax.jit(_shard_map(
+                    inner_var, mesh=self.mesh,
+                    in_specs=(P(None, None, axis),
+                              P(None, None, None, axis),
+                              P(), P(), P(), P(None, None), P(None, axis),
+                              P(axis), P(), P(), P(), P()),
+                    out_specs=(P(None, None, axis),
+                               P(None, None, None, axis),
+                               P(), P(), P(), P(None, axis),
+                               P(None, None), P(None, axis))))
             if self.mesh is None:
                 # routes to the moment-carrying Pallas streaming kernel on
                 # TPU (DP row + (sy, syy, sxy) slabs pinned in VMEM across
@@ -661,6 +751,8 @@ class TuningService:
         self._ns = self._put(np.asarray(self._ns), (None,))
         self._sx = self._put(np.asarray(self._sx), (None,))
         self._sxx = self._put(np.asarray(self._sxx), (None,))
+        if self._vstats is not None:
+            self._vstats = self._put(np.asarray(self._vstats), (None, None))
         self._pack_device_state(self._packed_idx, rows, moms)
         self._tick_fn = self._build_tick_fn(axis)
         self.rescale_count += 1
@@ -706,14 +798,19 @@ class TuningService:
         return job
 
     def push(self, job_id: str, samples: np.ndarray,
+             variance: Optional[np.ndarray] = None,
              now: Optional[float] = None) -> None:
         """Buffer newly observed samples; consumed at the job's next due
         tick.  ``now`` stamps the heartbeat/straggler trackers (when
         armed) — a clock-less push is accepted but invisible to
-        :meth:`sweep_stalled`."""
+        :meth:`sweep_stalled`.  ``variance`` (probabilistic mode only)
+        carries aligned per-sample measurement variances; when omitted
+        the ingest layer estimates them from the causal filter residual
+        at drain time (0.0 without ``denoise`` — exact pushes stay
+        exact)."""
         if job_id not in self._jobs:
             raise KeyError(job_id)
-        self._front.push(job_id, samples, now=now)
+        self._front.push(job_id, samples, variance=variance, now=now)
 
     # -- the hot path --------------------------------------------------------
     def tick(self, now: Optional[float] = None
@@ -736,17 +833,25 @@ class TuningService:
         out: Dict[str, Optional[TuneDecision]] = self._undelivered
         self._undelivered = {}
         due = self._sched.due_jobs(now, self._jobs.keys())
-        pending: List[Tuple[InFlightJob, np.ndarray]] = []
+        prob_mode = self.min_probability is not None
+        pending: List[Tuple[InFlightJob, np.ndarray,
+                            Optional[np.ndarray]]] = []
         for job in self._jobs.values():
             if job.job_id not in due:
                 continue
-            chunk = self._front.drain(job.job_id)
+            if prob_mode:
+                chunk, vchunk = self._front.drain(job.job_id,
+                                                  with_variance=True)
+            else:
+                chunk, vchunk = self._front.drain(job.job_id), None
             if chunk is None:
                 continue
             job.x.append(chunk)
+            if vchunk is not None:
+                job.vx.append(vchunk)
             if job.haar is not None:
                 job.haar.update(chunk)
-            pending.append((job, chunk))
+            pending.append((job, chunk, vchunk))
         if not pending:
             return out
 
@@ -761,15 +866,33 @@ class TuningService:
         self._maybe_shrink_slots()
         k_live = len(self._packed_idx)
 
-        c = _dtw._chunk_bucket(max(ch.shape[0] for _, ch in pending))
+        c = _dtw._chunk_bucket(max(ch.shape[0] for _, ch, _ in pending))
         chunks = np.zeros((self._s_cap, c), np.float32)
         nvalid = np.zeros((self._s_cap,), np.int32)
-        for job, ch in pending:
+        vchunks = np.zeros((self._s_cap, c), np.float32) if prob_mode \
+            else None
+        for job, ch, vch in pending:
             chunks[job.slot, : ch.shape[0]] = ch
             nvalid[job.slot] = ch.shape[0]
+            if prob_mode:
+                vchunks[job.slot, : ch.shape[0]] = vch
 
-        sims_all = None
-        if self.score_in_flight:
+        sims_all = probs_all = None
+        if prob_mode:
+            (self._rows, self._moms, self._ns, self._sx, self._sxx,
+             scores, self._vstats, probs) = self._tick_fn(
+                self._rows, self._moms, self._ns, self._sx, self._sxx,
+                self._vstats, self._bank_t, self._lengths,
+                jnp.asarray(chunks), jnp.asarray(vchunks),
+                jnp.asarray(nvalid), jnp.asarray(self._qlens))
+            sims_all = np.full((self._s_cap, self._k), -np.inf)
+            sims_all[:, self._packed_idx] = \
+                np.asarray(scores, np.float64)[:, :k_live]
+            # pruned-out references carry zero match probability.
+            probs_all = np.zeros((self._s_cap, self._k))
+            probs_all[:, self._packed_idx] = \
+                np.asarray(probs, np.float64)[:, :k_live]
+        elif self.score_in_flight:
             (self._rows, self._moms, self._ns, self._sx, self._sxx,
              scores) = self._tick_fn(
                 self._rows, self._moms, self._ns, self._sx, self._sxx,
@@ -788,7 +911,7 @@ class TuningService:
                 jnp.asarray(self._qlens))
         self.dispatch_count += 1
 
-        for job, ch in pending:
+        for job, ch, _ in pending:
             job.n += ch.shape[0]
             decision = None
             if sims_all is not None:
@@ -798,6 +921,11 @@ class TuningService:
                     # THIS job: mask it out of this job's view.
                     sims = np.where(job.allowed, sims, -np.inf)
                 job.last_sims = sims
+                if probs_all is not None:
+                    pr = probs_all[job.slot]
+                    if job.allowed is not None:
+                        pr = np.where(job.allowed, pr, 0.0)
+                    job.last_probs = pr
                 if job.early is None:
                     decision = self._maybe_decide(job)
             if out.get(job.job_id) is None:
@@ -843,14 +971,26 @@ class TuningService:
         else:
             job.stable_for = 1 if margin_ok else 0
         job.leader = leader
+        # confidence gate: the point correlation threshold, or in
+        # probabilistic mode the leader workload's match probability —
+        # a flat posterior (noisy prefix) keeps the service abstaining
+        # even when the point estimate momentarily clears the threshold.
+        # At zero input variance the probability is exactly
+        # 1{corr >= threshold}, so the two gates coincide bitwise.
+        lp = None
+        if self.min_probability is not None:
+            lp = self._reduce(job.last_probs).get(leader, 0.0)
+            confident = lp >= self.min_probability
+        else:
+            confident = ls >= self.threshold
         if (job.fraction_seen >= self.min_fraction
-                and ls >= self.threshold
+                and confident
                 and job.stable_for >= self.stable_ticks):
             cfg = self.db.best_config(leader) if self.db is not None else None
             job.early = TuneDecision(
                 workload=job.job_id, matched=leader, corr=ls, config=cfg,
                 scores=scores, fraction_seen=job.fraction_seen, final=False,
-                decided_at_fraction=job.fraction_seen)
+                decided_at_fraction=job.fraction_seen, probability=lp)
             return job.early
         return None
 
@@ -864,7 +1004,7 @@ class TuningService:
         row-independent, so eviction cannot perturb their scores."""
         if job_id not in self._jobs:
             raise KeyError(job_id)
-        _, early = self._retire(job_id)
+        _, _, early = self._retire(job_id)
         self.evicted_count += 1
         return early
 
@@ -896,18 +1036,22 @@ class TuningService:
     # ``finish``, ``finish_many`` and the deferred drain queue all render
     # identical decisions for the same job.
 
-    def _verdict_scores(self, queries) -> np.ndarray:
-        """[J, K] float64 offline scores for J completed queries in ONE
+    def _verdict_scores(self, queries, variances=None):
+        """[J, K] float64 offline scores (and, in probabilistic mode, the
+        [J, K] match probabilities) for J completed queries in ONE
         matrix-free dispatch, the Sakoe-Chiba band re-derived from each
         query's TRUE length (the in-flight corridor was anchored to the
         ``expected_len`` prediction).  Queries with fewer than 2 samples
         score 0 without touching the device; the bank's tiled device
         upload is memoized on the SeriesBank (``score_plan``), so
         verdicts move query bytes only."""
+        prob_mode = self.min_probability is not None
         out = np.zeros((len(queries), self._k), np.float64)
+        pout = np.zeros((len(queries), self._k), np.float64) \
+            if prob_mode else None
         live = [i for i, q in enumerate(queries) if q.shape[0] >= 2]
         if not live:
-            return out
+            return out, pout
         # pow2 buckets on both axes so repeat drains reuse jit shapes
         jb = _dtw._pad_pow2(len(live), lo=1)
         npad = _dtw._pad_pow2(max(queries[i].shape[0] for i in live))
@@ -915,32 +1059,55 @@ class TuningService:
         xl = np.zeros((jb,), np.int32)
         sx = np.zeros((jb,), np.float32)
         sxx = np.zeros((jb,), np.float32)
+        xv = np.zeros((jb, npad), np.float32) if prob_mode else None
         for r, i in enumerate(live):
             q = queries[i]
             xs[r, : q.shape[0]] = q
             xl[r] = q.shape[0]
             sx[r], sxx[r] = _dtw.query_moments(q)
-        scores = np.asarray(_dtw.dtw_score_bank_many(
-            xs, self.bank.series, self.bank.lengths, xlens=xl,
-            band=self.band, sx=sx, sxx=sxx,
-            plan=self.bank.score_plan()), np.float64)
+            if prob_mode:
+                v = variances[i]
+                if v is not None and v.shape[0] == q.shape[0]:
+                    xv[r, : q.shape[0]] = v
+        if prob_mode:
+            scores, probs = _dtw.dtw_score_bank_many(
+                xs, self.bank.series, self.bank.lengths, xlens=xl,
+                band=self.band, sx=sx, sxx=sxx, xvars=xv,
+                threshold=float(self.threshold),
+                plan=self.bank.score_plan())
+            probs = np.asarray(probs, np.float64)
+        else:
+            scores, probs = _dtw.dtw_score_bank_many(
+                xs, self.bank.series, self.bank.lengths, xlens=xl,
+                band=self.band, sx=sx, sxx=sxx,
+                plan=self.bank.score_plan()), None
+        scores = np.asarray(scores, np.float64)
         self.offline_dispatch_count += 1
         for r, i in enumerate(live):
             out[i] = scores[r]
-        return out
+            if prob_mode:
+                pout[i] = probs[r]
+        return out, pout
 
     def _render_verdict(self, job_id: str, sims: np.ndarray,
-                        early: Optional[TuneDecision]) -> TuneDecision:
+                        early: Optional[TuneDecision],
+                        probs: Optional[np.ndarray] = None) -> TuneDecision:
         scores = self._reduce(sims)
         leader, ls, _ = self._rank(scores)
-        matched = leader if ls >= self.threshold else None
+        lp = None
+        if self.min_probability is not None:
+            lp = self._reduce(probs).get(leader, 0.0)
+            matched = leader if lp >= self.min_probability else None
+        else:
+            matched = leader if ls >= self.threshold else None
         cfg = self.db.best_config(matched) \
             if self.db is not None and matched is not None else None
         decision = TuneDecision(
             workload=job_id, matched=matched, corr=ls, config=cfg,
             scores=scores, fraction_seen=1.0, final=True,
             decided_at_fraction=(early.decided_at_fraction
-                                 if early is not None else 1.0))
+                                 if early is not None else 1.0),
+            probability=lp)
         if self.db is not None:
             self.db.record_decision(decision)
         return decision
@@ -956,14 +1123,16 @@ class TuningService:
                     self._undelivered[jid] = d
 
     def _retire(self, job_id: str):
-        """Free a job's slot, returning its (full query, early decision).
-        A parked early decision must not outlive the job (the id is
-        reusable), so it is purged here."""
+        """Free a job's slot, returning its (full query, per-sample
+        variances or None, early decision).  A parked early decision
+        must not outlive the job (the id is reusable), so it is purged
+        here."""
         job = self._jobs.pop(job_id)
         self._undelivered.pop(job_id, None)
         self._sched.release(job_id)
         self._front.retire(job_id)
-        return job.x.view(), job.early
+        vx = job.vx.view() if self.min_probability is not None else None
+        return job.x.view(), vx, job.early
 
     def finish(self, job_id: str) -> TuneDecision:
         """Final verdict for a completed job, recomputed offline from the
@@ -991,8 +1160,11 @@ class TuningService:
             return {}
         self._drain_tick_for(set(ids))
         retired = [self._retire(j) for j in ids]
-        sims = self._verdict_scores([x for x, _ in retired])
-        return {jid: self._render_verdict(jid, sims[i], retired[i][1])
+        sims, probs = self._verdict_scores([x for x, _, _ in retired],
+                                           [v for _, v, _ in retired])
+        return {jid: self._render_verdict(
+                    jid, sims[i], retired[i][2],
+                    None if probs is None else probs[i])
                 for i, jid in enumerate(ids)}
 
     def finish_later(self, job_id: str) -> None:
@@ -1008,14 +1180,14 @@ class TuningService:
         one of the two decisions (they are keyed by id), so that is
         refused — drain first.
         """
-        if any(jid == job_id for jid, _, _ in self._finish_queue) \
+        if any(jid == job_id for jid, *_ in self._finish_queue) \
                 or job_id in self._finished:
             raise ValueError(
                 f"a verdict for job {job_id!r} is already pending "
                 "delivery; drain_finishes() before deferring a reused id")
         self._drain_tick_for({job_id})
-        x, early = self._retire(job_id)
-        self._finish_queue.append((job_id, x, early))
+        x, vx, early = self._retire(job_id)
+        self._finish_queue.append((job_id, x, vx, early))
         if len(self._finish_queue) >= self.finish_batch:
             self._finished.update(self._drain_queue())
 
@@ -1023,9 +1195,12 @@ class TuningService:
         if not self._finish_queue:
             return {}
         queued, self._finish_queue = self._finish_queue, []
-        sims = self._verdict_scores([x for _, x, _ in queued])
-        return {jid: self._render_verdict(jid, sims[i], early)
-                for i, (jid, _, early) in enumerate(queued)}
+        sims, probs = self._verdict_scores([x for _, x, _, _ in queued],
+                                           [v for _, _, v, _ in queued])
+        return {jid: self._render_verdict(
+                    jid, sims[i], early,
+                    None if probs is None else probs[i])
+                for i, (jid, _, _, early) in enumerate(queued)}
 
     def drain_finishes(self) -> Dict[str, TuneDecision]:
         """Render every deferred verdict (one batched dispatch), plus any
@@ -1106,8 +1281,11 @@ class MultiTenantTuningService:
         self._tenant_of[job_id] = tenant
         return job
 
-    def push(self, job_id: str, samples, now: Optional[float] = None) -> None:
-        self._engine_of(job_id).push(job_id, samples, now=now)
+    def push(self, job_id: str, samples,
+             variance: Optional[np.ndarray] = None,
+             now: Optional[float] = None) -> None:
+        self._engine_of(job_id).push(job_id, samples, variance=variance,
+                                     now=now)
 
     def tick(self, now: Optional[float] = None
              ) -> Dict[str, Optional[TuneDecision]]:

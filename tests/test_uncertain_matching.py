@@ -1,0 +1,172 @@
+"""Golden end-to-end tests for the uncertain-series (variance-carrying)
+matching mode — the probabilistic verdict path of arXiv:1112.5505.
+
+Three pinned behaviors:
+
+* zero variance REDUCES bitwise to today's exact service: same scores,
+  same decisions on the same ticks, probabilities exactly {0, 1} with
+  ``prob == 1 <=> score >= threshold`` (golden mrsim traces);
+* on heteroscedastic traces the probabilistic rule DOMINATES the point
+  rule: no more wrong early decisions, and wherever the point rule
+  decided correctly the probabilistic rule decided too, no later;
+* degenerate inputs (constant trace) produce a 0.0 score, never NaN,
+  and the service abstains — the PR-7 `_corr_from_moments` guard.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.database import pack_series
+from repro.core.filters import preprocess
+from repro.mrsim import (APPS, paper_param_sets, simulate_cpu_series,
+                         simulate_cpu_series_uncertain)
+from repro.serve.tuning import TuningService
+
+PS = paper_param_sets()[0]
+
+
+@pytest.fixture(scope="module")
+def bank():
+    return pack_series(
+        [np.asarray(preprocess(simulate_cpu_series(a, PS, run=1)))
+         for a in APPS],
+        labels=list(APPS))
+
+
+def _stream(svc, q, v=None, chunk=16, probe=False):
+    """Push q through svc chunk by chunk; return (tick trace, first early
+    decision, final verdict)."""
+    svc.submit("j", expected_len=q.shape[0])
+    trace, first = [], None
+    for lo in range(0, q.shape[0], chunk):
+        if v is None:
+            svc.push("j", q[lo:lo + chunk])
+        else:
+            svc.push("j", q[lo:lo + chunk], variance=v[lo:lo + chunk])
+        d = svc.tick()
+        if probe:
+            job = svc._jobs.get("j")
+            if job is not None and job.last_sims is not None:
+                trace.append((job.last_sims.copy(),
+                              None if job.last_probs is None
+                              else job.last_probs.copy(),
+                              d.get("j")))
+        elif first is None and d.get("j") is not None:
+            first = d["j"]
+    return trace, first, svc.finish("j")
+
+
+@pytest.mark.parametrize("app", ["exim", "wordcount", "terasort"])
+def test_zero_variance_service_reduces_bitwise(bank, app):
+    """min_probability service fed zero variance == the exact service,
+    tick for tick: identical score rows, identical decisions on identical
+    ticks, and every probability exactly 1{score >= threshold}."""
+    q = simulate_cpu_series(app, PS, run=2)
+    ta, _, fa = _stream(
+        TuningService(bank, band=16, threshold=0.8, denoise=False),
+        q, probe=True)
+    tb, _, fb = _stream(
+        TuningService(bank, band=16, threshold=0.8, denoise=False,
+                      min_probability=0.5),
+        q, np.zeros_like(q), probe=True)
+
+    assert len(ta) == len(tb) > 0
+    for (sa, _, da), (sb, pb, db) in zip(ta, tb):
+        np.testing.assert_array_equal(sa, sb)
+        assert set(np.unique(pb)) <= {0.0, 1.0}
+        np.testing.assert_array_equal(pb == 1.0, sb >= 0.8)
+        assert (da is None) == (db is None)
+        if da is not None:
+            assert da.matched == db.matched and da.corr == db.corr
+            assert da.decided_at_fraction == db.decided_at_fraction
+            assert db.probability == 1.0
+    assert fa.matched == fb.matched and fa.corr == fb.corr
+    assert fb.probability in (0.0, 1.0)
+    assert (fb.probability == 1.0) == (fa.corr >= 0.8)
+    assert fa.probability is None  # point rule never reports one
+
+
+def test_heteroscedastic_prob_rule_dominates_point_rule(bank):
+    """Across golden heteroscedastic traces the probability-gated rule is
+    never worse: no additional wrong early decisions, and every correct
+    point-rule early decision is matched by a correct probabilistic one
+    at the same fraction or earlier."""
+    kw = dict(band=16, threshold=0.7, denoise=True, stable_ticks=2,
+              min_fraction=0.1, margin=0.01)
+    pt_wrong = pr_wrong = decided_pairs = 0
+    for app in APPS:
+        for run in (3, 4, 5):
+            q, v = simulate_cpu_series_uncertain(app, PS, run=run,
+                                                 noise=0.12)
+            _, pe, _ = _stream(TuningService(bank, **kw), q)
+            _, re, _ = _stream(
+                TuningService(bank, min_probability=0.6, **kw), q, v)
+            if pe is not None and pe.matched != app:
+                pt_wrong += 1
+            if re is not None and re.matched != app:
+                pr_wrong += 1
+            if pe is not None and pe.matched == app:
+                # correct point decision -> prob rule also decides it,
+                # correctly, no later (disattenuation recovers the
+                # noise-attenuated correlation).
+                assert re is not None and re.matched == app
+                assert re.decided_at_fraction <= pe.decided_at_fraction
+                assert re.probability >= 0.6
+                decided_pairs += 1
+    assert pr_wrong <= pt_wrong
+    assert decided_pairs >= 1  # the property was actually exercised
+
+
+def test_flat_posterior_abstains_where_point_rule_commits(bank):
+    """Claimed measurement variance so large the posterior can't clear a
+    strict gate: the point rule still commits on raw correlation, the
+    probabilistic final verdict abstains (matched=None) with a finite
+    sub-gate probability — never NaN."""
+    q, _ = simulate_cpu_series_uncertain("terasort", PS, run=3, noise=0.12)
+    kw = dict(band=16, threshold=0.7, denoise=True, stable_ticks=2,
+              min_fraction=0.1, margin=0.01)
+    _, _, fpt = _stream(TuningService(bank, **kw), q)
+    assert fpt.matched == "terasort" and fpt.corr >= 0.7
+    big = np.full_like(q, 0.5)
+    _, _, fpr = _stream(TuningService(bank, min_probability=0.95, **kw),
+                        q, big)
+    assert fpr.matched is None
+    assert fpr.probability is not None and np.isfinite(fpr.probability)
+    assert 0.0 <= fpr.probability < 0.95
+
+
+def test_constant_trace_scores_zero_and_abstains(bank):
+    """Degenerate (zero-variance-in-x) query: the guarded score tail
+    returns 0.0 instead of NaN on both the exact and the probabilistic
+    paths, and neither service commits to a match."""
+    qc = np.full(200, 0.5, np.float32)
+    _, e_pt, f_pt = _stream(
+        TuningService(bank, band=16, threshold=0.7, denoise=False), qc)
+    assert e_pt is None and f_pt.matched is None
+    assert f_pt.corr == 0.0 and np.isfinite(f_pt.corr)
+    _, e_pr, f_pr = _stream(
+        TuningService(bank, band=16, threshold=0.7, denoise=False,
+                      min_probability=0.5),
+        qc, np.zeros_like(qc))
+    assert e_pr is None and f_pr.matched is None
+    assert f_pr.corr == 0.0
+    assert f_pr.probability == 0.0  # flat posterior at a 0.0 score
+
+
+def test_host_correlation_degenerate_conventions():
+    """Satellite-2 host half: `similarity.correlation` and
+    `RunningMoments.corr` never emit NaN on constant inputs — identical
+    constant pair -> 1.0, anything else degenerate -> 0.0."""
+    from repro.core.similarity import RunningMoments, correlation
+
+    c = np.full(32, 0.7, np.float32)
+    r = np.linspace(0.0, 1.0, 32).astype(np.float32)
+    assert correlation(c, c) == 1.0
+    assert correlation(c, r) == 0.0
+    assert correlation(r, c) == 0.0
+    assert correlation(c, np.full(32, 0.2, np.float32)) == 0.0
+
+    assert RunningMoments().update(c, c).corr == 1.0
+    assert RunningMoments().update(c, r).corr == 0.0
+    assert RunningMoments().update(r, c).corr == 0.0
+    assert np.isfinite(RunningMoments().update(c, c + 0.1).corr)
