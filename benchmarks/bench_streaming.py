@@ -37,6 +37,7 @@
 
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -545,10 +546,114 @@ def _churn_rows():
 MIN_SLOT_BUCKET_SENTINEL = 8
 
 
+#: crash-recovery scenario knobs (recovery_restore_S256): churn-scale
+#: service shapes — S jobs x K references, short refs (M ~= 128) so the
+#: [S, M, K] slabs stay bench-host sized — snapshotted mid-run, then
+#: restored + WAL-tail-replayed.  Gate: restore+replay costs at most
+#: RECOVERY_REPLAY_GATE x a single scored tick per replayed chunk
+#: record (replay re-executes the journal; each push record is one
+#: chunk, and a live tick processes S chunks in one dispatch, so the
+#: gate only fails when replay is catastrophically slower than simply
+#: re-serving the tail).
+RECOVERY_S = 256
+RECOVERY_K = 256
+RECOVERY_CHUNK = 16
+RECOVERY_TICKS = 4
+RECOVERY_REPLAY_GATE = 5.0
+
+
+def _recovery_bank(rng, k):
+    series = []
+    for i in range(k):
+        l = int(rng.integers(100, 129))
+        t = np.linspace(0, 1, l, dtype=np.float32)
+        s = (0.5 + 0.3 * np.sin(2 * np.pi * (1.5 + 0.05 * i) * t)
+             + 0.05 * rng.normal(size=l).astype(np.float32))
+        series.append(np.clip(s, 0, 1).astype(np.float32))
+    return pack_series(series)
+
+
+def _recovery_rows():
+    """recovery_restore_S256: durable snapshot + journal-tail replay at
+    S=256 jobs x K=256 references (scored ticks).  Reports snapshot time
+    and restore+replay time; pins the recovered device state bitwise
+    against the live service before gating replay cost."""
+    import shutil
+    import tempfile
+
+    from repro.serve.recovery import RecoverableTuningService
+
+    rng = np.random.default_rng(23)
+    bank = _recovery_bank(rng, RECOVERY_K)
+    qlen = RECOVERY_TICKS * RECOVERY_CHUNK
+    qs = rng.random((RECOVERY_S, qlen), dtype=np.float32)
+    root = tempfile.mkdtemp(prefix="bench_recovery_")
+    try:
+        svc = RecoverableTuningService(
+            bank, root=os.path.join(root, "svc"),
+            score_in_flight=True, slots=RECOVERY_S)
+        for j in range(RECOVERY_S):
+            svc.submit(f"job{j}", expected_len=qlen)
+        tick_s = []
+        ckpt_s = 0.0
+        for t in range(RECOVERY_TICKS):
+            for j in range(RECOVERY_S):
+                svc.push(f"job{j}", qs[j, t * RECOVERY_CHUNK:
+                                       (t + 1) * RECOVERY_CHUNK])
+            t0 = time.time()
+            svc.tick()
+            tick_s.append(time.time() - t0)
+            if t == RECOVERY_TICKS // 2 - 1:
+                t0 = time.time()
+                svc.checkpoint()
+                ckpt_s = time.time() - t0
+
+        replay_ticks = RECOVERY_TICKS - RECOVERY_TICKS // 2
+        tail_records = replay_ticks * (RECOVERY_S + 1)
+
+        kw = dict(score_in_flight=True, slots=RECOVERY_S)
+        rec = RecoverableTuningService.recover(
+            bank, root=os.path.join(root, "svc"), **kw)   # warm caches
+        t0 = time.time()
+        rec = RecoverableTuningService.recover(
+            bank, root=os.path.join(root, "svc"), **kw)
+        restore_s = time.time() - t0
+
+        assert rec.replayed == tail_records, (rec.replayed, tail_records)
+        for j in range(RECOVERY_S):
+            a = svc.svc._jobs[f"job{j}"].last_sims
+            b = rec.svc._jobs[f"job{j}"].last_sims
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                f"recovered job{j} diverged from the live service"
+
+        tick_ref = min(tick_s)                # post-compile tick cost
+        replay_chunks = replay_ticks * RECOVERY_S
+        per_chunk_ratio = restore_s / (tick_ref * replay_chunks)
+        print(f"[streaming] S={RECOVERY_S} K={RECOVERY_K}: snapshot "
+              f"{ckpt_s * 1e3:.1f} ms, restore+replay {restore_s * 1e3:.1f}"
+              f" ms ({tail_records} records, {replay_chunks} chunks) -> "
+              f"{per_chunk_ratio:.3f}x scored tick per replayed chunk")
+        assert restore_s <= RECOVERY_REPLAY_GATE * tick_ref * \
+            replay_chunks, (
+                f"restore+replay {restore_s:.2f}s exceeds "
+                f"{RECOVERY_REPLAY_GATE}x scored tick "
+                f"({tick_ref * 1e3:.1f} ms) per replayed chunk "
+                f"({replay_chunks} chunks)")
+        return [("recovery_restore_S256", restore_s * 1e6,
+                 f"snapshot_ms={ckpt_s * 1e3:.1f}"
+                 f";replayed_records={tail_records}"
+                 f";replayed_chunks={replay_chunks}"
+                 f";tick_ms={tick_ref * 1e3:.1f}"
+                 f";per_chunk_ratio={per_chunk_ratio:.3f}x")]
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
 def run():
     return (_early_decision_rows() + _multiplex_rows()
             + _equivalence_rows() + _throughput_rows()
-            + _pruned_scored_rows() + _churn_rows())
+            + _pruned_scored_rows() + _churn_rows()
+            + _recovery_rows())
 
 
 if __name__ == "__main__":

@@ -1,3 +1,5 @@
-from .manager import CheckpointManager, save_checkpoint, restore_checkpoint
+from .manager import (CheckpointManager, load_checkpoint_tree,
+                      restore_checkpoint, save_checkpoint)
 
-__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint",
+           "load_checkpoint_tree"]

@@ -33,13 +33,30 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "CheckpointManager"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "load_checkpoint_tree",
+           "CheckpointManager"]
 
 _STEP_RE = re.compile(r"step_(\d+)$")
 
 
 def _leaf_key(i: int) -> str:
     return f"leaf_{i:05d}"
+
+
+def _leaf_paths(tree: Any) -> Optional[List[str]]:
+    """Flattened "a/b/c" key paths when every container in ``tree`` is a
+    dict (the self-describing case a target-free restore can rebuild);
+    None for any other pytree."""
+    paths, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, _ in paths:
+        parts = []
+        for k in kp:
+            if not isinstance(k, jax.tree_util.DictKey):
+                return None
+            parts.append(str(k.key))
+        out.append("/".join(parts))
+    return out
 
 
 def save_checkpoint(root: str, step: int, tree: Any,
@@ -62,6 +79,11 @@ def save_checkpoint(root: str, step: int, tree: Any,
             "n_leaves": len(leaves),
             "shapes": [list(a.shape) for a in arrays.values()],
             "dtypes": [str(a.dtype) for a in arrays.values()],
+            # present iff the tree is dict-nested: lets a reader rebuild
+            # the tree WITHOUT a matching target (the recovery path,
+            # where leaf shapes depend on crashed-service state the
+            # restorer cannot know a priori).
+            "leaf_paths": _leaf_paths(tree),
             "metadata": metadata or {},
             "content_hash": digest.hexdigest(),
         }
@@ -91,18 +113,46 @@ def _verify(manifest: Dict, arrays) -> None:
         raise IOError("checkpoint content hash mismatch (corrupt write?)")
 
 
+def _complete_steps(root: str) -> List[int]:
+    """Step numbers whose directory holds a manifest — i.e. checkpoints
+    whose two-phase write COMPLETED.  A step dir without a manifest is a
+    torn artifact (an interrupted writer, a partial copy) and must never
+    be selected for restore."""
+    out = []
+    for d in os.listdir(root):
+        m = _STEP_RE.search(d)
+        if m and os.path.isfile(os.path.join(root, d, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def _resolve_step_dir(root: str, step: Optional[int]) -> str:
+    """Checkpoint dir for ``step`` (latest when None).  The LATEST
+    pointer is a hint, not an authority: if it is missing or names a dir
+    without a manifest (torn write, pointer from a crashed writer), fall
+    back to the newest COMPLETE step dir."""
+    if step is not None:
+        return os.path.join(root, f"step_{step:06d}")
+    try:
+        with open(os.path.join(root, "LATEST")) as f:
+            d = f.read().strip()
+        if os.path.isfile(os.path.join(root, d, "manifest.json")):
+            return os.path.join(root, d)
+    except FileNotFoundError:
+        pass
+    steps = _complete_steps(root)
+    if not steps:
+        raise FileNotFoundError(f"no complete checkpoint under {root}")
+    return os.path.join(root, f"step_{steps[-1]:06d}")
+
+
 def restore_checkpoint(root: str, target: Any, step: Optional[int] = None,
                        mesh=None, specs: Any = None,
                        verify: bool = True) -> Tuple[Any, Dict]:
     """Restore into the structure of ``target`` (pytree of arrays or
     ShapeDtypeStructs).  With ``mesh``+``specs``, leaves are placed onto
     NamedSharding(mesh, spec) — elastic re-mesh restore."""
-    if step is None:
-        with open(os.path.join(root, "LATEST")) as f:
-            d = f.read().strip()
-    else:
-        d = f"step_{step:06d}"
-    path = os.path.join(root, d)
+    path = _resolve_step_dir(root, step)
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     arrays = np.load(os.path.join(path, "arrays.npz"))
@@ -130,6 +180,34 @@ def restore_checkpoint(root: str, target: Any, step: Optional[int] = None,
     return jax.tree.unflatten(treedef, out), manifest
 
 
+def load_checkpoint_tree(root: str, step: Optional[int] = None,
+                         verify: bool = True) -> Tuple[Dict, Dict]:
+    """Target-free restore of a dict-nested checkpoint: rebuild the
+    nested dict from the manifest's ``leaf_paths`` with host numpy
+    leaves.  This is the recovery-from-crash entry point — the restorer
+    cannot supply a shape-matching target because the leaf shapes (slot
+    capacity, packed bank width, per-job buffers) are precisely the
+    crashed state being recovered.  Returns ``(tree, manifest)``."""
+    path = _resolve_step_dir(root, step)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if manifest.get("leaf_paths") is None:
+        raise ValueError(
+            "checkpoint was not saved from a dict-nested tree; use "
+            "restore_checkpoint with a target instead")
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    if verify:
+        _verify(manifest, arrays)
+    tree: Dict = {}
+    for i, p in enumerate(manifest["leaf_paths"]):
+        node = tree
+        parts = p.split("/")
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = np.array(arrays[_leaf_key(i)])
+    return tree, manifest
+
+
 class CheckpointManager:
     """Keeps the last ``keep`` checkpoints, exposes resume."""
 
@@ -139,12 +217,10 @@ class CheckpointManager:
         os.makedirs(root, exist_ok=True)
 
     def steps(self) -> List[int]:
-        out = []
-        for d in os.listdir(self.root):
-            m = _STEP_RE.search(d)
-            if m and os.path.isdir(os.path.join(self.root, d)):
-                out.append(int(m.group(1)))
-        return sorted(out)
+        """COMPLETE checkpoint steps only: a step dir without its
+        manifest (interrupted writer) is invisible here, so
+        ``latest_step()`` can never select a torn checkpoint."""
+        return _complete_steps(self.root)
 
     def latest_step(self) -> Optional[int]:
         s = self.steps()
@@ -165,3 +241,14 @@ class CheckpointManager:
         for s in steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.root, f"step_{s:06d}"),
                           ignore_errors=True)
+        for d in os.listdir(self.root):
+            full = os.path.join(self.root, d)
+            # torn artifacts from interrupted writers: orphaned two-phase
+            # tmp dirs (no live save holds one here — _gc runs between
+            # saves) and manifest-less step dirs steps() refuses to list.
+            if d.startswith(".tmp_ckpt_") and os.path.isdir(full):
+                shutil.rmtree(full, ignore_errors=True)
+            m = _STEP_RE.search(d)
+            if m and os.path.isdir(full) and \
+                    not os.path.isfile(os.path.join(full, "manifest.json")):
+                shutil.rmtree(full, ignore_errors=True)

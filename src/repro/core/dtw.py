@@ -98,7 +98,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -856,11 +856,16 @@ def bank_extend_tick_scored_var(rows, moms, ns, sx, sxx, vstats, bank_t,
 
 
 def bank_extend_tick_dispatch(rows, ns, bank_t, lengths, chunks, nvalid,
-                              qlens, band: Optional[int] = None):
+                              qlens, band: Optional[int] = None,
+                              use_kernel: Optional[bool] = None):
     """Distance-only tick routed to the best backend: the Pallas streaming
     kernel on TPU (DP row pinned in VMEM across the chunk), the jnp
-    wavefront everywhere else.  Tick layout in and out ([J, M, K])."""
-    if jax.default_backend() == "tpu":
+    wavefront everywhere else.  ``use_kernel=False`` forces the jnp
+    wavefront (the dispatch-resilience fallback twin).  Tick layout in
+    and out ([J, M, K])."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
         from ..kernels.dtw import stream_bank_extend
         new_rows, ns2 = stream_bank_extend(
             rows.transpose(0, 2, 1), ns, bank_t.T, lengths, chunks,
@@ -1890,6 +1895,33 @@ class DtwBankState:
         masked = jnp.where(jnp.arange(m, dtype=jnp.int32)[None, :]
                            < self.lengths[:, None], self.row, _INF)
         return jnp.min(masked, axis=1)
+
+    # -- (de)hydration (crash-safe serving, serve.recovery) ------------------
+    def dehydrate(self) -> Dict[str, np.ndarray]:
+        """Host-resident dict of the full streaming state — flat string
+        keys, numpy leaves, so it drops straight into a dict-nested
+        checkpoint tree (``checkpoint.load_checkpoint_tree``).  Scalars
+        ride as 0-d/1-element arrays; ``hydrate`` reverses exactly."""
+        meta = np.asarray([self.n,
+                           -1 if self.band is None else self.band,
+                           -1 if self.query_len is None
+                           else self.query_len], np.int64)
+        return {"row": np.asarray(self.row), "bank": np.asarray(self.bank),
+                "lengths": np.asarray(self.lengths), "meta": meta}
+
+    @staticmethod
+    def hydrate(tree: Dict[str, np.ndarray]) -> "DtwBankState":
+        """Rebuild a :class:`DtwBankState` from :meth:`dehydrate` output
+        (device placement via plain ``jnp.asarray`` — callers needing a
+        sharded bank re-place afterwards).  The round trip is bitwise:
+        every leaf is stored verbatim, nothing is recomputed."""
+        n, band, qlen = (int(v) for v in np.asarray(tree["meta"]))
+        return DtwBankState(
+            row=jnp.asarray(tree["row"]), n=n,
+            bank=jnp.asarray(tree["bank"]),
+            lengths=jnp.asarray(tree["lengths"]),
+            band=None if band < 0 else band,
+            query_len=None if qlen < 0 else qlen)
 
 
 def dtw_bank_init(bank: jax.Array, lengths: Optional[jax.Array] = None,

@@ -1,5 +1,9 @@
+from .chaos import FaultPlan, InjectedDispatchError, truncate_file
 from .fault import (HeartbeatTracker, StragglerDetector, ElasticController,
                     RescaleDecision, WorkerState)
+from .retry import DispatchFailure, RetryPolicy, call_with_retry
 
 __all__ = ["HeartbeatTracker", "StragglerDetector", "ElasticController",
-           "RescaleDecision", "WorkerState"]
+           "RescaleDecision", "WorkerState",
+           "FaultPlan", "InjectedDispatchError", "truncate_file",
+           "DispatchFailure", "RetryPolicy", "call_with_retry"]

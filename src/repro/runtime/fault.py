@@ -42,18 +42,38 @@ class WorkerState:
 
 
 class HeartbeatTracker:
+    """Clock-injected liveness tracking, hardened against skewed clocks.
+
+    Timestamps come from the callers (monitoring agents beat, the
+    service sweeps), and on a real fleet those clocks jump — NTP steps,
+    VM migrations, the chaos plan's skew injection.  Two monotonicity
+    guards keep a skewed stamp from mass-evicting healthy workers:
+
+    * a beat carrying a *backwards* ``now`` can never rewind
+      ``last_time`` (the worker just proved it is alive; an older stamp
+      adds no information), so a later honest sweep cannot time it out
+      on the strength of a skewed beat;
+    * a sweep carrying a backwards ``now`` is clamped to the sweep
+      high-water mark, so the sweep clock is monotone too and
+      ``sweep(t); sweep(t - skew)`` decides exactly what ``sweep(t)``
+      alone would.
+    """
+
     def __init__(self, timeout: float = 60.0):
         self.timeout = timeout
         self.workers: Dict[Hashable, WorkerState] = {}
+        self._sweep_high_water = -float("inf")
 
     def beat(self, worker_id: Hashable, step: int, now: float) -> None:
         w = self.workers.setdefault(worker_id, WorkerState(worker_id))
         w.last_step = max(w.last_step, step)
-        w.last_time = now
+        w.last_time = max(w.last_time, now)
         w.alive = True
 
     def sweep(self, now: float) -> List[Hashable]:
         """Mark timed-out workers dead; return newly-dead ids."""
+        self._sweep_high_water = max(self._sweep_high_water, now)
+        now = self._sweep_high_water
         dead = []
         for w in self.workers.values():
             if w.alive and now - w.last_time > self.timeout:

@@ -1,0 +1,89 @@
+"""Retry/backoff for transient dispatch failures.
+
+A device dispatch in the serving hot path can fail transiently —
+preempted accelerator, a driver hiccup, an injected fault from
+``runtime.chaos`` — and the service must degrade one tick, not die.
+:func:`call_with_retry` wraps any callable with seeded exponential
+backoff + jitter and an optional *fallback* callable tried once after
+the retry budget is exhausted (the serving use: the Pallas kernel path
+falls back to the jnp wavefront twin, which is pinned bit-identical, so
+a degraded tick changes latency but never decisions).
+
+The policy is deterministic per seed (jitter comes from a private
+``random.Random``) and the sleeper is injectable, so fault-injection
+tests run at full speed with a no-op clock.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+from typing import Callable, Optional, Tuple, Type
+
+__all__ = ["DispatchFailure", "RetryPolicy", "call_with_retry"]
+
+
+class DispatchFailure(RuntimeError):
+    """A dispatch failed on every retry AND on the fallback (or there
+    was no fallback).  ``__cause__`` carries the last underlying
+    error."""
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Exponential backoff + jitter: attempt ``i`` (0-based retry) sleeps
+    ``base_delay * 2**i * (1 + jitter * u)``, ``u ~ U[0, 1)`` from a
+    seeded private stream — deterministic schedules for tests, decorrelated
+    retries across a fleet in production."""
+
+    max_retries: int = 3
+    base_delay: float = 0.05
+    max_delay: float = 2.0
+    jitter: float = 0.5
+    seed: int = 0
+    sleep: Callable[[float], None] = time.sleep
+
+    def __post_init__(self) -> None:
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.base_delay < 0 or self.max_delay < 0 or self.jitter < 0:
+            raise ValueError("delays/jitter must be >= 0")
+        self._rng = random.Random(self.seed)
+
+    def delay(self, attempt: int) -> float:
+        d = min(self.max_delay, self.base_delay * (2.0 ** attempt))
+        return d * (1.0 + self.jitter * self._rng.random())
+
+
+def call_with_retry(fn: Callable, *, policy: RetryPolicy,
+                    transient: Tuple[Type[BaseException], ...],
+                    fallback: Optional[Callable] = None,
+                    on_retry: Optional[Callable[[int, BaseException],
+                                                None]] = None):
+    """Run ``fn()``; on a ``transient`` error retry up to
+    ``policy.max_retries`` times with backoff, then try ``fallback()``
+    once.  Returns ``(result, report)`` where ``report`` is a dict with
+    ``retries`` (extra attempts consumed) and ``degraded`` (True when
+    the fallback produced the result).  Non-transient errors propagate
+    immediately; exhausting both paths raises :class:`DispatchFailure`.
+    """
+    last: Optional[BaseException] = None
+    for attempt in range(policy.max_retries + 1):
+        try:
+            return fn(), {"retries": attempt, "degraded": False}
+        except transient as e:        # noqa: PERF203 - retry loop
+            last = e
+            if on_retry is not None:
+                on_retry(attempt, e)
+            if attempt < policy.max_retries:
+                policy.sleep(policy.delay(attempt))
+    if fallback is not None:
+        try:
+            return fallback(), {"retries": policy.max_retries + 1,
+                                "degraded": True}
+        except transient as e:
+            last = e
+    raise DispatchFailure(
+        f"dispatch failed after {policy.max_retries + 1} attempts"
+        + ("" if fallback is None else " + fallback")) from last

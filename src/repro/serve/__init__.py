@@ -1,10 +1,15 @@
 from .engine import make_prefill_step, make_decode_step, ServeEngine
-from .ingest import BackpressureError, BoundedBuffer, IngestFront, TraceLog
+from .ingest import (BackpressureError, BoundedBuffer, IngestFront,
+                     PoisonedSampleError, TraceLog)
+from .recovery import (RecoverableTuningService, restore_service,
+                       snapshot_service)
 from .scheduler import (MIN_SLOT_BUCKET, SlotScheduler, TickCohorts,
                         slot_bucket)
 from .tuning import InFlightJob, MultiTenantTuningService, TuningService
 
 __all__ = ["make_prefill_step", "make_decode_step", "ServeEngine",
-           "BackpressureError", "BoundedBuffer", "IngestFront", "TraceLog",
+           "BackpressureError", "BoundedBuffer", "IngestFront",
+           "PoisonedSampleError", "TraceLog",
+           "RecoverableTuningService", "restore_service", "snapshot_service",
            "MIN_SLOT_BUCKET", "SlotScheduler", "TickCohorts", "slot_bucket",
            "InFlightJob", "MultiTenantTuningService", "TuningService"]

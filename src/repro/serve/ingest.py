@@ -38,7 +38,9 @@ no numerics: a drained chunk is bit-identical to what the old
 from __future__ import annotations
 
 import collections
-from typing import Deque, Dict, List, Optional
+import json
+import warnings
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -46,11 +48,25 @@ from ..core.database import atomic_write_json, atomic_write_npz
 from ..core.filters import StreamingFilter
 from ..runtime.fault import HeartbeatTracker, StragglerDetector
 
-__all__ = ["BackpressureError", "BoundedBuffer", "TraceLog", "IngestFront"]
+__all__ = ["BackpressureError", "PoisonedSampleError", "BoundedBuffer",
+           "TraceLog", "IngestFront"]
 
 
 class BackpressureError(RuntimeError):
     """Raised by a full ``policy="reject"`` :class:`BoundedBuffer`."""
+
+
+class PoisonedSampleError(ValueError):
+    """A push carried values the matcher must never see: NaN/Inf samples
+    or negative/non-finite variances.  Raised BEFORE anything is
+    enqueued (the push is atomic), so the serving layer can quarantine
+    the offending job while every other job's state stays untouched.
+    Subclasses ``ValueError`` for callers of the pre-quarantine API."""
+
+    def __init__(self, job_id: str, reason: str) -> None:
+        super().__init__(f"job {job_id!r}: {reason}")
+        self.job_id = job_id
+        self.reason = reason
 
 
 class BoundedBuffer:
@@ -132,15 +148,33 @@ class BoundedBuffer:
 
 
 class TraceLog:
-    """Size-rotated on-disk capture of ingested chunks.
+    """Size-rotated on-disk capture of ingested chunks — and the serving
+    stack's write-ahead log.
 
     Chunks accumulate in memory and flush to ``seg-<n>.npz`` once
     ``max_segment_bytes`` of float32 samples are pending (or on an
     explicit :meth:`flush`); only the newest ``max_segments`` segment
     files are kept.  A ``trace_index.json`` manifest records the live
-    segment names.  Writes are atomic (tmp+rename via
-    ``core.database``), so readers — and a service restarted mid-write —
-    never observe a torn file.
+    segment names and the next record sequence number.  Writes are
+    atomic (tmp+rename via ``core.database``), so readers — and a
+    service restarted mid-write — never observe a torn file.
+
+    WAL duties (``serve.recovery``):
+
+    * **records carry replay context** — a chunk record can ride with
+      the push's per-sample variances and heartbeat timestamp (aux
+      ``v``/``t`` entries under the same sequence number), and
+      :meth:`append_event` journals non-push commands (submit / tick /
+      finish / evict ...) as JSON payloads, all in ONE total order.
+    * **durable across restart** — a TraceLog reopened on an existing
+      directory adopts the on-disk index and resumes the sequence
+      counter, so a recovering process appends after the crashed
+      process's last durable record instead of clobbering the journal.
+    * **torn tails are data, not errors** — a segment truncated by the
+      crash (or corrupted on disk) is skipped with a warning and
+      counted in ``corrupt_segments``; everything before it replays.
+    * :meth:`prune` drops segments wholly below a snapshot watermark
+      once a snapshot has made them redundant.
     """
 
     def __init__(self, path: str, *, max_segment_bytes: int = 1 << 20,
@@ -152,28 +186,102 @@ class TraceLog:
         self.path = path
         self.max_segment_bytes = max_segment_bytes
         self.max_segments = max_segments
-        self._pending: List[tuple] = []        # (seq, job_id, chunk)
+        #: segments found unreadable (truncated/corrupt) — each bad file
+        #: is counted once, at first encounter.
+        self.corrupt_segments = 0
+        self._bad: set = set()
+        # (seq, {full_key: array}) per un-flushed record
+        self._pending: List[Tuple[int, Dict[str, np.ndarray]]] = []
         self._pending_bytes = 0
         self._seq = 0
         self._segments: List[str] = []
+        self._adopt_existing()
 
-    def append(self, job_id: str, samples: np.ndarray) -> None:
-        s = np.asarray(samples, np.float32).reshape(-1)
-        if not s.shape[0]:
+    def _adopt_existing(self) -> None:
+        """Resume from an on-disk journal: adopt the indexed segments
+        that still exist and continue the sequence counter past every
+        durable record (legacy indexes without ``next_seq`` derive it
+        from the newest readable segment's keys)."""
+        import os
+        idx_path = os.path.join(self.path, "trace_index.json")
+        if not os.path.isfile(idx_path):
             return
-        self._pending.append((self._seq, job_id, s))
-        self._seq += 1
-        self._pending_bytes += 4 * s.shape[0]
+        try:
+            with open(idx_path) as f:
+                idx = json.load(f)
+            segs = [s for s in idx.get("segments", [])
+                    if os.path.isfile(os.path.join(self.path, s))]
+        except (OSError, ValueError):
+            warnings.warn(f"unreadable trace_index.json under "
+                          f"{self.path}; starting a fresh journal",
+                          RuntimeWarning)
+            return
+        self._segments = segs
+        next_seq = idx.get("next_seq")
+        if next_seq is None:
+            next_seq = 0
+            for seg in reversed(segs):
+                arrs = self._segment_arrays(seg)
+                if arrs:
+                    next_seq = 1 + max(int(k[1:9]) for k in arrs)
+                    break
+                # even an unreadable tail pins the floor via its name
+                next_seq = max(next_seq, int(seg[4:12]))
+        self._seq = int(next_seq)
+
+    def _record(self, seq: int, arrays: Dict[str, np.ndarray]) -> None:
+        self._pending.append((seq, arrays))
+        self._pending_bytes += sum(a.nbytes for a in arrays.values())
         if self._pending_bytes >= self.max_segment_bytes:
             self.flush()
+
+    def append(self, job_id: str, samples: np.ndarray,
+               variance: Optional[np.ndarray] = None,
+               now: Optional[float] = None) -> Optional[int]:
+        """Journal one accepted push.  ``variance``/``now`` ride as aux
+        entries under the same sequence number so a replay can re-issue
+        the push exactly (probabilistic mode, heartbeat stamps).
+        Returns the record's sequence number (None for empty pushes)."""
+        s = np.asarray(samples, np.float32).reshape(-1)
+        if not s.shape[0]:
+            return None
+        seq, self._seq = self._seq, self._seq + 1
+        arrays = {f"c{seq:08d}__{job_id}": s}
+        if variance is not None:
+            arrays[f"v{seq:08d}__{job_id}"] = \
+                np.asarray(variance, np.float32).reshape(-1)
+        if now is not None:
+            arrays[f"t{seq:08d}__{job_id}"] = \
+                np.asarray([now], np.float64)
+        self._record(seq, arrays)
+        return seq
+
+    def append_event(self, kind: str, payload: Dict[str, Any]) -> int:
+        """Journal a non-push command (JSON payload) into the same total
+        order as the chunk records — the WAL entries replay recovery
+        re-executes after the snapshot watermark."""
+        if "__" in kind:
+            raise ValueError("event kind must not contain '__'")
+        seq, self._seq = self._seq, self._seq + 1
+        blob = np.frombuffer(
+            json.dumps(payload, sort_keys=True).encode(), np.uint8)
+        self._record(seq, {f"e{seq:08d}__{kind}": blob})
+        return seq
+
+    @property
+    def next_seq(self) -> int:
+        """Sequence number the NEXT record will get (== the snapshot
+        watermark when taken between commands)."""
+        return self._seq
 
     def flush(self) -> None:
         import os
         if not self._pending:
             return
         name = f"seg-{self._pending[0][0]:08d}.npz"
-        arrays = {f"c{seq:08d}__{job_id}": chunk
-                  for seq, job_id, chunk in self._pending}
+        arrays: Dict[str, np.ndarray] = {}
+        for _, recs in self._pending:
+            arrays.update(recs)
         atomic_write_npz(self.path, name, arrays)
         self._pending = []
         self._pending_bytes = 0
@@ -184,27 +292,111 @@ class TraceLog:
                 os.unlink(os.path.join(self.path, old))
             except FileNotFoundError:
                 pass
+        self._write_index()
+
+    def _write_index(self) -> None:
         atomic_write_json(self.path, "trace_index.json",
-                          {"version": 1, "segments": self._segments})
+                          {"version": 2, "segments": self._segments,
+                           "next_seq": self._seq})
 
     def segments(self) -> List[str]:
         return list(self._segments)
 
+    def _segment_arrays(self, seg: str) -> Optional[Dict[str, np.ndarray]]:
+        """All entries of one segment, or None when the file is
+        truncated/corrupt (counted + warned once per file) — the crash
+        case the WAL must shrug off, not die on."""
+        import os
+        if seg in self._bad:
+            return None
+        try:
+            with np.load(os.path.join(self.path, seg)) as z:
+                return {k: np.array(z[k]) for k in z.files}
+        except Exception as e:          # torn zip: BadZipFile/OSError/...
+            self._bad.add(seg)
+            self.corrupt_segments += 1
+            warnings.warn(f"trace segment {seg} is truncated or corrupt "
+                          f"({type(e).__name__}: {e}); skipping",
+                          RuntimeWarning)
+            return None
+
+    def prune(self, before_seq: int) -> int:
+        """Delete segments whose every record precedes ``before_seq``
+        (they are covered by a snapshot); returns segments dropped."""
+        import os
+        keep: List[str] = []
+        dropped = 0
+        for i, seg in enumerate(self._segments):
+            # a segment's records span [its name seq, next segment's)
+            nxt = int(self._segments[i + 1][4:12]) \
+                if i + 1 < len(self._segments) else self._seq
+            if nxt <= before_seq:
+                dropped += 1
+                try:
+                    os.unlink(os.path.join(self.path, seg))
+                except FileNotFoundError:
+                    pass
+            else:
+                keep.append(seg)
+        if dropped:
+            self._segments = keep
+            self._write_index()
+        return dropped
+
+    def records(self, since: int = 0) -> List[Tuple[int, str,
+                                                    Dict[str, Any]]]:
+        """Every durable + pending record with ``seq >= since``, in
+        sequence order: ``(seq, kind, payload)`` where pushes have kind
+        ``"push"`` and payload ``{job_id, samples, variance, now}``, and
+        events carry their JSON payloads under their own kind.  Corrupt
+        segments are skipped (see ``corrupt_segments``)."""
+        by_seq: Dict[int, Dict[str, Any]] = {}
+        for seg in self._segments:
+            arrs = self._segment_arrays(seg)
+            if arrs:
+                self._parse_into(by_seq, arrs)
+        for _, recs in self._pending:
+            self._parse_into(by_seq, recs)
+        return [(seq, *by_seq[seq]["_rec"]) for seq in sorted(by_seq)
+                if seq >= since]
+
+    @staticmethod
+    def _parse_into(by_seq: Dict[int, Dict[str, Any]],
+                    arrays: Dict[str, np.ndarray]) -> None:
+        for key, arr in arrays.items():
+            tag, seq, rest = key[0], int(key[1:9]), key[11:]
+            slot = by_seq.setdefault(seq, {})
+            if tag == "e":
+                slot["_rec"] = (rest, json.loads(bytes(arr).decode()))
+                continue
+            if "_rec" not in slot:
+                slot["_rec"] = ("push", {"job_id": rest, "samples": None,
+                                         "variance": None, "now": None})
+            payload = slot["_rec"][1]
+            if tag == "c":
+                payload["samples"] = arr
+            elif tag == "v":
+                payload["variance"] = arr
+            elif tag == "t":
+                payload["now"] = float(arr[0])
+
     def read_job(self, job_id: str) -> np.ndarray:
         """Concatenated retained samples of one job, ingest order (the
         replay path into ``AutoTuner.profile``).  Pending un-flushed
-        chunks are included."""
-        import os
+        chunks are included; truncated/corrupt segments are skipped."""
         parts: List[tuple] = []
         for seg in self._segments:
-            with np.load(os.path.join(self.path, seg)) as z:
-                for key in z.files:
-                    seq, _, jid = key.partition("__")
-                    if jid == job_id:
-                        parts.append((int(seq[1:]), z[key]))
-        for seq, jid, chunk in self._pending:
-            if jid == job_id:
-                parts.append((seq, chunk))
+            arrs = self._segment_arrays(seg)
+            if arrs is None:
+                continue
+            for key, arr in arrs.items():
+                seq, _, jid = key.partition("__")
+                if key[0] == "c" and jid == job_id:
+                    parts.append((int(seq[1:]), arr))
+        for seq, recs in self._pending:
+            for key, arr in recs.items():
+                if key[0] == "c" and key.partition("__")[2] == job_id:
+                    parts.append((seq, arr))
         if not parts:
             return np.zeros((0,), np.float32)
         return np.concatenate([c for _, c in sorted(parts,
@@ -276,6 +468,12 @@ class IngestFront:
         if variance is not None and ji.vbuffer is None:
             raise ValueError("per-sample variance requires "
                              "track_variance=True on the IngestFront")
+        # Poison checks run BEFORE anything is enqueued or journaled:
+        # a poisoned push is atomic (nothing partially accepted), so the
+        # serving layer can quarantine the job while survivors — and the
+        # WAL a recovery will replay — never see the bad values.
+        if not np.all(np.isfinite(s)):
+            raise PoisonedSampleError(job_id, "non-finite sample (NaN/Inf)")
         if ji.vbuffer is not None:
             # NaN marks "no variance supplied" — resolved to the causal
             # filter residual (or 0.0) at drain time, when the filtered
@@ -286,8 +484,12 @@ class IngestFront:
             if v.shape[0] != s.shape[0]:
                 raise ValueError(f"{s.shape[0]} samples but "
                                  f"{v.shape[0]} variances")
-            if np.any(v[~np.isnan(v)] < 0.0):
-                raise ValueError("variances must be >= 0")
+            supplied = v[~np.isnan(v)]
+            if np.any(supplied < 0.0):
+                raise PoisonedSampleError(
+                    job_id, "variances must be >= 0")
+            if not np.all(np.isfinite(supplied)):
+                raise PoisonedSampleError(job_id, "non-finite variance")
         ji.buffer.append(s)                      # may raise Backpressure
         if ji.vbuffer is not None and s.shape[0]:
             # Same pre-push pending count and same chunk length as the
@@ -295,7 +497,11 @@ class IngestFront:
             ji.vbuffer.append(v)
         ji.pushed += s.shape[0]
         if self.trace is not None and s.shape[0]:
-            self.trace.append(job_id, s)
+            # journal with full replay context: the variance row (when
+            # tracked) and the heartbeat stamp ride the chunk record.
+            self.trace.append(
+                job_id, s,
+                variance=v if ji.vbuffer is not None else None, now=now)
         if now is not None:
             if self.heartbeats is not None:
                 self.heartbeats.beat(job_id, ji.pushed, now)

@@ -1,0 +1,624 @@
+"""Crash-safe serving: durable snapshots + write-ahead replay recovery.
+
+The serving stack (``ingest -> scheduler -> tick engine -> verdicts``,
+see :mod:`repro.serve.tuning`) holds state in three places — device
+arrays (the ``[S, M, K]`` DP rows and moment slabs), host bookkeeping
+(ingest queues, slot layout, cohort clocks, decision history) and the
+on-disk trace.  A process crash loses the first two.  This module makes
+the whole service durable with the classic database recipe:
+
+**snapshot + write-ahead log (WAL) => bit-identical recovery.**
+
+* :func:`snapshot_service` dehydrates a live :class:`TuningService` into
+  ONE dict-nested numpy tree (device slabs pulled to host and sliced to
+  the live packed columns; every queue, clock, counter and pending
+  verdict alongside; the JSON-able metadata rides as a ``uint8`` leaf)
+  that round-trips through :mod:`repro.checkpoint` — two-phase atomic
+  saves, manifest-verified restores, no pickles.
+* :func:`restore_service` rehydrates that tree into a fresh process —
+  onto the SAME device mesh or a DIFFERENT one (the packed state re-pads
+  per device count exactly like :meth:`TuningService.rescale`; scores
+  are per-reference quantities, so column math never crosses the shard
+  boundary and decisions are bitwise mesh-independent).
+* :class:`RecoverableTuningService` wraps the service with the WAL
+  discipline.  The ingest layer's :class:`~repro.serve.ingest.TraceLog`
+  IS the journal: every accepted push already lands there with full
+  replay context (samples, variance row, heartbeat stamp), and the
+  wrapper journals every OTHER mutating command (submit / tick / finish
+  / evict / quarantine / drain, one event record per command) into the
+  same sequence space, flushing after each command so *acked == durable*.
+  :meth:`RecoverableTuningService.checkpoint` saves a snapshot stamped
+  with the journal watermark (``TraceLog.next_seq``);
+  :meth:`RecoverableTuningService.recover` loads the newest complete
+  snapshot and REPLAYS the journal tail (``seq >= watermark``) against
+  it with journaling suppressed.
+
+Because every layer underneath is already exactly re-executable —
+chunked DP == one-shot DP (chunking invariance), any drain grouping ==
+any other (causal filter state), decisions independent of packing
+history (churn invariance) — replaying the logged commands reproduces
+the crashed service's scores, probabilities, decisions and schedule
+position *bitwise*, tick for tick.  The chaos harness
+(:mod:`repro.runtime.chaos` + the kill-and-recover tests) SIGKILLs a
+serving process mid-stream and pins exactly that equality, including
+restores onto a different device count.
+
+Torn-write tolerance: a crash mid-``flush`` may leave a truncated final
+``.npz`` segment — :class:`TraceLog` skips it (counted, warned) and
+recovery proceeds from the durable prefix; a crash mid-snapshot leaves
+no ``manifest.json``, so :func:`repro.checkpoint.load_checkpoint_tree`
+falls back to the newest COMPLETE step.  Both are exercised by tests.
+
+What is NOT persisted: process-local handles (the device mesh, the
+retry policy, a chaos plan, the ReferenceDB object) — the restoring
+caller re-supplies them; and the wavelet coefficient cache — rebuilt
+lazily, bitwise the same.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import CheckpointManager, load_checkpoint_tree
+from ..core.database import ReferenceDB, SeriesBank
+from ..core.tuner import TuneDecision, _RowBuffer
+from ..core import wavelet as _wavelet
+from ..runtime.chaos import FaultPlan
+from ..runtime.fault import WorkerState
+from ..runtime.retry import RetryPolicy
+from .ingest import PoisonedSampleError, TraceLog
+from .tuning import InFlightJob, TuningService
+
+__all__ = ["SNAPSHOT_VERSION", "snapshot_service", "restore_service",
+           "RecoverableTuningService"]
+
+SNAPSHOT_VERSION = 1
+
+
+def _bank_fingerprint(svc: TuningService) -> str:
+    """Content hash of the reference bank a snapshot was taken against.
+
+    Restore refuses a mismatched bank: the packed DP columns are
+    positional, so rehydrating them against different references would
+    silently mis-score every job."""
+    h = hashlib.sha256()
+    h.update(np.ascontiguousarray(svc.bank.series).tobytes())
+    h.update(np.ascontiguousarray(svc.bank.lengths).tobytes())
+    h.update(json.dumps(list(svc._labels)).encode())
+    return h.hexdigest()
+
+
+def _decision_record(d: Optional[TuneDecision]) -> Optional[Dict]:
+    return None if d is None else d.to_record()
+
+
+def _decision_from(rec: Optional[Dict],
+                   svc: TuningService) -> Optional[TuneDecision]:
+    if rec is None:
+        return None
+    d = TuneDecision.from_record(rec)
+    # to_record drops the transferred config (it lives on the matched DB
+    # entry); re-derive it exactly as the original decision did.
+    if d.matched is not None and svc.db is not None:
+        d.config = svc.db.best_config(d.matched)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# snapshot
+# ---------------------------------------------------------------------------
+
+def snapshot_service(svc: TuningService) -> Dict[str, Any]:
+    """Dehydrate a live service into a dict-nested numpy tree.
+
+    The tree is pure ``{str: array-or-dict}`` — exactly what
+    :func:`repro.checkpoint.save_checkpoint` persists with leaf-path
+    manifests, so :func:`repro.checkpoint.load_checkpoint_tree` can
+    rebuild it in a fresh process with no target skeleton.  Device
+    state comes back to the host sliced to the live packed columns
+    (``k_live``); re-padding is the restorer's job (it depends on the
+    TARGET device count).  Metadata that is JSON, not array — config,
+    slot layout, per-job scalars, pending decisions, counters — rides
+    as one ``uint8`` JSON leaf."""
+    k_live = len(svc._packed_idx)
+    jobs_meta: List[Dict[str, Any]] = []
+    jobs_tree: Dict[str, Dict[str, np.ndarray]] = {}
+    for i, job in enumerate(svc._jobs.values()):
+        ji = svc._front._jobs[job.job_id]
+        jm: Dict[str, Any] = {
+            "job_id": job.job_id, "slot": int(job.slot),
+            "expected_len": int(job.expected_len),
+            "tick_hz": job.tick_hz, "n": int(job.n),
+            "leader": job.leader, "stable_for": int(job.stable_for),
+            "early": _decision_record(job.early),
+            "pushed": int(ji.pushed),
+            "dropped": int(ji.buffer.dropped),
+            "vdropped": int(ji.vbuffer.dropped)
+            if ji.vbuffer is not None else 0,
+        }
+        jt: Dict[str, np.ndarray] = {}
+        x = job.x.view()
+        if x.shape[0]:
+            jt["x"] = np.array(x, np.float32)
+        vx = job.vx.view()
+        if vx.shape[0]:
+            jt["vx"] = np.array(vx, np.float32)
+        if job.last_sims is not None:
+            jt["last_sims"] = np.array(job.last_sims, np.float64)
+        if job.last_probs is not None:
+            jt["last_probs"] = np.array(job.last_probs, np.float64)
+        if job.allowed is not None:
+            jt["allowed"] = np.array(job.allowed, bool)
+        # pending (pushed, not yet drained) ingest queues.  Chunk
+        # boundaries are irrelevant to both drain (one concatenate) and
+        # drop_oldest shedding (sheds a sample COUNT off the front), so
+        # one concatenated row per queue is an exact snapshot.
+        buf = ji.buffer.drain()
+        if buf is not None:
+            jt["buf"] = np.array(buf, np.float32)
+            ji.buffer.append(buf)               # put it back (read-only op)
+        if ji.vbuffer is not None:
+            vbuf = ji.vbuffer.drain()
+            if vbuf is not None:
+                jt["vbuf"] = np.array(vbuf, np.float32)
+                ji.vbuffer.append(vbuf)
+        if ji.filt is not None:
+            jt["filtz"] = np.asarray(ji.filt._z, np.float32)
+        jobs_meta.append(jm)
+        jobs_tree[str(i)] = jt
+
+    fq_meta: List[Dict[str, Any]] = []
+    fq_tree: Dict[str, Dict[str, np.ndarray]] = {}
+    for i, (jid, x, vxq, early) in enumerate(svc._finish_queue):
+        fq_meta.append({"job_id": jid, "early": _decision_record(early)})
+        ft = {"x": np.array(x, np.float32)}
+        if vxq is not None:
+            ft["vx"] = np.array(vxq, np.float32)
+        fq_tree[str(i)] = ft
+
+    front = svc._front
+    hb = None
+    if front.heartbeats is not None:
+        hb = {"high_water": front.heartbeats._sweep_high_water,
+              "workers": [[w.worker_id, int(w.last_step),
+                           float(w.last_time), bool(w.alive)]
+                          for w in front.heartbeats.workers.values()]}
+
+    meta: Dict[str, Any] = {
+        "version": SNAPSHOT_VERSION,
+        "bank": {"k": svc._k, "m": svc._m,
+                 "fingerprint": _bank_fingerprint(svc)},
+        "config": svc._config,
+        "scheduler": svc._sched.state_dict(),
+        "dirty": [int(s) for s in svc._dirty],
+        "jobs": jobs_meta,
+        "finish_queue": fq_meta,
+        "finished": {j: d.to_record() for j, d in svc._finished.items()},
+        "undelivered": {j: d.to_record()
+                        for j, d in svc._undelivered.items()},
+        "quarantined": dict(svc.quarantined),
+        "last_push": dict(front._last_push),
+        "heartbeats": hb,
+        "stragglers": {j: list(d)
+                       for j, d in front.stragglers._durations.items()},
+        "counters": {
+            "dispatch_count": svc.dispatch_count,
+            "repack_count": svc.repack_count,
+            "slot_repack_count": svc.slot_repack_count,
+            "rescale_count": svc.rescale_count,
+            "evicted_count": svc.evicted_count,
+            "offline_dispatch_count": svc.offline_dispatch_count,
+            "ticks": svc.ticks,
+            "retry_count": svc.retry_count,
+            "degraded_dispatch_count": svc.degraded_dispatch_count,
+            "quarantined_count": svc.quarantined_count,
+            "quarantine_dropped": svc.quarantine_dropped,
+        },
+        # WAL watermark: replay records with seq >= this after restoring.
+        "watermark": front.trace.next_seq if front.trace is not None
+        else 0,
+    }
+
+    device: Dict[str, np.ndarray] = {
+        "packed_idx": np.asarray(svc._packed_idx, np.int64),
+        "rows": np.asarray(svc._rows, np.float32)[:, :, :k_live],
+        "ns": np.asarray(svc._ns, np.int32),
+        "sx": np.asarray(svc._sx, np.float32),
+        "sxx": np.asarray(svc._sxx, np.float32),
+        "qlens": np.asarray(svc._qlens, np.int32),
+    }
+    if svc._moms is not None:
+        device["moms"] = np.asarray(svc._moms, np.float32)[:, :, :, :k_live]
+    if svc._vstats is not None:
+        device["vstats"] = np.asarray(svc._vstats, np.float32)
+
+    return {"meta_json": np.frombuffer(
+        json.dumps(meta, sort_keys=True).encode(), np.uint8).copy(),
+        "device": device, "jobs": jobs_tree, "fq": fq_tree}
+
+
+# ---------------------------------------------------------------------------
+# restore
+# ---------------------------------------------------------------------------
+
+def restore_service(tree: Dict[str, Any],
+                    refs: Union[ReferenceDB, SeriesBank], *,
+                    mesh: Optional[jax.sharding.Mesh] = None,
+                    trace_log: Optional[TraceLog] = None,
+                    retry_policy: Optional[RetryPolicy] = None,
+                    chaos: Optional[FaultPlan] = None) -> TuningService:
+    """Rehydrate a :func:`snapshot_service` tree into a live service.
+
+    ``refs`` must be the SAME reference bank the snapshot was taken
+    against (content-hash enforced).  ``mesh`` may differ from the
+    crashed process — the packed device state re-pads to the new device
+    count by the same gather a :meth:`TuningService.rescale` uses, and
+    every score is a per-column quantity, so the restored service's
+    decisions are bitwise identical whatever the mesh.  Process-local
+    handles (``trace_log``, ``retry_policy``, ``chaos``) are re-supplied
+    here, not persisted."""
+    meta = json.loads(bytes(np.asarray(tree["meta_json"],
+                                       np.uint8)).decode())
+    if meta["version"] != SNAPSHOT_VERSION:
+        raise ValueError(f"snapshot version {meta['version']} != "
+                         f"{SNAPSHOT_VERSION}")
+    svc = TuningService(refs, mesh=mesh, trace_log=trace_log,
+                        retry_policy=retry_policy, chaos=chaos,
+                        **meta["config"])
+    if meta["bank"]["fingerprint"] != _bank_fingerprint(svc):
+        raise ValueError("snapshot was taken against a different "
+                         "reference bank (content hash mismatch)")
+
+    svc._sched.load_state(meta["scheduler"])
+    svc._s_cap = svc._sched.capacity
+    svc._dirty = [int(s) for s in meta["dirty"]]
+
+    dev = tree.get("device", {})
+    svc._ns = svc._put(np.asarray(dev["ns"], np.int32), (None,))
+    svc._sx = svc._put(np.asarray(dev["sx"], np.float32), (None,))
+    svc._sxx = svc._put(np.asarray(dev["sxx"], np.float32), (None,))
+    if "vstats" in dev:
+        svc._vstats = svc._put(np.asarray(dev["vstats"], np.float32),
+                               (None, None))
+    svc._qlens = np.asarray(dev["qlens"], np.int32).copy()
+
+    # Re-home the packed DP state.  _pack_device_state gathers surviving
+    # columns out of arrays aligned with the PREVIOUS _packed_idx — set
+    # that to the snapshot's index first and the gather is the identity
+    # on the live columns, with fresh +inf/zero padding to the TARGET
+    # mesh's bucket width (exactly a rescale's re-pad).
+    idx = np.asarray(dev["packed_idx"], np.int64)
+    rows = jnp.asarray(np.asarray(dev["rows"], np.float32))
+    moms = jnp.asarray(np.asarray(dev["moms"], np.float32)) \
+        if "moms" in dev else None
+    svc._packed_idx = idx
+    svc._pack_device_state(idx, rows, moms)
+
+    jobs_tree = tree.get("jobs", {})
+    for i, jm in enumerate(meta["jobs"]):
+        jt = jobs_tree.get(str(i), {})
+        job = InFlightJob(
+            job_id=jm["job_id"], slot=int(jm["slot"]),
+            expected_len=int(jm["expected_len"]),
+            tick_hz=jm["tick_hz"],
+            haar=_wavelet.StreamingHaar(int(jm["expected_len"]))
+            if svc.prefilter_top is not None else None)
+        job.n = int(jm["n"])
+        job.leader = jm["leader"]
+        job.stable_for = int(jm["stable_for"])
+        job.early = _decision_from(jm["early"], svc)
+        if "x" in jt:
+            x = np.asarray(jt["x"], np.float32)
+            job.x.append(x)
+            if job.haar is not None:
+                # one-shot rebuild == the original per-chunk updates,
+                # bitwise (the pyramid refresh is prefix-deterministic).
+                job.haar.update(x)
+        if "vx" in jt:
+            job.vx.append(np.asarray(jt["vx"], np.float32))
+        if "last_sims" in jt:
+            job.last_sims = np.asarray(jt["last_sims"], np.float64)
+        if "last_probs" in jt:
+            job.last_probs = np.asarray(jt["last_probs"], np.float64)
+        if "allowed" in jt:
+            job.allowed = np.asarray(jt["allowed"], bool)
+        svc._front.register(job.job_id)
+        ji = svc._front._jobs[job.job_id]
+        ji.pushed = int(jm["pushed"])
+        ji.buffer.dropped = int(jm["dropped"])
+        if "buf" in jt:
+            ji.buffer.append(np.asarray(jt["buf"], np.float32))
+        if ji.vbuffer is not None:
+            ji.vbuffer.dropped = int(jm["vdropped"])
+            if "vbuf" in jt:
+                ji.vbuffer.append(np.asarray(jt["vbuf"], np.float32))
+        if ji.filt is not None and "filtz" in jt:
+            ji.filt._z = jnp.asarray(np.asarray(jt["filtz"], np.float32))
+        svc._jobs[job.job_id] = job
+
+    fq_tree = tree.get("fq", {})
+    for i, fm in enumerate(meta["finish_queue"]):
+        ft = fq_tree[str(i)]
+        svc._finish_queue.append(
+            (fm["job_id"], np.asarray(ft["x"], np.float32),
+             np.asarray(ft["vx"], np.float32) if "vx" in ft else None,
+             _decision_from(fm["early"], svc)))
+    svc._finished = {j: _decision_from(r, svc)
+                     for j, r in meta["finished"].items()}
+    svc._undelivered = {j: _decision_from(r, svc)
+                        for j, r in meta["undelivered"].items()}
+    svc.quarantined = dict(meta["quarantined"])
+
+    front = svc._front
+    front._last_push = {j: float(t)
+                        for j, t in meta["last_push"].items()}
+    if front.heartbeats is not None and meta["heartbeats"] is not None:
+        front.heartbeats._sweep_high_water = float(
+            meta["heartbeats"]["high_water"])
+        for wid, step, t, alive in meta["heartbeats"]["workers"]:
+            front.heartbeats.workers[wid] = WorkerState(
+                wid, last_step=int(step), last_time=float(t),
+                alive=bool(alive))
+    for j, durs in meta["stragglers"].items():
+        for d in durs:
+            front.stragglers.record(j, float(d))
+
+    c = meta["counters"]
+    svc.dispatch_count = int(c["dispatch_count"])
+    svc.repack_count = int(c["repack_count"])
+    svc.slot_repack_count = int(c["slot_repack_count"])
+    svc.rescale_count = int(c["rescale_count"])
+    svc.evicted_count = int(c["evicted_count"])
+    svc.offline_dispatch_count = int(c["offline_dispatch_count"])
+    svc.ticks = int(c["ticks"])
+    svc.retry_count = int(c["retry_count"])
+    svc.degraded_dispatch_count = int(c["degraded_dispatch_count"])
+    svc.quarantined_count = int(c["quarantined_count"])
+    svc.quarantine_dropped = int(c["quarantine_dropped"])
+    return svc
+
+
+# ---------------------------------------------------------------------------
+# the WAL wrapper
+# ---------------------------------------------------------------------------
+
+class RecoverableTuningService:
+    """Crash-safe façade: ``TuningService`` + journal + snapshots.
+
+    Layout under ``root``::
+
+        root/wal/    TraceLog journal (push chunks + command events)
+        root/ckpt/   CheckpointManager snapshots (two-phase atomic)
+
+    Every mutating command is executed, journaled, then FLUSHED before
+    it returns — a command the caller saw succeed is durable, and a
+    crash mid-command at worst loses that un-acked command (at-most-once
+    on the unflushed tail, never divergence).  Pushes are journaled by
+    the ingest layer itself (with variance row and heartbeat stamp);
+    everything else becomes one ``append_event`` record, so the journal
+    is a total order over commands and ``next_seq`` doubles as the
+    schedule position.  :meth:`checkpoint` snapshots the service with
+    the current watermark and prunes the journal below it (override
+    with ``prune=False``); :meth:`recover` = newest complete snapshot +
+    replay of the journal tail, bit-identical to the uninterrupted run
+    (see the module docstring for why replay is exact).
+
+    Poisoned pushes need one extra journal record: the push itself is
+    rejected atomically (never journaled), but the quarantine eviction
+    it triggers DID mutate the service, so the wrapper journals an
+    explicit ``quarantine`` event before re-raising — replay re-evicts
+    instead of re-poisoning.
+    """
+
+    def __init__(self, refs: Union[ReferenceDB, SeriesBank], *,
+                 root: str,
+                 keep: int = 3,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 chaos: Optional[FaultPlan] = None,
+                 _service: Optional[TuningService] = None,
+                 **svc_kwargs) -> None:
+        import os
+        self.root = root
+        # effectively unbounded rotation: the journal is bounded by
+        # checkpoint-time pruning, not by dropping un-replayed tail.
+        self.wal = TraceLog(os.path.join(root, "wal"),
+                            max_segments=1 << 30)
+        self.manager = CheckpointManager(os.path.join(root, "ckpt"),
+                                         keep=keep)
+        self.refs = refs
+        self.svc = _service if _service is not None else TuningService(
+            refs, mesh=mesh, trace_log=self.wal,
+            retry_policy=retry_policy, chaos=chaos, **svc_kwargs)
+        #: journal records replayed by :meth:`recover` (0 on a cold
+        #: start or when the snapshot was current).
+        self.replayed = 0
+
+    # -- journaling -----------------------------------------------------------
+    def _journal(self, kind: str, payload: Dict[str, Any]) -> None:
+        self.wal.append_event(kind, payload)
+        self.wal.flush()
+
+    # -- journaled commands ---------------------------------------------------
+    def submit(self, job_id: str, expected_len: int,
+               tick_hz: Optional[float] = None) -> InFlightJob:
+        job = self.svc.submit(job_id, expected_len, tick_hz=tick_hz)
+        self._journal("submit", {"job_id": job_id,
+                                 "expected_len": int(expected_len),
+                                 "tick_hz": tick_hz})
+        return job
+
+    def push(self, job_id: str, samples, variance=None,
+             now: Optional[float] = None) -> None:
+        # the accepted chunk is journaled inside IngestFront.push (same
+        # sequence space); flush makes it durable before the ack.
+        try:
+            self.svc.push(job_id, samples, variance=variance, now=now)
+        except PoisonedSampleError as err:
+            self._journal("quarantine", {"job_id": job_id,
+                                         "reason": err.reason})
+            raise
+        self.wal.flush()
+
+    def tick(self, now: Optional[float] = None):
+        out = self.svc.tick(now=now)
+        self._journal("tick", {"now": now})
+        return out
+
+    def finish(self, job_id: str) -> TuneDecision:
+        return self.finish_many((job_id,))[job_id]
+
+    def finish_many(self, job_ids) -> Dict[str, TuneDecision]:
+        ids = list(job_ids)
+        out = self.svc.finish_many(ids)
+        self._journal("finish", {"job_ids": ids})
+        return out
+
+    def finish_later(self, job_id: str) -> None:
+        self.svc.finish_later(job_id)
+        self._journal("finish_later", {"job_id": job_id})
+
+    def drain_finishes(self) -> Dict[str, TuneDecision]:
+        out = self.svc.drain_finishes()
+        self._journal("drain", {})
+        return out
+
+    def evict(self, job_id: str) -> Optional[TuneDecision]:
+        out = self.svc.evict(job_id)
+        self._journal("evict", {"job_id": job_id})
+        return out
+
+    def sweep_stalled(self, now: float):
+        out = self.svc.sweep_stalled(now)
+        self._journal("sweep", {"now": float(now)})
+        return out
+
+    # -- read-only passthroughs ----------------------------------------------
+    def __getattr__(self, name: str):
+        # counters, properties, diagnostics — anything not journaled.
+        if name == "svc":               # not set yet (mid-construction)
+            raise AttributeError(name)
+        return getattr(self.svc, name)
+
+    # -- snapshots ------------------------------------------------------------
+    def checkpoint(self, step: Optional[int] = None,
+                   prune: bool = True) -> int:
+        """Durable snapshot of the full service at the current journal
+        watermark.  Returns the step id.  ``prune=True`` (default) drops
+        journal segments wholly below the watermark — they precede every
+        snapshot the manager retains only when ``keep`` snapshots agree,
+        so pruning uses the OLDEST retained snapshot's watermark."""
+        self.wal.flush()
+        if step is None:
+            latest = self.manager.latest_step()
+            step = 0 if latest is None else latest + 1
+        tree = snapshot_service(self.svc)
+        self.manager.save(step, tree)
+        if prune:
+            floors = []
+            for s in self.manager.steps():
+                try:
+                    t, _ = load_checkpoint_tree(self.manager.root, step=s,
+                                                verify=False)
+                    floors.append(json.loads(bytes(np.asarray(
+                        t["meta_json"], np.uint8)).decode())["watermark"])
+                except Exception:        # torn/partial step: keep journal
+                    floors.append(0)
+            if floors:
+                self.wal.prune(min(floors))
+        return step
+
+    # -- recovery -------------------------------------------------------------
+    @classmethod
+    def recover(cls, refs: Union[ReferenceDB, SeriesBank], *,
+                root: str,
+                keep: int = 3,
+                mesh: Optional[jax.sharding.Mesh] = None,
+                retry_policy: Optional[RetryPolicy] = None,
+                chaos: Optional[FaultPlan] = None,
+                **svc_kwargs) -> "RecoverableTuningService":
+        """Rebuild the service a crashed process was running: newest
+        complete snapshot (if any) + replay of every journal record at
+        or past its watermark.  With no snapshot the journal replays
+        from the beginning against a fresh service.  The restored
+        service is bit-identical to the crashed one's last DURABLE
+        state — same scores, probabilities, decisions, counters, and
+        schedule position — even when ``mesh`` differs from the crashed
+        process's."""
+        import os
+        wal = TraceLog(os.path.join(root, "wal"), max_segments=1 << 30)
+        watermark = 0
+        svc: Optional[TuningService] = None
+        try:
+            tree, _ = load_checkpoint_tree(os.path.join(root, "ckpt"))
+        except FileNotFoundError:
+            tree = None
+        if tree is not None:
+            svc = restore_service(tree, refs, mesh=mesh, trace_log=wal,
+                                  retry_policy=retry_policy, chaos=chaos)
+            watermark = json.loads(bytes(np.asarray(
+                tree["meta_json"], np.uint8)).decode())["watermark"]
+        else:
+            svc = TuningService(refs, mesh=mesh, trace_log=wal,
+                                retry_policy=retry_policy, chaos=chaos,
+                                **svc_kwargs)
+
+        out = cls.__new__(cls)
+        out.root = root
+        out.wal = wal
+        out.manager = CheckpointManager(os.path.join(root, "ckpt"),
+                                        keep=keep)
+        out.refs = refs
+        out.svc = svc
+        out.replayed = _replay(svc, wal, watermark)
+        return out
+
+
+def _replay(svc: TuningService, wal: TraceLog, watermark: int) -> int:
+    """Re-execute journal records with ``seq >= watermark`` against a
+    restored service, with journaling SUPPRESSED (the records are
+    already durable; re-journaling would double them).  Returns the
+    number of records replayed."""
+    records = [r for r in wal.records(since=watermark)]
+    # suppress journaling (the records are already durable) AND chaos
+    # injection (replayed samples are the post-corruption originals;
+    # re-corrupting them would diverge from the crashed run).
+    trace, svc._front.trace = svc._front.trace, None
+    chaos, svc.chaos = svc.chaos, None
+    try:
+        for _, kind, payload in records:
+            if kind == "push":
+                svc.push(payload["job_id"], payload["samples"],
+                         variance=payload.get("variance"),
+                         now=payload.get("now"))
+            elif kind == "submit":
+                svc.submit(payload["job_id"],
+                           int(payload["expected_len"]),
+                           tick_hz=payload["tick_hz"])
+            elif kind == "tick":
+                svc.tick(now=payload["now"])
+            elif kind == "finish":
+                svc.finish_many(payload["job_ids"])
+            elif kind == "finish_later":
+                svc.finish_later(payload["job_id"])
+            elif kind == "drain":
+                svc.drain_finishes()
+            elif kind == "evict":
+                svc.evict(payload["job_id"])
+            elif kind == "sweep":
+                svc.sweep_stalled(float(payload["now"]))
+            elif kind == "quarantine":
+                svc._quarantine(payload["job_id"], payload["reason"])
+            else:
+                raise ValueError(f"unknown journal record kind {kind!r}")
+    finally:
+        svc._front.trace = trace
+        svc.chaos = chaos
+    return len(records)

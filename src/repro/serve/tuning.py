@@ -136,9 +136,21 @@ from ..core import wavelet as _wavelet
 from ..core.database import ReferenceDB, SeriesBank
 from ..core.similarity import MATCH_THRESHOLD
 from ..core.tuner import TuneDecision, _RowBuffer
+from ..runtime.chaos import FaultPlan, InjectedDispatchError
+from ..runtime.retry import RetryPolicy, call_with_retry
 from ..sharding.compat import shard_map as _shard_map
-from .ingest import IngestFront, TraceLog
+from .ingest import IngestFront, PoisonedSampleError, TraceLog
 from .scheduler import SlotScheduler
+
+
+def _transient_errors() -> tuple:
+    """Exception classes a dispatch retry treats as transient: injected
+    chaos faults plus the runtime's real device-side failure class."""
+    errs = [InjectedDispatchError]
+    rt = getattr(jax.errors, "JaxRuntimeError", None)
+    if rt is not None:
+        errs.append(rt)
+    return tuple(errs)
 
 __all__ = ["InFlightJob", "TuningService", "MultiTenantTuningService"]
 
@@ -251,7 +263,9 @@ class TuningService:
                  queue_limit: Optional[int] = None,
                  queue_policy: str = "reject",
                  trace_log: Optional[TraceLog] = None,
-                 heartbeat_timeout: Optional[float] = None) -> None:
+                 heartbeat_timeout: Optional[float] = None,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 chaos: Optional[FaultPlan] = None) -> None:
         if isinstance(refs, ReferenceDB):
             self.db: Optional[ReferenceDB] = refs
             self.bank = refs.bank()
@@ -299,6 +313,25 @@ class TuningService:
         if finish_batch < 1:
             raise ValueError("finish_batch must be >= 1")
         self.finish_batch = finish_batch
+        self.retry_policy = retry_policy
+        self.chaos = chaos
+        self._transient = _transient_errors()
+        # the serializable constructor config — what serve.recovery
+        # persists in a snapshot's manifest so a restoring process can
+        # rebuild an identical service without the caller re-supplying
+        # every knob (mesh/trace_log/retry/chaos are process-local and
+        # re-supplied at restore).
+        self._config: Dict[str, object] = dict(
+            band=band, threshold=threshold,
+            min_probability=min_probability, margin=margin,
+            stable_ticks=stable_ticks, min_fraction=min_fraction,
+            slots=slots, denoise=denoise, score_in_flight=score_in_flight,
+            prefilter_top=prefilter_top, prefilter_margin=prefilter_margin,
+            prefilter_min_fraction=prefilter_min_fraction,
+            prefilter_coeffs=prefilter_coeffs, finish_batch=finish_batch,
+            elastic_slots=elastic_slots, queue_limit=queue_limit,
+            queue_policy=queue_policy,
+            heartbeat_timeout=heartbeat_timeout)
 
         k, m = self.bank.series.shape
         self._k = k
@@ -346,7 +379,7 @@ class TuningService:
         self._qlens = np.zeros((self._s_cap,), np.int32)
         self._packed_idx = np.arange(k)
         self._pack_device_state(self._packed_idx, rows=None, moms=None)
-        self._tick_fn = self._build_tick_fn(axis)
+        self._tick_fn, self._tick_fallback = self._build_tick_fn(axis)
 
         #: device dispatches issued by :meth:`tick` — the scaling invariant
         #: is one dispatch per data-carrying tick, however many jobs are
@@ -374,6 +407,27 @@ class TuningService:
         #: in completions when verdicts batch.
         self.offline_dispatch_count = 0
         self.ticks = 0
+        #: failed dispatch attempts absorbed by the retry/backoff wrapper
+        #: (transient device errors + injected chaos faults).
+        self.retry_count = 0
+        #: dispatches that exhausted their retries and were served by the
+        #: degraded fallback path (Pallas kernel -> jnp wavefront twin —
+        #: bit-identical results, degraded latency).
+        self.degraded_dispatch_count = 0
+        #: True when the most recent tick/verdict dispatch came from the
+        #: fallback path — the per-tick ``degraded`` surface.
+        self.last_tick_degraded = False
+        #: {job_id: reason} for jobs evicted by the input-poison
+        #: quarantine (NaN/Inf samples, bad variances).  Survivors are
+        #: bit-identical to a run that never saw the poisoned job's tail:
+        #: per-job state is row-independent and the poisoned push itself
+        #: was rejected atomically before touching any queue.
+        self.quarantined: Dict[str, str] = {}
+        self.quarantined_count = 0
+        #: pushes silently dropped because their job was already
+        #: quarantined (a sick agent keeps pushing; the service must not
+        #: crash on it, and must not resurrect the job either).
+        self.quarantine_dropped = 0
         # early decisions emitted by a tick the caller didn't see (e.g.
         # the internal drain tick of another job's finish()); surfaced by
         # the next tick() return so no decision is ever dropped.
@@ -659,7 +713,14 @@ class TuningService:
         (or the distance-only variant), optionally shard_mapped over the
         bank axis.  Sharding is exact — every DP cell and score is a
         per-reference quantity, so the fan-out computes disjoint K slices
-        and the [S, K] score gather is the only cross-device output."""
+        and the [S, K] score gather is the only cross-device output.
+
+        Returns ``(tick_fn, fallback_fn_or_None)``.  On the unsharded
+        paths the fallback is the same dispatch pinned to the jnp
+        wavefront twin (``use_kernel=False``) — bit-identical to the
+        Pallas kernel, so a degraded tick after retry exhaustion changes
+        latency, never results.  The shard_mapped paths already close
+        over the jnp impl, so their fallback is None (retries only)."""
         band = self.band
         if self.score_in_flight:
             if self.min_probability is not None:
@@ -669,9 +730,13 @@ class TuningService:
                     # folds through the same kernel machinery, probs
                     # beside scores.  Separate entry point, so the exact
                     # tick's compiled graph is untouched.
-                    return functools.partial(
+                    return (functools.partial(
                         _dtw.bank_extend_tick_scored_var_dispatch,
-                        band=band, threshold=threshold)
+                        band=band, threshold=threshold),
+                        functools.partial(
+                            _dtw.bank_extend_tick_scored_var_dispatch,
+                            band=band, threshold=threshold,
+                            use_kernel=False))
 
                 def inner_var(rows, moms, ns, sx, sxx, vstats, bank_t,
                               lengths, chunks, vchunks, nvalid, qlens):
@@ -690,13 +755,16 @@ class TuningService:
                     out_specs=(P(None, None, axis),
                                P(None, None, None, axis),
                                P(), P(), P(), P(None, axis),
-                               P(None, None), P(None, axis))))
+                               P(None, None), P(None, axis)))), None
             if self.mesh is None:
                 # routes to the moment-carrying Pallas streaming kernel on
                 # TPU (DP row + (sy, syy, sxy) slabs pinned in VMEM across
                 # the chunk), the jnp wavefront elsewhere.
-                return functools.partial(
-                    _dtw.bank_extend_tick_scored_dispatch, band=band)
+                return (functools.partial(
+                    _dtw.bank_extend_tick_scored_dispatch, band=band),
+                    functools.partial(
+                        _dtw.bank_extend_tick_scored_dispatch, band=band,
+                        use_kernel=False))
 
             def inner(rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
                       nvalid, qlens):
@@ -710,14 +778,16 @@ class TuningService:
                           P(), P(), P(), P(None, axis), P(axis), P(), P(),
                           P()),
                 out_specs=(P(None, None, axis), P(None, None, None, axis),
-                           P(), P(), P(), P(None, axis))))
+                           P(), P(), P(), P(None, axis)))), None
 
         if self.mesh is None:
             # bank_extend_tick_dispatch routes to the Pallas streaming
             # kernel on TPU and the (already-jitted) jnp wavefront
             # elsewhere.
-            return functools.partial(_dtw.bank_extend_tick_dispatch,
-                                     band=band)
+            return (functools.partial(_dtw.bank_extend_tick_dispatch,
+                                      band=band),
+                    functools.partial(_dtw.bank_extend_tick_dispatch,
+                                      band=band, use_kernel=False))
 
         def inner(rows, ns, bank_t, lengths, chunks, nvalid, qlens):
             return _dtw.bank_extend_tick(rows, ns, bank_t, lengths, chunks,
@@ -727,7 +797,55 @@ class TuningService:
             inner, mesh=self.mesh,
             in_specs=(P(None, None, axis), P(), P(None, axis), P(axis),
                       P(), P(), P()),
-            out_specs=(P(None, None, axis), P())))
+            out_specs=(P(None, None, axis), P()))), None
+
+    # -- dispatch resilience --------------------------------------------------
+    def _dispatch_resilient(self, primary, fallback, kind: str):
+        """Run one device dispatch through the retry/backoff wrapper.
+
+        ``primary``/``fallback`` are zero-arg thunks (the fallback is the
+        jnp wavefront twin on unsharded paths, None when the primary
+        already is jnp).  Transient device errors — and chaos-injected
+        ones, consulted per *attempt* so a fault burst spans retries —
+        are retried per ``self.retry_policy``; after exhaustion the
+        fallback serves the tick once and the service surfaces
+        ``degraded``.  Results are bit-identical either way (the twin is
+        pinned against the kernel), so injected faults move latency and
+        counters, never scores or decisions.  With neither a policy nor
+        a chaos plan armed this is a plain call — the hot path pays one
+        attribute test."""
+        chaos = self.chaos
+        if chaos is None and self.retry_policy is None:
+            return primary()
+
+        def attempt():
+            if chaos is not None:
+                chaos.on_dispatch(kind)
+            return primary()
+
+        policy = self.retry_policy or RetryPolicy(max_retries=0,
+                                                  base_delay=0.0)
+        result, report = call_with_retry(
+            attempt, policy=policy, transient=self._transient,
+            fallback=fallback)
+        self.retry_count += report["retries"]
+        if report["degraded"]:
+            self.degraded_dispatch_count += 1
+            self.last_tick_degraded = True
+        return result
+
+    # -- input quarantine -----------------------------------------------------
+    def _quarantine(self, job_id: str, reason: str) -> None:
+        """Evict a job whose stream produced a poisoned sample (NaN/Inf,
+        bad variance).  The offending push was rejected atomically before
+        touching any buffer, and per-job DP state is row-independent, so
+        survivors are bit-identical to a run that never saw the sick
+        job's tail — the same guarantee the churn-invariance suite pins
+        for ordinary evictions.  Later pushes for the job are dropped
+        (counted), not resurrected."""
+        self.quarantined[job_id] = reason
+        self.quarantined_count += 1
+        self.evict(job_id)
 
     # -- elastic rescale ------------------------------------------------------
     def rescale(self, mesh: Optional[jax.sharding.Mesh]) -> None:
@@ -754,7 +872,7 @@ class TuningService:
         if self._vstats is not None:
             self._vstats = self._put(np.asarray(self._vstats), (None, None))
         self._pack_device_state(self._packed_idx, rows, moms)
-        self._tick_fn = self._build_tick_fn(axis)
+        self._tick_fn, self._tick_fallback = self._build_tick_fn(axis)
         self.rescale_count += 1
 
     # -- job lifecycle -------------------------------------------------------
@@ -807,10 +925,28 @@ class TuningService:
         carries aligned per-sample measurement variances; when omitted
         the ingest layer estimates them from the causal filter residual
         at drain time (0.0 without ``denoise`` — exact pushes stay
-        exact)."""
+        exact).
+
+        Poisoned payloads (NaN/Inf samples, negative or non-finite
+        variances) QUARANTINE the job: the push is rejected atomically
+        by the ingest layer, the job is evicted with the poison reason
+        recorded in :attr:`quarantined`, and ``PoisonedSampleError`` is
+        re-raised to the caller.  Survivors are untouched — bit-identical
+        scores and decisions (see :meth:`_quarantine`)."""
+        if job_id in self.quarantined:
+            # a sick agent keeps streaming; swallow, never resurrect.
+            self.quarantine_dropped += 1
+            return
         if job_id not in self._jobs:
             raise KeyError(job_id)
-        self._front.push(job_id, samples, variance=variance, now=now)
+        if self.chaos is not None:
+            samples = self.chaos.corrupt(samples)
+            now = self.chaos.skew(now)
+        try:
+            self._front.push(job_id, samples, variance=variance, now=now)
+        except PoisonedSampleError as err:
+            self._quarantine(job_id, err.reason)
+            raise
 
     # -- the hot path --------------------------------------------------------
     def tick(self, now: Optional[float] = None
@@ -830,6 +966,7 @@ class TuningService:
         could not deliver.
         """
         self.ticks += 1
+        self.last_tick_degraded = False
         out: Dict[str, Optional[TuneDecision]] = self._undelivered
         self._undelivered = {}
         due = self._sched.due_jobs(now, self._jobs.keys())
@@ -879,12 +1016,15 @@ class TuningService:
 
         sims_all = probs_all = None
         if prob_mode:
+            args = (self._rows, self._moms, self._ns, self._sx, self._sxx,
+                    self._vstats, self._bank_t, self._lengths,
+                    jnp.asarray(chunks), jnp.asarray(vchunks),
+                    jnp.asarray(nvalid), jnp.asarray(self._qlens))
             (self._rows, self._moms, self._ns, self._sx, self._sxx,
-             scores, self._vstats, probs) = self._tick_fn(
-                self._rows, self._moms, self._ns, self._sx, self._sxx,
-                self._vstats, self._bank_t, self._lengths,
-                jnp.asarray(chunks), jnp.asarray(vchunks),
-                jnp.asarray(nvalid), jnp.asarray(self._qlens))
+             scores, self._vstats, probs) = self._dispatch_resilient(
+                lambda: self._tick_fn(*args),
+                (lambda: self._tick_fallback(*args))
+                if self._tick_fallback is not None else None, "tick")
             sims_all = np.full((self._s_cap, self._k), -np.inf)
             sims_all[:, self._packed_idx] = \
                 np.asarray(scores, np.float64)[:, :k_live]
@@ -893,11 +1033,14 @@ class TuningService:
             probs_all[:, self._packed_idx] = \
                 np.asarray(probs, np.float64)[:, :k_live]
         elif self.score_in_flight:
+            args = (self._rows, self._moms, self._ns, self._sx, self._sxx,
+                    self._bank_t, self._lengths, jnp.asarray(chunks),
+                    jnp.asarray(nvalid), jnp.asarray(self._qlens))
             (self._rows, self._moms, self._ns, self._sx, self._sxx,
-             scores) = self._tick_fn(
-                self._rows, self._moms, self._ns, self._sx, self._sxx,
-                self._bank_t, self._lengths, jnp.asarray(chunks),
-                jnp.asarray(nvalid), jnp.asarray(self._qlens))
+             scores) = self._dispatch_resilient(
+                lambda: self._tick_fn(*args),
+                (lambda: self._tick_fallback(*args))
+                if self._tick_fallback is not None else None, "tick")
             # the tick's ONLY device->host transfer: the [S, K_live]
             # scores, scattered back to full-bank columns (pruned-out
             # references read -inf — never a leader, never a runner-up).
@@ -905,10 +1048,13 @@ class TuningService:
             sims_all[:, self._packed_idx] = \
                 np.asarray(scores, np.float64)[:, :k_live]
         else:
-            self._rows, self._ns = self._tick_fn(
-                self._rows, self._ns, self._bank_t, self._lengths,
-                jnp.asarray(chunks), jnp.asarray(nvalid),
-                jnp.asarray(self._qlens))
+            args = (self._rows, self._ns, self._bank_t, self._lengths,
+                    jnp.asarray(chunks), jnp.asarray(nvalid),
+                    jnp.asarray(self._qlens))
+            self._rows, self._ns = self._dispatch_resilient(
+                lambda: self._tick_fn(*args),
+                (lambda: self._tick_fallback(*args))
+                if self._tick_fallback is not None else None, "tick")
         self.dispatch_count += 1
 
         for job, ch, _ in pending:
@@ -1070,17 +1216,23 @@ class TuningService:
                 if v is not None and v.shape[0] == q.shape[0]:
                     xv[r, : q.shape[0]] = v
         if prob_mode:
-            scores, probs = _dtw.dtw_score_bank_many(
-                xs, self.bank.series, self.bank.lengths, xlens=xl,
-                band=self.band, sx=sx, sxx=sxx, xvars=xv,
-                threshold=float(self.threshold),
-                plan=self.bank.score_plan())
+            def call(use_kernel=None):
+                return _dtw.dtw_score_bank_many(
+                    xs, self.bank.series, self.bank.lengths, xlens=xl,
+                    band=self.band, sx=sx, sxx=sxx, xvars=xv,
+                    threshold=float(self.threshold),
+                    plan=self.bank.score_plan(), use_kernel=use_kernel)
+            scores, probs = self._dispatch_resilient(
+                call, lambda: call(use_kernel=False), "verdict")
             probs = np.asarray(probs, np.float64)
         else:
-            scores, probs = _dtw.dtw_score_bank_many(
-                xs, self.bank.series, self.bank.lengths, xlens=xl,
-                band=self.band, sx=sx, sxx=sxx,
-                plan=self.bank.score_plan()), None
+            def call(use_kernel=None):
+                return _dtw.dtw_score_bank_many(
+                    xs, self.bank.series, self.bank.lengths, xlens=xl,
+                    band=self.band, sx=sx, sxx=sxx,
+                    plan=self.bank.score_plan(), use_kernel=use_kernel)
+            scores, probs = self._dispatch_resilient(
+                call, lambda: call(use_kernel=False), "verdict"), None
         scores = np.asarray(scores, np.float64)
         self.offline_dispatch_count += 1
         for r, i in enumerate(live):
@@ -1264,6 +1416,14 @@ class MultiTenantTuningService:
     @property
     def offline_dispatch_count(self) -> int:
         return sum(e.offline_dispatch_count for e in self._engines.values())
+
+    @property
+    def quarantined(self) -> Dict[str, str]:
+        """{job_id: poison reason} across every tenant engine."""
+        out: Dict[str, str] = {}
+        for e in self._engines.values():
+            out.update(e.quarantined)
+        return out
 
     def _engine_of(self, job_id: str) -> TuningService:
         return self._engines[self._tenant_of[job_id]]

@@ -35,6 +35,57 @@ def test_latest_pointer_and_gc(tmp_path):
     assert manifest["step"] == 4
 
 
+def test_torn_step_dir_is_invisible(tmp_path):
+    """A step dir without a manifest (interrupted two-phase writer) is
+    never listed, never latest, never restored — even when the LATEST
+    pointer names it."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    t = _tree()
+    mgr.save(5, t)
+    torn = tmp_path / "step_000009"
+    torn.mkdir()
+    np.savez(torn / "arrays.npz", leaf_00000=np.zeros(3))  # no manifest
+    (tmp_path / "LATEST").write_text("step_000009")
+
+    assert mgr.steps() == [5]
+    assert mgr.latest_step() == 5
+    _, manifest = mgr.restore(t)
+    assert manifest["step"] == 5
+
+
+def test_gc_sweeps_torn_artifacts(tmp_path):
+    """save() garbage-collects interrupted writers' leftovers: orphaned
+    two-phase tmp dirs and manifest-less step dirs."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    torn = tmp_path / "step_000002"
+    torn.mkdir()
+    (torn / "arrays.npz").write_bytes(b"partial")
+    orphan = tmp_path / ".tmp_ckpt_dead"
+    orphan.mkdir()
+    (orphan / "arrays.npz").write_bytes(b"partial")
+
+    mgr.save(7, _tree())
+    assert not torn.exists()
+    assert not orphan.exists()
+    assert mgr.steps() == [7]
+
+
+def test_load_checkpoint_tree_target_free(tmp_path):
+    """Dict-nested checkpoints restore WITHOUT a shape-matching target
+    (the crash-recovery path); non-dict trees refuse."""
+    from repro.checkpoint import load_checkpoint_tree
+    t = {"x": np.arange(5, dtype=np.float32), "sub": {"y": np.eye(3)}}
+    save_checkpoint(str(tmp_path), 2, t, {"tag": "wal"})
+    tree, manifest = load_checkpoint_tree(str(tmp_path))
+    assert manifest["metadata"]["tag"] == "wal"
+    np.testing.assert_array_equal(tree["x"], t["x"])
+    np.testing.assert_array_equal(tree["sub"]["y"], t["sub"]["y"])
+
+    save_checkpoint(str(tmp_path / "tup"), 1, (np.zeros(2), np.ones(2)))
+    with pytest.raises(ValueError):
+        load_checkpoint_tree(str(tmp_path / "tup"))
+
+
 def test_corruption_detected(tmp_path):
     t = _tree()
     path = save_checkpoint(str(tmp_path), 1, t)

@@ -1,0 +1,193 @@
+"""Kill-and-recover: SIGKILL a serving process mid-stream, recover from
+snapshot + WAL replay, and pin the restored decisions BITWISE against an
+uninterrupted golden run.
+
+Three subprocess modes share one deterministic command tape (submits,
+pushes, ticks, finishes — each journaling exactly one WAL record, so the
+resume position after a crash is simply ``wal.next_seq``):
+
+* ``golden``  — runs the full tape on a plain ``TuningService`` and
+  prints every decision (float-hex scores) keyed by command index;
+* ``serve``   — runs the tape on a ``RecoverableTuningService``,
+  checkpoints mid-run, and SIGKILLs *itself* at the chaos plan's seeded
+  kill point (``FaultPlan.should_kill``) — a real crash, no cleanup;
+* ``recover`` — ``RecoverableTuningService.recover`` (snapshot + journal
+  tail replay), resumes the tape at ``wal.next_seq`` and prints the
+  remaining decisions.
+
+The parent asserts the recovered run's decisions equal the golden run's
+at every shared command index — including the sharded variant where the
+service crashes on an 8-device (forced host) mesh and recovers onto 4
+devices: scores are per-reference quantities, so the column math never
+crosses the shard boundary and recovery is device-count independent.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    MESH = os.environ.get("CR_MESH", "none")
+    if MESH != "none":
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import signal
+    import sys
+    sys.path.insert(0, "src")
+    import jax
+    import numpy as np
+    from repro.core.database import pack_series
+    from repro.runtime.chaos import FaultPlan
+    from repro.serve.recovery import RecoverableTuningService
+    from repro.serve.tuning import TuningService
+
+    MODE = os.environ["CR_MODE"]            # golden | serve | recover
+    ROOT = os.environ["CR_ROOT"]
+    KILL_EVERY = int(os.environ.get("CR_KILL_EVERY", "0")) or None
+    CKPT_AT = int(os.environ.get("CR_CKPT_AT", "11"))
+
+    rng = np.random.default_rng(7)
+    series = [np.abs(np.cumsum(rng.normal(size=int(l))))
+              .astype(np.float32)
+              for l in rng.integers(40, 90, size=6)]
+    bank = pack_series(series, labels=[f"w{i}" for i in range(6)])
+    streams = {f"j{i}": np.abs(np.cumsum(rng.normal(size=64)))
+               .astype(np.float32) for i in range(3)}
+
+    # the command tape: every entry journals EXACTLY one WAL record, so
+    # a crashed run's resume position is wal.next_seq.
+    cmds = [("submit", j) for j in streams]
+    for t in range(8):
+        cmds += [("push", j, t) for j in streams]
+        cmds += [("tick", float(t))]
+    cmds += [("finish", sorted(streams))]
+
+    def keyd(decisions):
+        out = []
+        for j, d in sorted(decisions.items()):
+            if d is None:
+                out.append([j, None])
+            else:
+                out.append([j, d.matched, float(d.corr).hex(), d.final,
+                            sorted([k, float(v).hex()]
+                                   for k, v in d.scores.items())])
+        return out
+
+    def run_cmd(svc, cmd):
+        kind = cmd[0]
+        if kind == "submit":
+            svc.submit(cmd[1], 64)
+        elif kind == "push":
+            j, t = cmd[1], cmd[2]
+            svc.push(j, streams[j][t * 8:(t + 1) * 8], now=float(t))
+        elif kind == "tick":
+            return keyd(svc.tick(now=cmd[1]))
+        elif kind == "finish":
+            return keyd(svc.finish_many(cmd[1]))
+        return None
+
+    def make_mesh():
+        if MESH == "none":
+            return None
+        n = int(MESH)
+        return jax.make_mesh((n,), ("bank",), devices=jax.devices()[:n])
+
+    KW = dict(threshold=0.5, margin=0.01, stable_ticks=2,
+              min_fraction=0.2, slots=4)
+
+    if MODE == "golden":
+        svc = TuningService(bank, mesh=make_mesh(), **KW)
+        out = {}
+        for i, cmd in enumerate(cmds):
+            d = run_cmd(svc, cmd)
+            if d is not None:
+                out[str(i)] = d
+        print("GOLDEN " + json.dumps(out), flush=True)
+
+    elif MODE == "serve":
+        svc = RecoverableTuningService(bank, root=ROOT, mesh=make_mesh(),
+                                       **KW)
+        plan = FaultPlan(seed=0, kill_every=KILL_EVERY)
+        for i, cmd in enumerate(cmds):
+            run_cmd(svc, cmd)
+            print(f"ACK {i}", flush=True)
+            if i == CKPT_AT:
+                svc.checkpoint()
+                print(f"CKPT {i}", flush=True)
+            if plan.should_kill(i):
+                os.kill(os.getpid(), signal.SIGKILL)   # a REAL crash
+        print("SERVE_DONE", flush=True)
+
+    elif MODE == "recover":
+        svc = RecoverableTuningService.recover(bank, root=ROOT,
+                                               mesh=make_mesh(), **KW)
+        resume = svc.wal.next_seq
+        print(f"RESUMED_AT {resume} REPLAYED {svc.replayed}", flush=True)
+        out = {}
+        for i in range(resume, len(cmds)):
+            d = run_cmd(svc, cmds[i])
+            if d is not None:
+                out[str(i)] = d
+        print("RECOVERED " + json.dumps(out), flush=True)
+""")
+
+N_CMDS = 3 + 8 * 4 + 1     # keep in sync with the tape in SCRIPT
+
+
+def _run(tmp_path, mode, mesh, root, **env_extra):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env.update({"CR_MODE": mode, "CR_MESH": mesh, "CR_ROOT": str(root)},
+               **{k: str(v) for k, v in env_extra.items()})
+    return subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        env=env, capture_output=True, text=True, timeout=900)
+
+
+def _kill_and_recover(tmp_path, crash_mesh, recover_mesh):
+    root = tmp_path / "svc"
+
+    g = _run(tmp_path, "golden", recover_mesh, root)
+    assert g.returncode == 0, g.stdout + g.stderr
+    golden = json.loads(g.stdout.split("GOLDEN ", 1)[1].splitlines()[0])
+
+    s = _run(tmp_path, "serve", crash_mesh, root,
+             CR_KILL_EVERY=20, CR_CKPT_AT=11)
+    assert s.returncode == -signal.SIGKILL, \
+        f"serve process should die by SIGKILL: {s.returncode}\n" \
+        + s.stdout + s.stderr
+    assert "SERVE_DONE" not in s.stdout, "crash must land mid-tape"
+    assert "CKPT 11" in s.stdout, s.stdout + s.stderr
+    assert "ACK 19" in s.stdout and "ACK 20" not in s.stdout, s.stdout
+
+    r = _run(tmp_path, "recover", recover_mesh, root)
+    assert r.returncode == 0, r.stdout + r.stderr
+    head = r.stdout.split("RESUMED_AT ", 1)[1].split()
+    resume, replayed = int(head[0]), int(head[2])
+    assert resume == 20, (resume, r.stdout)       # crash after cmd 19
+    assert replayed == 20 - 1 - 11, (replayed, r.stdout)  # tail past ckpt
+    recovered = json.loads(
+        r.stdout.split("RECOVERED ", 1)[1].splitlines()[0])
+
+    # every decision the recovered run emits is BITWISE the golden one
+    assert recovered, "recovered run emitted no decisions"
+    for i, dec in recovered.items():
+        assert int(i) >= resume
+        assert dec == golden[i], (i, dec, golden[i])
+    # the tape's final verdicts are always post-crash: covered above
+    assert str(N_CMDS - 1) in recovered
+
+
+def test_kill_and_recover_unsharded(tmp_path):
+    _kill_and_recover(tmp_path, crash_mesh="none", recover_mesh="none")
+
+
+def test_kill_and_recover_onto_fewer_devices(tmp_path):
+    """Crash on an 8-device (forced host) mesh, recover onto 4 devices;
+    golden runs on the 4-device mesh.  Decisions must still be bitwise
+    identical — recovery composes with elastic rescale."""
+    _kill_and_recover(tmp_path, crash_mesh="8", recover_mesh="4")

@@ -15,6 +15,40 @@ def test_heartbeat_timeout():
     assert hb.alive_workers() == [0, 1]
 
 
+def test_heartbeat_backwards_beat_cannot_rewind():
+    """A beat stamped by a backwards-jumping clock (NTP step, VM
+    migration) proves liveness; it must never rewind ``last_time`` so a
+    later honest sweep times the worker out on the skewed stamp."""
+    hb = HeartbeatTracker(timeout=10.0)
+    hb.beat(0, 1, now=100.0)
+    hb.beat(0, 2, now=3.0)          # clock jumped back 97s
+    assert hb.sweep(now=105.0) == []
+    assert hb.alive_workers() == [0]
+    # step counters are monotone under the same skew
+    assert hb.workers[0].last_step == 2
+    assert hb.workers[0].last_time == 100.0
+
+
+def test_heartbeat_backwards_sweep_is_clamped():
+    """``sweep(t); sweep(t - skew)`` decides exactly what ``sweep(t)``
+    alone would: the sweep clock is clamped to its high-water mark, so
+    a skewed monitor can neither evict nor resurrect."""
+    hb = HeartbeatTracker(timeout=10.0)
+    hb.beat(0, 1, now=0.0)
+    hb.beat(1, 1, now=20.0)
+    assert hb.sweep(now=25.0) == [0]
+    # backwards sweep: must not re-evaluate at the earlier time (worker
+    # 1 would look alive-forever, worker 0 freshly dead again)
+    assert hb.sweep(now=5.0) == []
+    assert hb.alive_workers() == [1]
+    # and a backwards sweep before any eviction evicts nobody
+    hb2 = HeartbeatTracker(timeout=10.0)
+    hb2.beat(0, 1, now=50.0)
+    hb2.sweep(now=51.0)
+    assert hb2.sweep(now=-1000.0) == []
+    assert hb2.alive_workers() == [0]
+
+
 def test_straggler_detection():
     sd = StragglerDetector(window=8, factor=1.5, min_samples=4)
     for step in range(8):
