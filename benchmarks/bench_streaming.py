@@ -649,11 +649,102 @@ def _recovery_rows():
         shutil.rmtree(root, ignore_errors=True)
 
 
+#: overload scenario knobs (stream_tick_overload_S256): churn-style
+#: serving at S=256 slots under a seeded 10x Poisson submission spike
+#: (FaultPlan spike windows), slow-dispatch injection pushing measured
+#: tick latency past the ladder's target, and queue-pressure bursts
+#: withholding drains.  The row records shed counts (total and per QoS
+#: class), the worst ladder rung reached, and the p99 tick latency the
+#: controller saw.  Gates: the ladder engaged (worst rung >= 1), load
+#: was actually shed, and the burst's submissions never blew the queue
+#: or slot limits (admission is the backpressure, not an exception).
+OVERLOAD_S = 256
+OVERLOAD_TICKS = 40
+OVERLOAD_CHUNK = 2
+OVERLOAD_LAM = 6.0
+OVERLOAD_SEED = 29
+OVERLOAD_QOS = ("bronze", "silver", "gold")
+
+
+def _overload_rows():
+    from repro.runtime.chaos import FaultPlan
+    from repro.serve.overload import (AdmissionPolicy, AdmissionShedError,
+                                      OverloadConfig)
+
+    bank = _paper_bank(tuple(mrsim.APPS))
+    psets = mrsim.paper_param_sets()
+    bases = [mrsim.simulate_cpu_series(app, psets[i], run=1, dt=DT)
+             for i, app in enumerate(mrsim.APPS)]
+    plan = FaultPlan(seed=OVERLOAD_SEED, spike_rate=0.25,
+                     spike_factor=10.0, spike_len=4,
+                     slow_rate=0.6, slow_extra=0.05,
+                     queue_burst_rate=0.1, queue_burst_len=2)
+    svc = TuningService(
+        bank, band=BAND, denoise=True, slots=OVERLOAD_S,
+        queue_limit=1024,
+        overload=OverloadConfig(target_p99=0.02, window=8, patience=1,
+                                cooldown=2),
+        admission=AdmissionPolicy(), chaos=plan)
+    rng = np.random.default_rng(OVERLOAD_SEED)
+    live = {}
+    lats = []
+    n_sub = n_offered = n_withheld = 0
+    t0 = time.time()
+    for t in range(OVERLOAD_TICKS):
+        mult = plan.spike_multiplier()
+        for _ in range(int(rng.poisson(OVERLOAD_LAM * mult))):
+            n_offered += 1
+            base = bases[n_offered % len(bases)]
+            ln = int(rng.integers(48, 97))
+            off = int(rng.integers(0, max(1, len(base) - ln)))
+            jid = f"o{n_offered}"
+            try:
+                svc.submit(jid, expected_len=ln,
+                           qos=OVERLOAD_QOS[n_offered % len(OVERLOAD_QOS)])
+            except (AdmissionShedError, RuntimeError):
+                continue              # shed / slots busy: backpressure
+            live[jid] = [base[off: off + ln], 0]
+            n_sub += 1
+        for jid, st in live.items():
+            q, pos = st
+            if pos < len(q):
+                svc.push(jid, q[pos: pos + OVERLOAD_CHUNK])
+                st[1] = min(pos + OVERLOAD_CHUNK, len(q))
+        if plan.queue_burst():
+            n_withheld += 1           # drain withheld: queues build
+            continue
+        svc.tick(now=t / 100.0)
+        lats.append(svc.last_tick_latency)
+    lat_p99 = float(np.percentile(lats, 99))
+    us = (time.time() - t0) / max(svc.ticks, 1) * 1e6
+    done = sorted(live)
+    for i in range(0, len(done), 64):
+        svc.finish_many(done[i: i + 64])
+
+    assert svc.worst_rung >= 1, "spike never engaged the ladder"
+    assert svc.shed_count > 0, "10x spike shed nothing"
+    print(f"[streaming] S={OVERLOAD_S}: {us / 1e3:7.2f} ms/tick overload "
+          f"(offered={n_offered}, admitted={n_sub}, "
+          f"shed={svc.shed_count} {svc.shed_by_class}, "
+          f"worst_rung={svc.worst_rung}, "
+          f"rung_moves={len(svc.rung_history)}, "
+          f"p99_seen={lat_p99 * 1e3:.1f} ms, withheld={n_withheld})")
+    shed_cls = ",".join(f"{k}:{v}"
+                        for k, v in sorted(svc.shed_by_class.items()))
+    return [("stream_tick_overload_S256", us,
+             f"offered={n_offered};admitted={n_sub}"
+             f";shed={svc.shed_count};shed_by_class={shed_cls}"
+             f";worst_rung={svc.worst_rung}"
+             f";rung_moves={len(svc.rung_history)}"
+             f";p99_tick_ms={lat_p99 * 1e3:.1f}"
+             f";overload_ticks={svc.overload_ticks}")]
+
+
 def run():
     return (_early_decision_rows() + _multiplex_rows()
             + _equivalence_rows() + _throughput_rows()
             + _pruned_scored_rows() + _churn_rows()
-            + _recovery_rows())
+            + _recovery_rows() + _overload_rows())
 
 
 if __name__ == "__main__":

@@ -26,6 +26,19 @@ Fault classes covered (mirroring what a real deployment sees):
 * **torn WAL tails** — :func:`truncate_file` chops bytes off a trace
   segment, the crash case ``serve.ingest.TraceLog`` must tolerate.
 
+Overload fault classes (PR 9), driving ``serve.overload``:
+
+* **submission spikes** — :meth:`FaultPlan.spike_multiplier` scales a
+  scenario's nominal arrival rate by ``spike_factor`` during seeded
+  windows (the 10x Poisson burst of the golden overload test);
+* **slow dispatch** — :meth:`FaultPlan.slow_dispatch` returns seeded
+  *extra latency seconds* to add to a tick's observed latency (never
+  sleeps — the latency is reported, not paid, so overload tests run at
+  full speed while the degradation ladder sees a saturated device);
+* **queue-pressure bursts** — :meth:`FaultPlan.queue_burst` marks seeded
+  windows during which a scenario withholds drains/ticks so ingest
+  queues fill toward their bounds (admission-control backpressure).
+
 Nothing here sleeps or consults a real clock: determinism is the point.
 """
 
@@ -63,11 +76,20 @@ class FaultPlan:
                  corrupt_rate: float = 0.0,
                  skew_rate: float = 0.0,
                  max_skew: float = 100.0,
-                 kill_every: Optional[int] = None) -> None:
+                 kill_every: Optional[int] = None,
+                 spike_rate: float = 0.0,
+                 spike_factor: float = 10.0,
+                 spike_len: int = 4,
+                 slow_rate: float = 0.0,
+                 slow_extra: float = 0.1,
+                 queue_burst_rate: float = 0.0,
+                 queue_burst_len: int = 2) -> None:
         if dispatch_fail_burst < 1:
             raise ValueError("dispatch_fail_burst must be >= 1")
         if kill_every is not None and kill_every < 1:
             raise ValueError("kill_every must be >= 1 (or None)")
+        if spike_len < 1 or queue_burst_len < 1:
+            raise ValueError("spike_len/queue_burst_len must be >= 1")
         self.seed = seed
         self.dispatch_fail_rate = float(dispatch_fail_rate)
         self.dispatch_fail_burst = int(dispatch_fail_burst)
@@ -75,15 +97,30 @@ class FaultPlan:
         self.skew_rate = float(skew_rate)
         self.max_skew = float(max_skew)
         self.kill_every = kill_every
+        self.spike_rate = float(spike_rate)
+        self.spike_factor = float(spike_factor)
+        self.spike_len = int(spike_len)
+        self.slow_rate = float(slow_rate)
+        self.slow_extra = float(slow_extra)
+        self.queue_burst_rate = float(queue_burst_rate)
+        self.queue_burst_len = int(queue_burst_len)
         # independent streams per fault class so e.g. enabling skew does
         # not shift which dispatches fail under the same seed.
         self._rng_dispatch = np.random.default_rng((seed, 1))
         self._rng_corrupt = np.random.default_rng((seed, 2))
         self._rng_skew = np.random.default_rng((seed, 3))
+        self._rng_spike = np.random.default_rng((seed, 4))
+        self._rng_slow = np.random.default_rng((seed, 5))
+        self._rng_qburst = np.random.default_rng((seed, 6))
         self._burst_left = 0
+        self._spike_left = 0
+        self._qburst_left = 0
         #: dispatch attempts failed so far (diagnostics for tests).
         self.injected_failures = 0
         self.corrupted_pushes = 0
+        self.slowed_dispatches = 0
+        self.spiked_beats = 0
+        self.queue_bursts = 0
 
     # -- dispatch failures ---------------------------------------------------
     def on_dispatch(self, kind: str = "tick") -> None:
@@ -127,6 +164,48 @@ class FaultPlan:
             return now
         return now + float(self._rng_skew.uniform(-self.max_skew,
                                                   self.max_skew))
+
+    # -- overload faults -----------------------------------------------------
+    def spike_multiplier(self) -> float:
+        """Consulted once per arrival beat: returns ``spike_factor``
+        while a seeded submission spike is active (``spike_len``
+        consecutive beats), else 1.0.  Scenarios multiply their nominal
+        Poisson arrival rate by this."""
+        if self._spike_left > 0:
+            self._spike_left -= 1
+            self.spiked_beats += 1
+            return self.spike_factor
+        if self.spike_rate > 0.0 and \
+                self._rng_spike.random() < self.spike_rate:
+            self._spike_left = self.spike_len - 1
+            self.spiked_beats += 1
+            return self.spike_factor
+        return 1.0
+
+    def slow_dispatch(self, kind: str = "tick") -> float:
+        """Consulted once per completed dispatch: returns seeded extra
+        latency *seconds* to fold into the observed tick latency (a
+        saturated-device simulator).  Never sleeps — overload is
+        reported to the degradation ladder, not actually paid."""
+        if self.slow_rate > 0.0 and \
+                self._rng_slow.random() < self.slow_rate:
+            self.slowed_dispatches += 1
+            return self.slow_extra
+        return 0.0
+
+    def queue_burst(self) -> bool:
+        """Consulted once per beat: True while a seeded queue-pressure
+        burst is active — the scenario withholds drains/ticks so
+        bounded ingest queues fill toward their limits."""
+        if self._qburst_left > 0:
+            self._qburst_left -= 1
+            return True
+        if self.queue_burst_rate > 0.0 and \
+                self._rng_qburst.random() < self.queue_burst_rate:
+            self._qburst_left = self.queue_burst_len - 1
+            self.queue_bursts += 1
+            return True
+        return False
 
     # -- process kill points -------------------------------------------------
     def should_kill(self, command_index: int) -> bool:

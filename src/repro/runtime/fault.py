@@ -167,3 +167,48 @@ class ElasticController:
         reason = ("shrink: dead/straggler workers" if
                   target < current_data_parallel else "grow: workers joined")
         return RescaleDecision(True, target, dropped, reason)
+
+    def decide_ahead(self, current_data_parallel: int,
+                     alive: Sequence[int],
+                     stragglers: Sequence[int] = (), *,
+                     overload_pressure: float = 0.0,
+                     grow_threshold: float = 0.75,
+                     shrink_threshold: float = 0.25) -> RescaleDecision:
+        """Rescale-AHEAD: :meth:`decide` reacts to workers dying; this
+        variant also reacts to the serving stack's measured overload
+        (``TuningService.overload_pressure()`` — the degradation
+        ladder's latency pressure and queue fill) BEFORE jobs are shed.
+
+        Pressure at or above ``grow_threshold`` doubles the data axis
+        (capped at the pow2 floor of the usable worker count — growing
+        past the hardware is not a plan); pressure at or below
+        ``shrink_threshold`` halves it (floored at
+        ``min_data_parallel``), reclaiming hosts an earlier spike
+        grabbed.  In between, defer to the reactive :meth:`decide`."""
+        if not 0.0 <= shrink_threshold < grow_threshold <= 1.0:
+            raise ValueError("need 0 <= shrink_threshold < "
+                             "grow_threshold <= 1")
+        usable = [w for w in alive if w not in set(stragglers)]
+        ceil = max(self.min_data_parallel, self._pow2_floor(len(usable)))
+        if overload_pressure >= grow_threshold \
+                and current_data_parallel < ceil:
+            target = min(ceil, current_data_parallel * 2)
+            return RescaleDecision(
+                True, target, (),
+                f"grow-ahead: overload pressure {overload_pressure:.2f}")
+        if overload_pressure <= shrink_threshold:
+            if self.min_data_parallel < current_data_parallel <= ceil:
+                target = max(self.min_data_parallel,
+                             current_data_parallel // 2)
+                return RescaleDecision(
+                    True, target, (),
+                    "shrink-ahead: overload pressure "
+                    f"{overload_pressure:.2f}")
+            # idle: reactive shrink (dead/straggler hosts) still applies,
+            # but never grow an idle service onto newly-joined workers.
+            d = self.decide(current_data_parallel, alive, stragglers)
+            if d.new_data_parallel > current_data_parallel:
+                return RescaleDecision(False, current_data_parallel, (),
+                                       "stable: idle")
+            return d
+        return self.decide(current_data_parallel, alive, stragglers)

@@ -1,6 +1,9 @@
 from .engine import make_prefill_step, make_decode_step, ServeEngine
 from .ingest import (BackpressureError, BoundedBuffer, IngestFront,
                      PoisonedSampleError, TraceLog)
+from .overload import (RUNGS, AdmissionController, AdmissionPolicy,
+                       AdmissionShedError, OverloadConfig,
+                       OverloadController)
 from .recovery import (RecoverableTuningService, restore_service,
                        snapshot_service)
 from .scheduler import (MIN_SLOT_BUCKET, SlotScheduler, TickCohorts,
@@ -10,6 +13,8 @@ from .tuning import InFlightJob, MultiTenantTuningService, TuningService
 __all__ = ["make_prefill_step", "make_decode_step", "ServeEngine",
            "BackpressureError", "BoundedBuffer", "IngestFront",
            "PoisonedSampleError", "TraceLog",
+           "RUNGS", "AdmissionController", "AdmissionPolicy",
+           "AdmissionShedError", "OverloadConfig", "OverloadController",
            "RecoverableTuningService", "restore_service", "snapshot_service",
            "MIN_SLOT_BUCKET", "SlotScheduler", "TickCohorts", "slot_bucket",
            "InFlightJob", "MultiTenantTuningService", "TuningService"]

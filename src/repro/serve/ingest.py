@@ -173,6 +173,15 @@ class TraceLog:
     * **torn tails are data, not errors** — a segment truncated by the
       crash (or corrupted on disk) is skipped with a warning and
       counted in ``corrupt_segments``; everything before it replays.
+    * **write failures degrade, never raise mid-push** — a flush that
+      hits ``OSError`` (disk full, permissions yanked) keeps every
+      record pending in memory, sets ``journal_degraded`` and counts
+      ``journal_write_errors``; the next flush retries the identical
+      segment (atomic overwrite, so a half-landed attempt is
+      harmless).  ``durable_seq`` reports how far the journal is
+      actually on disk — ``serve.recovery`` refuses to advance a
+      checkpoint watermark past it, because records that exist only in
+      this process would otherwise be double-applied or lost.
     * :meth:`prune` drops segments wholly below a snapshot watermark
       once a snapshot has made them redundant.
     """
@@ -189,6 +198,11 @@ class TraceLog:
         #: segments found unreadable (truncated/corrupt) — each bad file
         #: is counted once, at first encounter.
         self.corrupt_segments = 0
+        #: True while flushed-but-unwritable records are held in memory
+        #: only (disk write failed); clears when a flush lands.
+        self.journal_degraded = False
+        #: flush attempts that failed with OSError.
+        self.journal_write_errors = 0
         self._bad: set = set()
         # (seq, {full_key: array}) per un-flushed record
         self._pending: List[Tuple[int, Dict[str, np.ndarray]]] = []
@@ -274,6 +288,14 @@ class TraceLog:
         watermark when taken between commands)."""
         return self._seq
 
+    @property
+    def durable_seq(self) -> int:
+        """First sequence number NOT yet durable on disk.  Equals
+        ``next_seq`` when everything pending has flushed; lags behind it
+        while records are held in memory (including the
+        ``journal_degraded`` disk-failure mode)."""
+        return self._pending[0][0] if self._pending else self._seq
+
     def flush(self) -> None:
         import os
         if not self._pending:
@@ -282,17 +304,40 @@ class TraceLog:
         arrays: Dict[str, np.ndarray] = {}
         for _, recs in self._pending:
             arrays.update(recs)
-        atomic_write_npz(self.path, name, arrays)
+        old_segments = self._segments
+        try:
+            atomic_write_npz(self.path, name, arrays)
+            self._segments = self._segments + [name]
+            drop = self._segments[:max(0, len(self._segments)
+                                       - self.max_segments)]
+            self._segments = self._segments[len(drop):]
+            try:
+                self._write_index()
+            except OSError:
+                self._segments = old_segments
+                raise
+        except OSError as e:
+            # Disk refused the write: degrade to in-memory-only — the
+            # records stay pending (still replayable from this process,
+            # still visible to ``records()``) and the NEXT flush retries
+            # the same segment name, so a half-landed attempt overwrites
+            # cleanly.  Never raise mid-push.
+            self.journal_write_errors += 1
+            if not self.journal_degraded:
+                warnings.warn(
+                    f"trace journal write failed under {self.path} "
+                    f"({type(e).__name__}: {e}); holding records in "
+                    f"memory (journal_degraded)", RuntimeWarning)
+            self.journal_degraded = True
+            return
         self._pending = []
         self._pending_bytes = 0
-        self._segments.append(name)
-        while len(self._segments) > self.max_segments:     # rotate
-            old = self._segments.pop(0)
+        for old in drop:                                   # rotate
             try:
                 os.unlink(os.path.join(self.path, old))
-            except FileNotFoundError:
+            except OSError:
                 pass
-        self._write_index()
+        self.journal_degraded = False
 
     def _write_index(self) -> None:
         atomic_write_json(self.path, "trace_index.json",
@@ -543,6 +588,15 @@ class IngestFront:
 
     def dropped(self, job_id: str) -> int:
         return self._jobs[job_id].buffer.dropped
+
+    def queue_fill(self) -> float:
+        """Worst-case bounded-buffer occupancy across registered jobs in
+        [0, 1] — the queue-depth signal the admission controller
+        consumes.  0.0 when queues are unbounded (no limit to fill)."""
+        if self.queue_limit is None or not self._jobs:
+            return 0.0
+        worst = max(len(ji.buffer) for ji in self._jobs.values())
+        return min(1.0, worst / float(self.queue_limit))
 
     def stalled(self, now: float) -> List[str]:
         """Job ids newly declared dead by the heartbeat tracker."""

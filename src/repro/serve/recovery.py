@@ -72,7 +72,7 @@ from ..core.tuner import TuneDecision, _RowBuffer
 from ..core import wavelet as _wavelet
 from ..runtime.chaos import FaultPlan
 from ..runtime.fault import WorkerState
-from ..runtime.retry import RetryPolicy
+from ..runtime.retry import CircuitBreaker, RetryPolicy
 from .ingest import PoisonedSampleError, TraceLog
 from .tuning import InFlightJob, TuningService
 
@@ -137,6 +137,8 @@ def snapshot_service(svc: TuningService) -> Dict[str, Any]:
             "expected_len": int(job.expected_len),
             "tick_hz": job.tick_hz, "n": int(job.n),
             "leader": job.leader, "stable_for": int(job.stable_for),
+            "qos": job.qos,
+            "degraded_level": int(job.degraded_level),
             "early": _decision_record(job.early),
             "pushed": int(ji.pushed),
             "dropped": int(ji.buffer.dropped),
@@ -220,7 +222,18 @@ def snapshot_service(svc: TuningService) -> Dict[str, Any]:
             "degraded_dispatch_count": svc.degraded_dispatch_count,
             "quarantined_count": svc.quarantined_count,
             "quarantine_dropped": svc.quarantine_dropped,
+            "shed_count": svc.shed_count,
+            "shed_by_class": dict(svc.shed_by_class),
+            "overload_ticks": svc.overload_ticks,
+            "worst_rung": svc.worst_rung,
         },
+        # overload control plane (PR 9): the ladder's rung/window and
+        # the breaker's state machine must survive a crash so recovery
+        # of an OVERLOADED service replays the same rung trajectory.
+        "overload": (svc._overload.state_dict()
+                     if svc._overload is not None else None),
+        "breaker": (svc.breaker.state_dict()
+                    if svc.breaker is not None else None),
         # WAL watermark: replay records with seq >= this after restoring.
         "watermark": front.trace.next_seq if front.trace is not None
         else 0,
@@ -253,7 +266,9 @@ def restore_service(tree: Dict[str, Any],
                     mesh: Optional[jax.sharding.Mesh] = None,
                     trace_log: Optional[TraceLog] = None,
                     retry_policy: Optional[RetryPolicy] = None,
-                    chaos: Optional[FaultPlan] = None) -> TuningService:
+                    chaos: Optional[FaultPlan] = None,
+                    breaker: Optional[CircuitBreaker] = None
+                    ) -> TuningService:
     """Rehydrate a :func:`snapshot_service` tree into a live service.
 
     ``refs`` must be the SAME reference bank the snapshot was taken
@@ -262,8 +277,10 @@ def restore_service(tree: Dict[str, Any],
     count by the same gather a :meth:`TuningService.rescale` uses, and
     every score is a per-column quantity, so the restored service's
     decisions are bitwise identical whatever the mesh.  Process-local
-    handles (``trace_log``, ``retry_policy``, ``chaos``) are re-supplied
-    here, not persisted."""
+    handles (``trace_log``, ``retry_policy``, ``chaos``, ``breaker``)
+    are re-supplied here, not persisted — but the breaker's state
+    machine and the overload ladder's rung/window ARE restored onto
+    them, so an overloaded service recovers mid-ladder."""
     meta = json.loads(bytes(np.asarray(tree["meta_json"],
                                        np.uint8)).decode())
     if meta["version"] != SNAPSHOT_VERSION:
@@ -271,7 +288,11 @@ def restore_service(tree: Dict[str, Any],
                          f"{SNAPSHOT_VERSION}")
     svc = TuningService(refs, mesh=mesh, trace_log=trace_log,
                         retry_policy=retry_policy, chaos=chaos,
-                        **meta["config"])
+                        breaker=breaker, **meta["config"])
+    if meta.get("overload") is not None and svc._overload is not None:
+        svc._overload.load_state(meta["overload"])
+    if meta.get("breaker") is not None and svc.breaker is not None:
+        svc.breaker.load_state(meta["breaker"])
     if meta["bank"]["fingerprint"] != _bank_fingerprint(svc):
         raise ValueError("snapshot was taken against a different "
                          "reference bank (content hash mismatch)")
@@ -313,6 +334,8 @@ def restore_service(tree: Dict[str, Any],
         job.n = int(jm["n"])
         job.leader = jm["leader"]
         job.stable_for = int(jm["stable_for"])
+        job.qos = jm.get("qos", "silver")
+        job.degraded_level = int(jm.get("degraded_level", 0))
         job.early = _decision_from(jm["early"], svc)
         if "x" in jt:
             x = np.asarray(jt["x"], np.float32)
@@ -382,6 +405,11 @@ def restore_service(tree: Dict[str, Any],
     svc.degraded_dispatch_count = int(c["degraded_dispatch_count"])
     svc.quarantined_count = int(c["quarantined_count"])
     svc.quarantine_dropped = int(c["quarantine_dropped"])
+    svc.shed_count = int(c.get("shed_count", 0))
+    svc.shed_by_class = {k: int(v)
+                         for k, v in c.get("shed_by_class", {}).items()}
+    svc.overload_ticks = int(c.get("overload_ticks", 0))
+    svc.worst_rung = int(c.get("worst_rung", 0))
     return svc
 
 
@@ -448,11 +476,15 @@ class RecoverableTuningService:
 
     # -- journaled commands ---------------------------------------------------
     def submit(self, job_id: str, expected_len: int,
-               tick_hz: Optional[float] = None) -> InFlightJob:
-        job = self.svc.submit(job_id, expected_len, tick_hz=tick_hz)
+               tick_hz: Optional[float] = None,
+               qos: str = "silver") -> InFlightJob:
+        # a SHED submit mutates nothing and is never journaled — the
+        # AdmissionShedError propagates before the journal line below.
+        job = self.svc.submit(job_id, expected_len, tick_hz=tick_hz,
+                              qos=qos)
         self._journal("submit", {"job_id": job_id,
                                  "expected_len": int(expected_len),
-                                 "tick_hz": tick_hz})
+                                 "tick_hz": tick_hz, "qos": qos})
         return job
 
     def push(self, job_id: str, samples, variance=None,
@@ -468,8 +500,13 @@ class RecoverableTuningService:
         self.wal.flush()
 
     def tick(self, now: Optional[float] = None):
+        # journal AFTER execution so the measured tick latency — the
+        # overload ladder's input signal — rides in the record; replay
+        # feeds it back via ``tick(latency=...)`` and the restored
+        # service walks the exact same rung trajectory.
         out = self.svc.tick(now=now)
-        self._journal("tick", {"now": now})
+        self._journal("tick", {"now": now,
+                               "latency": self.svc.last_tick_latency})
         return out
 
     def finish(self, job_id: str) -> TuneDecision:
@@ -514,8 +551,20 @@ class RecoverableTuningService:
         watermark.  Returns the step id.  ``prune=True`` (default) drops
         journal segments wholly below the watermark — they precede every
         snapshot the manager retains only when ``keep`` snapshots agree,
-        so pruning uses the OLDEST retained snapshot's watermark."""
+        so pruning uses the OLDEST retained snapshot's watermark.
+
+        Refuses (``RuntimeError``) while the journal is DEGRADED
+        (:attr:`TraceLog.journal_degraded` — flush failing with
+        ``OSError``): commands the caller saw succeed are then only in
+        memory, and stamping a watermark past ``durable_seq`` would
+        silently drop them from every future recovery."""
         self.wal.flush()
+        if self.wal.journal_degraded:
+            raise RuntimeError(
+                "journal degraded: commands past durable_seq="
+                f"{self.wal.durable_seq} are not on disk; refusing to "
+                "checkpoint a watermark that would orphan them "
+                f"(write errors: {self.wal.journal_write_errors})")
         if step is None:
             latest = self.manager.latest_step()
             step = 0 if latest is None else latest + 1
@@ -543,6 +592,7 @@ class RecoverableTuningService:
                 mesh: Optional[jax.sharding.Mesh] = None,
                 retry_policy: Optional[RetryPolicy] = None,
                 chaos: Optional[FaultPlan] = None,
+                breaker: Optional[CircuitBreaker] = None,
                 **svc_kwargs) -> "RecoverableTuningService":
         """Rebuild the service a crashed process was running: newest
         complete snapshot (if any) + replay of every journal record at
@@ -562,13 +612,14 @@ class RecoverableTuningService:
             tree = None
         if tree is not None:
             svc = restore_service(tree, refs, mesh=mesh, trace_log=wal,
-                                  retry_policy=retry_policy, chaos=chaos)
+                                  retry_policy=retry_policy, chaos=chaos,
+                                  breaker=breaker)
             watermark = json.loads(bytes(np.asarray(
                 tree["meta_json"], np.uint8)).decode())["watermark"]
         else:
             svc = TuningService(refs, mesh=mesh, trace_log=wal,
                                 retry_policy=retry_policy, chaos=chaos,
-                                **svc_kwargs)
+                                breaker=breaker, **svc_kwargs)
 
         out = cls.__new__(cls)
         out.root = root
@@ -587,11 +638,15 @@ def _replay(svc: TuningService, wal: TraceLog, watermark: int) -> int:
     already durable; re-journaling would double them).  Returns the
     number of records replayed."""
     records = [r for r in wal.records(since=watermark)]
-    # suppress journaling (the records are already durable) AND chaos
+    # suppress journaling (the records are already durable), chaos
     # injection (replayed samples are the post-corruption originals;
-    # re-corrupting them would diverge from the crashed run).
+    # re-corrupting them would diverge from the crashed run) AND
+    # admission control (a journaled submit was by definition admitted;
+    # re-gating it against the restored rung could shed it).
     trace, svc._front.trace = svc._front.trace, None
     chaos, svc.chaos = svc.chaos, None
+    suppressed = svc._admission_suppressed
+    svc._admission_suppressed = True
     try:
         for _, kind, payload in records:
             if kind == "push":
@@ -601,9 +656,14 @@ def _replay(svc: TuningService, wal: TraceLog, watermark: int) -> int:
             elif kind == "submit":
                 svc.submit(payload["job_id"],
                            int(payload["expected_len"]),
-                           tick_hz=payload["tick_hz"])
+                           tick_hz=payload["tick_hz"],
+                           qos=payload.get("qos", "silver"))
             elif kind == "tick":
-                svc.tick(now=payload["now"])
+                # replay the MEASURED latency (absent in pre-PR-9
+                # journals: wall-clock is re-measured, harmless when no
+                # overload controller is configured).
+                svc.tick(now=payload["now"],
+                         latency=payload.get("latency"))
             elif kind == "finish":
                 svc.finish_many(payload["job_ids"])
             elif kind == "finish_later":
@@ -621,4 +681,5 @@ def _replay(svc: TuningService, wal: TraceLog, watermark: int) -> int:
     finally:
         svc._front.trace = trace
         svc.chaos = chaos
+        svc._admission_suppressed = suppressed
     return len(records)

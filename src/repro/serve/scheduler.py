@@ -81,6 +81,11 @@ class TickCohorts:
     def __init__(self) -> None:
         self._hz: Dict[str, Optional[float]] = {}
         self._next_due: Dict[float, float] = {}
+        #: re-arm stretch factor (>= 1.0): the overload ladder's
+        #: ``slow_cohorts`` rung sets this > 1 so due cohorts re-arm
+        #: ``scale / hz`` ahead instead of ``1 / hz`` — jobs tick less
+        #: often under load, they are never skipped outright.
+        self.rate_scale: float = 1.0
 
     def assign(self, job_id: str, tick_hz: Optional[float]) -> None:
         if tick_hz is not None and tick_hz <= 0:
@@ -107,7 +112,7 @@ class TickCohorts:
             return set(self._hz)
         due_rates = {hz for hz, t in self._next_due.items() if now >= t}
         for hz in due_rates:
-            self._next_due[hz] = now + 1.0 / hz
+            self._next_due[hz] = now + self.rate_scale / hz
         return {j for j, hz in self._hz.items()
                 if hz is None or float(hz) in due_rates}
 
@@ -119,13 +124,15 @@ class TickCohorts:
         crashed one left it."""
         return {"hz": dict(self._hz),
                 "next_due": {repr(hz): t
-                             for hz, t in self._next_due.items()}}
+                             for hz, t in self._next_due.items()},
+                "rate_scale": self.rate_scale}
 
     def load_state(self, state: Dict) -> None:
         self._hz = {j: (None if hz is None else float(hz))
                     for j, hz in state["hz"].items()}
         self._next_due = {float(hz): float(t)
                           for hz, t in state["next_due"].items()}
+        self.rate_scale = float(state.get("rate_scale", 1.0))
 
 
 class SlotScheduler:

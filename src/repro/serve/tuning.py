@@ -125,6 +125,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Mapping, Optional, Tuple, Union
 
 import jax
@@ -137,9 +138,12 @@ from ..core.database import ReferenceDB, SeriesBank
 from ..core.similarity import MATCH_THRESHOLD
 from ..core.tuner import TuneDecision, _RowBuffer
 from ..runtime.chaos import FaultPlan, InjectedDispatchError
-from ..runtime.retry import RetryPolicy, call_with_retry
+from ..runtime.retry import CircuitBreaker, RetryPolicy, call_with_retry
 from ..sharding.compat import shard_map as _shard_map
 from .ingest import IngestFront, PoisonedSampleError, TraceLog
+from .overload import (RUNGS, AdmissionController, AdmissionPolicy,
+                       AdmissionShedError, OverloadConfig,
+                       OverloadController)
 from .scheduler import SlotScheduler
 
 
@@ -185,6 +189,17 @@ class InFlightJob:
     #: once False a reference never comes back for this job, so its DP
     #: column may leave the packed tick without ever going stale for us.
     allowed: Optional[np.ndarray] = None
+    #: QoS class (bronze/silver/gold) the job was admitted under.
+    qos: str = "silver"
+    #: staleness marker set by degraded (ladder) ticks — monotone per
+    #: job, because a skipped side-channel contribution can never be
+    #: recovered in flight.  0 = all channels exact; 1 = variance
+    #: channels stale (probability-gated early decisions suppressed;
+    #: point scores and the prefilter veto stay exact); 2 = all moment
+    #: channels stale (``last_sims`` frozen, no early decisions ever —
+    #: the final verdict recomputes offline from the full query and is
+    #: bitwise unchanged).
+    degraded_level: int = 0
 
     @property
     def fraction_seen(self) -> float:
@@ -265,7 +280,12 @@ class TuningService:
                  trace_log: Optional[TraceLog] = None,
                  heartbeat_timeout: Optional[float] = None,
                  retry_policy: Optional[RetryPolicy] = None,
-                 chaos: Optional[FaultPlan] = None) -> None:
+                 chaos: Optional[FaultPlan] = None,
+                 overload: Union[OverloadConfig, OverloadController,
+                                 Dict, None] = None,
+                 admission: Union[AdmissionPolicy, AdmissionController,
+                                  Dict, None] = None,
+                 breaker: Optional[CircuitBreaker] = None) -> None:
         if isinstance(refs, ReferenceDB):
             self.db: Optional[ReferenceDB] = refs
             self.bank = refs.bank()
@@ -315,7 +335,25 @@ class TuningService:
         self.finish_batch = finish_batch
         self.retry_policy = retry_policy
         self.chaos = chaos
+        self.breaker = breaker
         self._transient = _transient_errors()
+        # overload control plane: the degradation-ladder controller and
+        # the admission gate (see serve.overload's runbook docstring).
+        # Dict forms are accepted so a snapshot's JSON config rebuilds
+        # them; passing a live controller keeps its walked state.
+        if isinstance(overload, dict):
+            overload = OverloadConfig(**overload)
+        if isinstance(overload, OverloadConfig):
+            overload = OverloadController(overload)
+        self._overload: Optional[OverloadController] = overload
+        if isinstance(admission, dict):
+            admission = AdmissionPolicy(**admission)
+        if isinstance(admission, AdmissionPolicy):
+            admission = AdmissionController(admission)
+        self._admission: Optional[AdmissionController] = admission
+        # replay suppression (serve.recovery): a replayed submit must
+        # never be shed — the live run already admitted it.
+        self._admission_suppressed = False
         # the serializable constructor config — what serve.recovery
         # persists in a snapshot's manifest so a restoring process can
         # rebuild an identical service without the caller re-supplying
@@ -331,7 +369,11 @@ class TuningService:
             prefilter_coeffs=prefilter_coeffs, finish_batch=finish_batch,
             elastic_slots=elastic_slots, queue_limit=queue_limit,
             queue_policy=queue_policy,
-            heartbeat_timeout=heartbeat_timeout)
+            heartbeat_timeout=heartbeat_timeout,
+            overload=(dataclasses.asdict(self._overload.config)
+                      if self._overload is not None else None),
+            admission=(dataclasses.asdict(self._admission.policy)
+                       if self._admission is not None else None))
 
         k, m = self.bank.series.shape
         self._k = k
@@ -352,6 +394,9 @@ class TuningService:
         self._full_series_t = np.ascontiguousarray(
             self.bank.series.T.astype(np.float32))
         self._full_lengths = self.bank.lengths.astype(np.int32)
+        # admission cost proxy: expected job length over the bank's mean
+        # reference length (the cumulative-CPU estimate stand-in).
+        self._mean_ref_len = float(np.mean(self._full_lengths))
         self._wcoeff_cache: Dict[Tuple[int, int], np.ndarray] = {}
         self._jobs: Dict[str, InFlightJob] = {}
         # slots awaiting their fresh-state reset (applied in one masked
@@ -379,7 +424,12 @@ class TuningService:
         self._qlens = np.zeros((self._s_cap,), np.int32)
         self._packed_idx = np.arange(k)
         self._pack_device_state(self._packed_idx, rows=None, moms=None)
-        self._tick_fn, self._tick_fallback = self._build_tick_fn(axis)
+        # per-mode tick callables, built lazily: the configured mode is
+        # compiled eagerly (the pre-overload behavior); the degraded
+        # ladder modes compile on first use under load.
+        self._tick_fns: Dict[str, Tuple] = {}
+        self._tick_fn, self._tick_fallback = \
+            self._tick_fn_for(self._base_mode())
 
         #: device dispatches issued by :meth:`tick` — the scaling invariant
         #: is one dispatch per data-carrying tick, however many jobs are
@@ -428,6 +478,19 @@ class TuningService:
         #: quarantined (a sick agent keeps pushing; the service must not
         #: crash on it, and must not resurrect the job either).
         self.quarantine_dropped = 0
+        #: submits refused by admission control (monitoring only: a shed
+        #: submit is never journaled — the job simply never existed as
+        #: far as recovery is concerned).
+        self.shed_count = 0
+        self.shed_by_class: Dict[str, int] = {}
+        #: top-level ticks observed while the ladder was above rung 0.
+        self.overload_ticks = 0
+        #: high-water ladder rung reached (see serve.overload.RUNGS).
+        self.worst_rung = 0
+        #: measured wall-clock latency of the most recent top-level tick
+        #: (plus any chaos-injected slowdown) — what the ladder observes
+        #: and what the recovery journal records per tick command.
+        self.last_tick_latency = 0.0
         # early decisions emitted by a tick the caller didn't see (e.g.
         # the internal drain tick of another job's finish()); surfaced by
         # the next tick() return so no decision is ever dropped.
@@ -639,8 +702,18 @@ class TuningService:
         DP column never has to re-enter for a job that already has
         samples (re-entry would be stale)."""
         p = self.prefilter_top
+        if self._overload is not None:
+            # deep_prune rung: survivor sets shrink harder (sticky, so
+            # the deeper cut persists after de-escalation — monotone
+            # like every other prune).
+            p = max(1, p // self._overload.prefilter_divisor)
         for job, *_ in pending:
             if job.haar is None or job.n < 2:
+                continue
+            if job.degraded_level >= 2:
+                # distance-only ticks froze this job's DTW veto scores;
+                # pruning on a stale veto could evict the eventual
+                # winner, so the live set just stops shrinking.
                 continue
             if job.fraction_seen < self.prefilter_min_fraction:
                 continue
@@ -708,12 +781,47 @@ class TuningService:
         self.repack_count += 1
 
     # -- tick compilation ----------------------------------------------------
-    def _build_tick_fn(self, axis: Optional[str]):
+    def _base_mode(self) -> str:
+        """The configured (unloaded) tick mode: ``"prob"``, ``"scored"``
+        or ``"distance"``."""
+        if self.min_probability is not None:
+            return "prob"
+        return "scored" if self.score_in_flight else "distance"
+
+    def _tick_mode(self) -> str:
+        """Effective tick mode this tick: the configured mode, capped by
+        the overload ladder's current rung (a cap can only ever be
+        CHEAPER than the configured mode — ``min`` over the expense
+        order, so a distance-only service is never upgraded)."""
+        base = self._base_mode()
+        if self._overload is None:
+            return base
+        order = {"prob": 0, "scored": 1, "distance": 2}
+        cap = self._overload.tick_mode_cap
+        return cap if order[cap] > order[base] else base
+
+    def _tick_fn_for(self, mode: str):
+        """Cached ``(tick_fn, fallback)`` per mode — the configured mode
+        compiles at construction, degraded modes on first use."""
+        fns = self._tick_fns.get(mode)
+        if fns is None:
+            fns = self._build_tick_fn(self._axis, mode)
+            self._tick_fns[mode] = fns
+        return fns
+
+    def _build_tick_fn(self, axis: Optional[str], mode: str):
         """The ONE jitted callable a tick dispatches: fused scored extend
         (or the distance-only variant), optionally shard_mapped over the
         bank axis.  Sharding is exact — every DP cell and score is a
         per-reference quantity, so the fan-out computes disjoint K slices
         and the [S, K] score gather is the only cross-device output.
+
+        ``mode`` selects the dispatch flavor (``"prob"`` / ``"scored"`` /
+        ``"distance"``): the configured mode in an unloaded service, or a
+        cheaper ladder rung's flavor under overload (every flavor updates
+        the DP rows identically — same warp-path predecessor selection —
+        so a degraded tick leaves the rows bitwise what the full tick
+        would have computed and only side channels go stale).
 
         Returns ``(tick_fn, fallback_fn_or_None)``.  On the unsharded
         paths the fallback is the same dispatch pinned to the jnp
@@ -722,40 +830,40 @@ class TuningService:
         latency, never results.  The shard_mapped paths already close
         over the jnp impl, so their fallback is None (retries only)."""
         band = self.band
-        if self.score_in_flight:
-            if self.min_probability is not None:
-                threshold = float(self.threshold)
-                if self.mesh is None:
-                    # probabilistic twin: six moment slabs + variance
-                    # folds through the same kernel machinery, probs
-                    # beside scores.  Separate entry point, so the exact
-                    # tick's compiled graph is untouched.
-                    return (functools.partial(
+        if mode == "prob":
+            threshold = float(self.threshold)
+            if self.mesh is None:
+                # probabilistic twin: six moment slabs + variance
+                # folds through the same kernel machinery, probs
+                # beside scores.  Separate entry point, so the exact
+                # tick's compiled graph is untouched.
+                return (functools.partial(
+                    _dtw.bank_extend_tick_scored_var_dispatch,
+                    band=band, threshold=threshold),
+                    functools.partial(
                         _dtw.bank_extend_tick_scored_var_dispatch,
-                        band=band, threshold=threshold),
-                        functools.partial(
-                            _dtw.bank_extend_tick_scored_var_dispatch,
-                            band=band, threshold=threshold,
-                            use_kernel=False))
+                        band=band, threshold=threshold,
+                        use_kernel=False))
 
-                def inner_var(rows, moms, ns, sx, sxx, vstats, bank_t,
-                              lengths, chunks, vchunks, nvalid, qlens):
-                    return _dtw._bank_extend_diag_impl(
-                        rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
-                        nvalid, qlens, band=band, score=True,
-                        vchunks=vchunks, vstats=vstats,
-                        threshold=threshold)
-                P = jax.sharding.PartitionSpec
-                return jax.jit(_shard_map(
-                    inner_var, mesh=self.mesh,
-                    in_specs=(P(None, None, axis),
-                              P(None, None, None, axis),
-                              P(), P(), P(), P(None, None), P(None, axis),
-                              P(axis), P(), P(), P(), P()),
-                    out_specs=(P(None, None, axis),
-                               P(None, None, None, axis),
-                               P(), P(), P(), P(None, axis),
-                               P(None, None), P(None, axis)))), None
+            def inner_var(rows, moms, ns, sx, sxx, vstats, bank_t,
+                          lengths, chunks, vchunks, nvalid, qlens):
+                return _dtw._bank_extend_diag_impl(
+                    rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
+                    nvalid, qlens, band=band, score=True,
+                    vchunks=vchunks, vstats=vstats,
+                    threshold=threshold)
+            P = jax.sharding.PartitionSpec
+            return jax.jit(_shard_map(
+                inner_var, mesh=self.mesh,
+                in_specs=(P(None, None, axis),
+                          P(None, None, None, axis),
+                          P(), P(), P(), P(None, None), P(None, axis),
+                          P(axis), P(), P(), P(), P()),
+                out_specs=(P(None, None, axis),
+                           P(None, None, None, axis),
+                           P(), P(), P(), P(None, axis),
+                           P(None, None), P(None, axis)))), None
+        if mode == "scored":
             if self.mesh is None:
                 # routes to the moment-carrying Pallas streaming kernel on
                 # TPU (DP row + (sy, syy, sxy) slabs pinned in VMEM across
@@ -780,6 +888,8 @@ class TuningService:
                 out_specs=(P(None, None, axis), P(None, None, None, axis),
                            P(), P(), P(), P(None, axis)))), None
 
+        if mode != "distance":
+            raise ValueError(f"unknown tick mode {mode!r}")
         if self.mesh is None:
             # bank_extend_tick_dispatch routes to the Pallas streaming
             # kernel on TPU and the (already-jitted) jnp wavefront
@@ -812,16 +922,41 @@ class TuningService:
         ``degraded``.  Results are bit-identical either way (the twin is
         pinned against the kernel), so injected faults move latency and
         counters, never scores or decisions.  With neither a policy nor
-        a chaos plan armed this is a plain call — the hot path pays one
-        attribute test."""
+        a chaos plan nor a breaker armed this is a plain call — the hot
+        path pays one attribute test.
+
+        A :class:`runtime.retry.CircuitBreaker` (``breaker=``) wraps the
+        whole ladder: while OPEN the fallback serves directly (no
+        primary attempt, no chaos consult, no retry backoff — the point
+        is not paying the failing kernel every tick); in HALF-OPEN a
+        seeded probe re-tries the primary once per probe slot, and a
+        success re-promotes the kernel path (``degraded`` clears)."""
         chaos = self.chaos
-        if chaos is None and self.retry_policy is None:
+        breaker = self.breaker if fallback is not None else None
+        if chaos is None and self.retry_policy is None and breaker is None:
             return primary()
 
         def attempt():
             if chaos is not None:
                 chaos.on_dispatch(kind)
             return primary()
+
+        if breaker is not None:
+            route = breaker.before_dispatch()
+            if route == "fallback":
+                self.degraded_dispatch_count += 1
+                self.last_tick_degraded = True
+                return fallback()
+            if route == "probe":
+                try:
+                    result = attempt()       # one un-retried attempt
+                except self._transient:
+                    breaker.record_failure()
+                    self.degraded_dispatch_count += 1
+                    self.last_tick_degraded = True
+                    return fallback()
+                breaker.record_success()
+                return result
 
         policy = self.retry_policy or RetryPolicy(max_retries=0,
                                                   base_delay=0.0)
@@ -832,6 +967,10 @@ class TuningService:
         if report["degraded"]:
             self.degraded_dispatch_count += 1
             self.last_tick_degraded = True
+            if breaker is not None:
+                breaker.record_failure()
+        elif breaker is not None:
+            breaker.record_success()
         return result
 
     # -- input quarantine -----------------------------------------------------
@@ -872,7 +1011,9 @@ class TuningService:
         if self._vstats is not None:
             self._vstats = self._put(np.asarray(self._vstats), (None, None))
         self._pack_device_state(self._packed_idx, rows, moms)
-        self._tick_fn, self._tick_fallback = self._build_tick_fn(axis)
+        self._tick_fns = {}            # per-mode callables are mesh-bound
+        self._tick_fn, self._tick_fallback = \
+            self._tick_fn_for(self._base_mode())
         self.rescale_count += 1
 
     # -- job lifecycle -------------------------------------------------------
@@ -885,17 +1026,72 @@ class TuningService:
         """Current S bucket (== ``slots`` when ``elastic_slots=False``)."""
         return self._s_cap
 
+    # -- overload surface (serve.overload runbook) ---------------------------
+    @property
+    def rung(self) -> int:
+        """Current degradation-ladder rung (0 without a controller)."""
+        return 0 if self._overload is None else self._overload.rung
+
+    @property
+    def rung_history(self) -> List[Tuple[int, int, int]]:
+        """Ladder transitions ``(observation_index, from, to)`` — empty
+        without a controller."""
+        return [] if self._overload is None \
+            else list(self._overload.rung_history)
+
+    @property
+    def degraded(self) -> bool:
+        """True while the service is NOT serving its configured quality:
+        the circuit breaker has demoted the kernel path, or the overload
+        ladder sits above rung 0.  Clears when the breaker re-closes and
+        the ladder de-escalates back to normal."""
+        return (self.breaker is not None and self.breaker.engaged) \
+            or self.rung > 0
+
+    def overload_pressure(self) -> float:
+        """Scalar [0, 1] rescale-ahead signal for
+        ``runtime.fault.ElasticController.decide_ahead``: the worse of
+        the ladder's latency pressure and the ingest queue fill."""
+        p = self._front.queue_fill()
+        if self._overload is not None:
+            p = max(p, self._overload.pressure())
+        return p
+
     def submit(self, job_id: str, expected_len: int,
-               tick_hz: Optional[float] = None) -> InFlightJob:
+               tick_hz: Optional[float] = None,
+               qos: str = "silver") -> InFlightJob:
         """Register an in-flight job (``expected_len`` = predicted total
         sample count; it anchors the Sakoe-Chiba band and the
         fraction-seen gate of the early-decision rule).  ``tick_hz``
         assigns the job to a tick-rate cohort: ``tick(now=...)`` drains
-        it only on its own period (None = every tick)."""
+        it only on its own period (None = every tick).
+
+        ``qos`` (bronze/silver/gold) is the job's admission class: with
+        an admission controller armed (``admission=``), a submit under
+        measured overload raises
+        :class:`serve.overload.AdmissionShedError` — bronze sheds first,
+        gold last (see the ``serve.overload`` runbook).  A shed submit
+        leaves NO state behind (and is never journaled): the producer
+        retries later or routes the job elsewhere."""
         if job_id in self._jobs:
             raise ValueError(f"job {job_id!r} already in flight")
         if expected_len < 1:
             raise ValueError("expected_len must be >= 1")
+        if self._admission is not None and not self._admission_suppressed:
+            rung_frac = (self._overload.rung / max(1, len(RUNGS) - 1)
+                         if self._overload is not None else 0.0)
+            cost_fill = min(1.0, expected_len / (
+                self._admission.policy.cost_scale * self._mean_ref_len))
+            try:
+                self._admission.admit(
+                    job_id, qos=qos, cost_fill=cost_fill,
+                    queue_fill=self._front.queue_fill(),
+                    rung_frac=rung_frac)
+            except AdmissionShedError:
+                self.shed_count += 1
+                self.shed_by_class[qos] = \
+                    self.shed_by_class.get(qos, 0) + 1
+                raise
         slot, grow_src = self._sched.admit(job_id, tick_hz)
         if grow_src is not None:
             self._repack_slots(grow_src)
@@ -908,7 +1104,7 @@ class TuningService:
         self._dirty.append(slot)
         self._qlens[slot] = expected_len
         job = InFlightJob(job_id=job_id, slot=slot, expected_len=expected_len,
-                          tick_hz=tick_hz,
+                          tick_hz=tick_hz, qos=qos,
                           haar=_wavelet.StreamingHaar(expected_len)
                           if self.prefilter_top is not None else None)
         self._front.register(job_id)
@@ -949,8 +1145,9 @@ class TuningService:
             raise
 
     # -- the hot path --------------------------------------------------------
-    def tick(self, now: Optional[float] = None
-             ) -> Dict[str, Optional[TuneDecision]]:
+    def tick(self, now: Optional[float] = None, *,
+             latency: Optional[float] = None,
+             _observe: bool = True) -> Dict[str, Optional[TuneDecision]]:
         """Drain every due job's buffered samples in ONE jitted dispatch
         (DP extend + prefix scoring fused, sharded over the bank when a
         mesh is set), then apply the early-decision rule to the returned
@@ -960,11 +1157,44 @@ class TuningService:
         has elapsed drain (others keep buffering).  Without a clock
         every job is due — the legacy cadence.
 
+        Overload plumbing (``overload=``): the rung decided by PRIOR
+        observations is in force for this whole tick (mode cap, deeper
+        pruning, cohort stretch — decided pre-dispatch, so replay can
+        reproduce it), then the tick's measured wall-clock latency (plus
+        any chaos-injected slowdown) feeds the ladder.  ``latency=``
+        overrides the measurement — the recovery journal records each
+        live tick's latency and replays it here, which is what makes the
+        rung trajectory (hence tick modes and staleness markers)
+        bit-identical across recovery.  ``_observe=False`` marks an
+        internal drain tick (see :meth:`finish`): it must not advance
+        the ladder, because only top-level tick commands are journaled
+        with a latency.
+
         Returns {job_id: TuneDecision} for decisions *newly emitted* this
         tick (None for touched jobs where the service abstains), plus any
         decision a previous internal tick (see :meth:`finish`) emitted but
         could not deliver.
         """
+        if self._overload is not None:
+            self._sched.cohorts.rate_scale = self._overload.cohort_scale
+            if _observe and self._overload.rung >= 1:
+                self.overload_ticks += 1
+        t0 = time.perf_counter()
+        out = self._tick_impl(now)
+        if _observe:
+            lat = time.perf_counter() - t0 if latency is None \
+                else float(latency)
+            if latency is None and self.chaos is not None:
+                lat += self.chaos.slow_dispatch("tick")
+            self.last_tick_latency = lat
+            if self._overload is not None:
+                self._overload.observe(lat)
+                self.worst_rung = max(self.worst_rung,
+                                      self._overload.rung)
+        return out
+
+    def _tick_impl(self, now: Optional[float]
+                   ) -> Dict[str, Optional[TuneDecision]]:
         self.ticks += 1
         self.last_tick_degraded = False
         out: Dict[str, Optional[TuneDecision]] = self._undelivered
@@ -1014,17 +1244,25 @@ class TuningService:
             if prob_mode:
                 vchunks[job.slot, : ch.shape[0]] = vch
 
+        # Effective tick mode: the configured flavor, or a cheaper one
+        # under the overload ladder.  Every flavor updates the DP rows
+        # (and ns) identically — the warp-path predecessor selection is
+        # shared — so a degraded tick DELAYS decisions (side channels go
+        # stale, marked on the job) but can never change them.
+        mode = self._tick_mode()
+        base = self._base_mode()
+        tick_fn, tick_fb = self._tick_fn_for(mode)
         sims_all = probs_all = None
-        if prob_mode:
+        if mode == "prob":
             args = (self._rows, self._moms, self._ns, self._sx, self._sxx,
                     self._vstats, self._bank_t, self._lengths,
                     jnp.asarray(chunks), jnp.asarray(vchunks),
                     jnp.asarray(nvalid), jnp.asarray(self._qlens))
             (self._rows, self._moms, self._ns, self._sx, self._sxx,
              scores, self._vstats, probs) = self._dispatch_resilient(
-                lambda: self._tick_fn(*args),
-                (lambda: self._tick_fallback(*args))
-                if self._tick_fallback is not None else None, "tick")
+                lambda: tick_fn(*args),
+                (lambda: tick_fb(*args))
+                if tick_fb is not None else None, "tick")
             sims_all = np.full((self._s_cap, self._k), -np.inf)
             sims_all[:, self._packed_idx] = \
                 np.asarray(scores, np.float64)[:, :k_live]
@@ -1032,15 +1270,27 @@ class TuningService:
             probs_all = np.zeros((self._s_cap, self._k))
             probs_all[:, self._packed_idx] = \
                 np.asarray(probs, np.float64)[:, :k_live]
-        elif self.score_in_flight:
-            args = (self._rows, self._moms, self._ns, self._sx, self._sxx,
+        elif mode == "scored":
+            # a prob-configured service ticking at the exact_score rung
+            # runs the 3-channel dispatch over channels 0:3 of its
+            # 6-channel slab; the variance channels (and vstats) simply
+            # stay what they were — stale, never wrong-and-used, because
+            # degraded_level >= 1 suppresses every probability read.
+            moms_in = self._moms[:3] if base == "prob" else self._moms
+            args = (self._rows, moms_in, self._ns, self._sx, self._sxx,
                     self._bank_t, self._lengths, jnp.asarray(chunks),
                     jnp.asarray(nvalid), jnp.asarray(self._qlens))
-            (self._rows, self._moms, self._ns, self._sx, self._sxx,
+            (self._rows, moms_out, self._ns, self._sx, self._sxx,
              scores) = self._dispatch_resilient(
-                lambda: self._tick_fn(*args),
-                (lambda: self._tick_fallback(*args))
-                if self._tick_fallback is not None else None, "tick")
+                lambda: tick_fn(*args),
+                (lambda: tick_fb(*args))
+                if tick_fb is not None else None, "tick")
+            if base == "prob":
+                self._moms = self._put(
+                    jnp.concatenate([moms_out, self._moms[3:]], axis=0),
+                    (None, None, None, self._axis))
+            else:
+                self._moms = moms_out
             # the tick's ONLY device->host transfer: the [S, K_live]
             # scores, scattered back to full-bank columns (pruned-out
             # references read -inf — never a leader, never a runner-up).
@@ -1052,15 +1302,24 @@ class TuningService:
                     jnp.asarray(chunks), jnp.asarray(nvalid),
                     jnp.asarray(self._qlens))
             self._rows, self._ns = self._dispatch_resilient(
-                lambda: self._tick_fn(*args),
-                (lambda: self._tick_fallback(*args))
-                if self._tick_fallback is not None else None, "tick")
+                lambda: tick_fn(*args),
+                (lambda: tick_fb(*args))
+                if tick_fb is not None else None, "tick")
         self.dispatch_count += 1
+
+        if mode != base:
+            lvl = 2 if mode == "distance" else 1
+            for job, *_ in pending:
+                job.degraded_level = max(job.degraded_level, lvl)
 
         for job, ch, _ in pending:
             job.n += ch.shape[0]
             decision = None
-            if sims_all is not None:
+            # a level-2 job's moment/query-stat channels are stale, so
+            # any score a later scored tick emits for its slot is
+            # garbage: freeze last_sims/last_probs at their last exact
+            # values instead of overwriting them.
+            if sims_all is not None and job.degraded_level < 2:
                 sims = sims_all[job.slot]
                 if job.allowed is not None:
                     # a column another job kept alive may be pruned for
@@ -1072,7 +1331,7 @@ class TuningService:
                     if job.allowed is not None:
                         pr = np.where(job.allowed, pr, 0.0)
                     job.last_probs = pr
-                if job.early is None:
+                if job.early is None and job.degraded_level == 0:
                     decision = self._maybe_decide(job)
             if out.get(job.job_id) is None:
                 out[job.job_id] = decision
@@ -1267,9 +1526,13 @@ class TuningService:
     def _drain_tick_for(self, finishing) -> None:
         """Flush buffered samples before a verdict (ONE tick covering
         every live job) and park early decisions emitted for jobs that
-        are NOT being finished, so they surface from the next tick()."""
+        are NOT being finished, so they surface from the next tick().
+        Internal ticks never advance the overload ladder
+        (``_observe=False``): only top-level tick commands are journaled
+        with a latency, so replay could not reproduce an observation
+        made here."""
         if any(self._front.has_data(j) for j in finishing):
-            emitted = self.tick()
+            emitted = self.tick(_observe=False)
             for jid, d in emitted.items():
                 if jid not in finishing and d is not None:
                     self._undelivered[jid] = d
@@ -1430,14 +1693,15 @@ class MultiTenantTuningService:
 
     # -- lifecycle ------------------------------------------------------------
     def submit(self, job_id: str, expected_len: int, *, tenant: str,
-               tick_hz: Optional[float] = None) -> InFlightJob:
+               tick_hz: Optional[float] = None,
+               qos: str = "silver") -> InFlightJob:
         if tenant not in self._engines:
             raise KeyError(f"unknown tenant {tenant!r}")
         if job_id in self._tenant_of:
             raise ValueError(f"job {job_id!r} already in flight "
                              f"(tenant {self._tenant_of[job_id]!r})")
         job = self._engines[tenant].submit(job_id, expected_len,
-                                           tick_hz=tick_hz)
+                                           tick_hz=tick_hz, qos=qos)
         self._tenant_of[job_id] = tenant
         return job
 

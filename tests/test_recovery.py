@@ -272,6 +272,64 @@ def test_recover_replays_quarantine_not_poison(tmp_path):
     assert r2.quarantine_dropped == 1 and "j1" not in r2.svc._jobs
 
 
+def test_quarantine_sticks_across_checkpoint_and_recover(tmp_path):
+    """Quarantine must survive the SNAPSHOT path too, not just WAL
+    replay: a job quarantined before ``checkpoint()`` stays quarantined
+    after ``recover()``, its sick agent's post-recovery pushes are
+    swallowed and counted (``quarantine_dropped``, including swallows
+    journaled before the crash), and the survivors finish with
+    bitwise-identical verdicts to an uninterrupted run."""
+    from repro.serve.ingest import PoisonedSampleError
+
+    bank = _bank()
+    streams = _streams()
+
+    def drive(svc, poisoned):
+        for j in streams:
+            svc.submit(j, 80)
+        for t in range(3):
+            for j, s in streams.items():
+                if poisoned and j == "j1" and t >= 1:
+                    continue
+                svc.push(j, s[t * 8: (t + 1) * 8], now=float(t))
+            svc.tick(now=float(t))
+
+    gold = TuningService(bank, slots=8)
+    drive(gold, poisoned=True)
+    gold_fin = _run(gold, [("finish", ["j0", "j2"])])
+
+    r1 = RecoverableTuningService(bank, root=str(tmp_path), slots=8)
+    for j in streams:
+        r1.submit(j, 80)
+    for j, s in streams.items():
+        r1.push(j, s[:8], now=0.0)
+    r1.tick(now=0.0)
+    bad = streams["j1"][8:16].copy()
+    bad[4] = np.nan
+    with pytest.raises(PoisonedSampleError):
+        r1.push("j1", bad, now=1.0)
+    r1.push("j1", streams["j1"][8:16], now=1.0)   # swallowed pre-crash
+    assert r1.quarantine_dropped == 1
+    for t in range(1, 3):
+        for j, s in streams.items():
+            if j == "j1":
+                continue
+            r1.push(j, s[t * 8: (t + 1) * 8], now=float(t))
+        r1.tick(now=float(t))
+    r1.checkpoint()
+    del r1
+
+    r2 = RecoverableTuningService.recover(bank, root=str(tmp_path))
+    assert r2.replayed == 0                       # snapshot was current
+    assert r2.quarantined == {"j1": "non-finite sample (NaN/Inf)"}
+    assert r2.quarantine_dropped == 1
+    assert "j1" not in r2.svc._jobs
+    # still-sick agent keeps pushing: swallowed + counted, never revived
+    r2.push("j1", streams["j1"][16:24], now=3.0)
+    assert r2.quarantine_dropped == 2 and "j1" not in r2.svc._jobs
+    assert _run(r2, [("finish", ["j0", "j2"])]) == gold_fin
+
+
 # ---------------------------------------------------------------------------
 # torn files: truncated journal tails and incomplete snapshot steps
 # ---------------------------------------------------------------------------
