@@ -18,7 +18,11 @@
 4. Probabilistic scoring (``match_prob_K256``): the PR-7
    variance-carrying scorer (scores + calibrated match probabilities)
    vs the exact moment scorer, with the zero-variance bitwise reduction
-   checked unconditionally.
+   checked unconditionally.  ``match_prob_approx_K256`` runs the
+   4-channel approximate tail (``prob_mode="approx"``) on the same
+   inputs and records calibration drift — max |p_approx - p_exact| and
+   gating-decision agreement at the 0.5 gate — as derived fields, so
+   drift shows up in the perf trajectory, not just in tests.
 5. Batched finish: J completed jobs rendered by ONE
    ``TuningService.finish_many`` drain vs J sequential ``finish()``
    calls (``finish_batched_J{8,32}``).
@@ -188,10 +192,13 @@ def _prob_rows():
     the exact moment scorer on the same queries/bank, one dispatch each.
 
     Correctness is checked unconditionally (zero variance reduces the
-    probabilistic scores bitwise to the exact ones with probs in {0,1});
-    the emitted ratio vs the exact path is informational here — the
-    wall-clock gate lives in bench_streaming's stream_tick_prob_K256,
-    where the serving tick is the thing the paper cares about."""
+    probabilistic scores bitwise to the exact ones with probs in {0,1},
+    both tails); the emitted ratios vs the exact path are informational
+    here — the wall-clock gate lives in bench_streaming's
+    stream_tick_prob_K256, where the serving tick is the thing the
+    paper cares about.  match_prob_approx_K256 additionally carries the
+    calibration drift of the 4-channel tail (max_abs_dp and the 0.5-gate
+    agreement vs the exact tail) as derived fields."""
     rows = []
     rng = np.random.default_rng(3)
     k = max(BANK_SIZES)
@@ -211,14 +218,33 @@ def _prob_rows():
             xs, bank.series, bank.lengths, xvars=xv, threshold=0.85)
         return np.asarray(jax.block_until_ready(s)), np.asarray(p)
 
+    def prob_approx():
+        s, p = dtw.dtw_score_bank_many(
+            xs, bank.series, bank.lengths, xvars=xv, threshold=0.85,
+            prob_mode="approx")
+        return np.asarray(jax.block_until_ready(s)), np.asarray(p)
+
     s_exact = exact()                     # warm jit caches
-    prob()
-    # zero-variance reduction: exact scores bitwise, degenerate probs
+    _, p_exact = prob()
+    s_approx, p_approx = prob_approx()
+    # zero-variance reduction: exact scores bitwise, degenerate probs —
+    # both tails
     s0, p0 = dtw.dtw_score_bank_many(
         xs, bank.series, bank.lengths, xvars=np.zeros_like(xs),
         threshold=0.85)
     np.testing.assert_array_equal(np.asarray(s0), s_exact)
     assert set(np.unique(np.asarray(p0))) <= {0.0, 1.0}
+    s0a, p0a = dtw.dtw_score_bank_many(
+        xs, bank.series, bank.lengths, xvars=np.zeros_like(xs),
+        threshold=0.85, prob_mode="approx")
+    np.testing.assert_array_equal(np.asarray(s0a), s_exact)
+    np.testing.assert_array_equal(np.asarray(p0a), np.asarray(p0))
+    # calibration drift, derived fields: the scores themselves are
+    # mode-independent (same 3 base channels), so pin them bitwise and
+    # measure only the probability tail
+    np.testing.assert_array_equal(s_approx, s_exact)
+    max_dp = float(np.abs(p_approx - p_exact).max())
+    gate_agree = float(np.mean((p_approx >= 0.5) == (p_exact >= 0.5)))
 
     reps = 3
     t0 = time.time()
@@ -229,11 +255,22 @@ def _prob_rows():
     for _ in range(reps):
         prob()
     us_prob = (time.time() - t0) / reps * 1e6
+    t0 = time.time()
+    for _ in range(reps):
+        prob_approx()
+    us_approx = (time.time() - t0) / reps * 1e6
     ratio = us_prob / max(us_exact, 1e-9)
+    ratio_a = us_approx / max(us_exact, 1e-9)
     print(f"[matching] K={k:4d}: exact {us_exact/1e3:8.1f} ms  "
           f"prob {us_prob/1e3:8.1f} ms  ratio {ratio:4.2f}x (J={j})")
+    print(f"[matching] K={k:4d}: approx prob {us_approx/1e3:8.1f} ms  "
+          f"ratio {ratio_a:4.2f}x  max|dp|={max_dp:.4f}  "
+          f"gate_agree={gate_agree:.3f}")
     rows.append((f"match_prob_K{k}", us_prob,
                  f"vs_exact={ratio:.2f}x;jobs={j}"))
+    rows.append((f"match_prob_approx_K{k}", us_approx,
+                 f"vs_exact={ratio_a:.2f}x;max_abs_dp={max_dp:.4f}"
+                 f";gate_agree_at_0.5={gate_agree:.3f};jobs={j}"))
     return rows
 
 

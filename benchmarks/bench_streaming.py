@@ -10,11 +10,14 @@
    (causally filtered) query to 1e-4 — going online costs no accuracy.
 3. Throughput: chunks/sec through the multiplexed tick at bank size
    K in {8, 64, 256} — distance-only mode, plus (at K=256) the fused
-   on-device scoring tick, the PR-7 variance-carrying probabilistic
-   scoring tick, and the PR-2 row-formulation jnp baseline.  Gates:
-   the device-resident wavefront tick is >= 3x the PR-2 path, and the
-   probabilistic tick stays within PROB_TICK_GATE of the exact scored
-   tick (the exact 6-channel moment slab sets a ~1.7-2x floor).
+   on-device scoring tick, BOTH probabilistic scoring ticks (the PR-7
+   exact 6-channel tick and the approximate 4-channel serving tick,
+   ``prob_mode="approx"``), and the PR-2 row-formulation jnp baseline.
+   Gates: the device-resident wavefront tick is >= 3x the PR-2 path,
+   the approx serving tick stays within PROB_TICK_GATE (1.35x) of the
+   exact scored tick, and the exact probabilistic tick stays within
+   PROB_TICK_EXACT_GATE (2.5x — its 6-channel slab sets a ~1.7-2x
+   structural floor).
 4. Pruned scoring (the production scored tick at large K): a DIVERSE
    256-reference bank (one distinct workload signature per row — the
    regime the streaming wavelet prefilter targets) with every in-flight
@@ -61,11 +64,20 @@ BANK_SIZES = (8, 64, 256)
 TPUT_JOBS = 8
 TPUT_TICKS = 16
 TPUT_CHUNK = 16
-#: ceiling on the variance-carrying (probabilistic) scored tick relative
-#: to the exact scored tick at K=256.  Measured 1.7-2.0x on the exact
-#: 6-channel slab (bandwidth-bound doubling of the 3-channel moment
-#: traffic); 2.5 leaves machine-variance slack above that floor.
-PROB_TICK_GATE = 2.5
+#: ceiling on the SERVING probabilistic tick (``prob_mode="approx"``,
+#: the 4-channel sigma^2-proxy tail) relative to the exact scored tick
+#: at K=256.  The approx slab adds one moment channel (3 -> 4) instead
+#: of three, so the bandwidth-bound wavefront stays near the scored
+#: tick; 1.35 pins that — the gate the ISSUE's 1.3x aspiration asked
+#: for, now achievable because the approx tail ships.
+PROB_TICK_GATE = 1.35
+#: ceiling on the EXACT variance-carrying tick (``prob_mode="exact"``,
+#: the PR-7 6-channel slab that backs verdicts and calibration).
+#: Measured 1.7-2.0x (bandwidth-bound doubling of the 3-channel moment
+#: traffic); 2.5 leaves machine-variance slack above that structural
+#: floor.  Kept as its own row so the exact path holds its own
+#: trajectory while the serving row tightens.
+PROB_TICK_EXACT_GATE = 2.5
 
 
 def _paper_bank(apps) -> SeriesBank:
@@ -245,10 +257,11 @@ def _throughput_rows():
     for k in BANK_SIZES:
         bank = _throughput_bank(rng, k)
 
-        def run_stream(score, prob=False):
+        def run_stream(score, prob=False, prob_mode="exact"):
             if prob:
                 svc = TuningService(bank, score_in_flight=True,
-                                    min_probability=0.5)
+                                    min_probability=0.5,
+                                    prob_mode=prob_mode)
             else:
                 svc = TuningService(bank, score_in_flight=score)
             for j in range(TPUT_JOBS):
@@ -292,31 +305,50 @@ def _throughput_rows():
             rows.append((f"stream_tick_scored_K{k}",
                          dts / TPUT_TICKS * 1e6,
                          f"chunks_per_s={chunks / dts:.0f};jobs={TPUT_JOBS}"))
-            # probabilistic (variance-carrying) scoring tick: the same
-            # fused wavefront with the 6-channel moment slab and the
-            # factored-tail match probabilities.  Gate: the prob tick
-            # stays within PROB_TICK_GATE of the exact scored tick.
-            # The exact slab doubles the moment channels 3 -> 6 (the
+            # probabilistic scoring ticks, both tails.  The EXACT
+            # (PR-7) tick carries the 6-channel moment slab: the
             # delta-method sigma^2 needs three path-dependent sums
-            # Sum v*y, Sum v*y^2, Sum v*xy on top of the base three),
+            # Sum v*y, Sum v*y^2, Sum v*xy on top of the base three,
             # and the wavefront scan is bandwidth-bound on slab
-            # traffic, so ~1.7-2x is the structural floor of the EXACT
-            # formulation — the ISSUE's 1.3x aspiration would need an
-            # approximate single-channel sigma tail (ROADMAP follow-up)
-            # rather than the exact path-carried moments shipped here.
+            # traffic, so ~1.7-2x the scored tick is its structural
+            # floor.  The APPROX serving tick (prob_mode="approx")
+            # carries ONE extra channel — Sum v*y riding the warp path,
+            # with Sum v*y^2 / Sum v*xy reconstructed at the score tail
+            # from the per-job variance folds — so it stays near the
+            # scored tick and is gated at PROB_TICK_GATE (1.35x).
+            # finish()/finish_many() always re-score with the exact
+            # tail, so verdict probabilities are identical either way.
             run_stream(True, prob=True)
             t0 = time.time()
             run_stream(True, prob=True)
+            dte = time.time() - t0
+            ratio_e = dte / dts
+            print(f"[streaming] K={k:4d}: {1e3 * dte / TPUT_TICKS:7.2f} "
+                  f"ms/tick (exact prob scoring) -> {ratio_e:.2f}x "
+                  f"exact scored")
+            rows.append((f"stream_tick_prob_exact_K{k}",
+                         dte / TPUT_TICKS * 1e6,
+                         f"chunks_per_s={chunks / dte:.0f}"
+                         f";vs_exact_scored={ratio_e:.2f}x"
+                         f";jobs={TPUT_JOBS}"))
+            assert ratio_e <= PROB_TICK_EXACT_GATE, (
+                f"exact probabilistic tick regressed: {ratio_e:.2f}x > "
+                f"{PROB_TICK_EXACT_GATE}x the exact scored tick")
+            run_stream(True, prob=True, prob_mode="approx")
+            t0 = time.time()
+            run_stream(True, prob=True, prob_mode="approx")
             dtp = time.time() - t0
             ratio = dtp / dts
             print(f"[streaming] K={k:4d}: {1e3 * dtp / TPUT_TICKS:7.2f} "
-                  f"ms/tick (prob scoring) -> {ratio:.2f}x exact scored")
+                  f"ms/tick (approx prob scoring) -> {ratio:.2f}x "
+                  f"exact scored")
             rows.append((f"stream_tick_prob_K{k}",
                          dtp / TPUT_TICKS * 1e6,
                          f"chunks_per_s={chunks / dtp:.0f}"
-                         f";vs_exact_scored={ratio:.2f}x;jobs={TPUT_JOBS}"))
+                         f";vs_exact_scored={ratio:.2f}x"
+                         f";prob_mode=approx;jobs={TPUT_JOBS}"))
             assert ratio <= PROB_TICK_GATE, (
-                f"probabilistic scored tick regressed: {ratio:.2f}x > "
+                f"approx probabilistic tick regressed: {ratio:.2f}x > "
                 f"{PROB_TICK_GATE}x the exact scored tick")
             # PR-2 baseline + speedup gate: the device-resident wavefront
             # tick must beat the row-formulation jnp tick >= 3x here

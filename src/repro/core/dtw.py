@@ -85,6 +85,26 @@ reduces BITWISE to the point rule, so variance mode is a strict
 generalization.  Exact-mode entry points are untouched (separate jitted
 functions, unchanged compiled graphs).
 
+Two probability modes share that machinery:
+
+* **exact** (six channels, above) — the verdict tail.  ``finish()``
+  scoring and every offline probability goes through it; its numbers
+  are the contract.
+* **approx** (:func:`bank_extend_tick_scored_var_approx`, FOUR
+  channels) — the serving tail.  Only ``svy = Σ v_i·y~_j(i)`` rides the
+  warp path beside (sy, syy, sxy); the two dropped channels (svyy,
+  svxy) are reconstructed at the score tail by
+  :func:`_prob_from_moments_approx` from the carried proxy plus the
+  path-independent folds, via the warp-path regression ``y~ ≈ α + β·x~``
+  (see its docstring).  Slab traffic drops from 7 carried channels
+  (cell + 6) to 5 (cell + 3 + 1) — ~1.3x the exact *scored* tick
+  instead of ~2x — which is what makes probability-gated serving
+  affordable at every tick (``serve.tuning prob_mode="approx"``).
+  Zero input variance reduces BITWISE to the same point rule as the
+  exact tail, and the approx probability computed from an exact
+  six-channel slab's first four channels is bit-identical to the
+  dedicated four-channel carry (channel 3 IS svy in both layouts).
+
 Padding correctness: ``D[:, j]`` only ever depends on columns ``<= j`` and
 rows ``<= i``, so values in the padded tail cannot reach ``D[n-1, len_k-1]``
 — banks may be padded with anything; we pad with the series' edge value.
@@ -125,9 +145,11 @@ __all__ = [
     "bank_extend_tick",
     "bank_extend_tick_scored",
     "bank_extend_tick_scored_var",
+    "bank_extend_tick_scored_var_approx",
     "bank_extend_tick_dispatch",
     "bank_extend_tick_scored_dispatch",
     "bank_extend_tick_scored_var_dispatch",
+    "bank_extend_tick_scored_var_approx_dispatch",
     "backtrack",
     "warp_to",
     "dtw_warp",
@@ -540,7 +562,10 @@ def _bank_extend_diag_impl(rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
     [6, J, M, K] — (sy, syy, sxy, svy, svyy, svxy), where each variance
     channel's per-cell delta is exactly ``v_i *`` the matching base
     channel's delta, so the identical anchored/telescoped transitions
-    propagate them along the same backtrack-identical warp path.
+    propagate them along the same backtrack-identical warp path.  A
+    FOUR-channel ``moms`` [4, J, M, K] selects the approx tail instead:
+    only the svy proxy rides the path (delta ``v_i * delta_sy``) and
+    the probability reduction is :func:`_prob_from_moments_approx`.
 
     Returns ``(rows, moms, ns, sx, sxx, scores)``; ``scores`` is the
     [J, K] open-end warp correlation per (job, reference) when ``score``
@@ -621,8 +646,11 @@ def _bank_extend_diag_impl(rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
         if vchunks is not None:
             # variance channels: v_i times the matching base channel,
             # so the same transitions carry them along the same path.
+            # Exact mode (nch == 6) twins all three base channels;
+            # approx mode (nch == 4) twins only sy — the svy proxy.
             delta = jnp.concatenate(
-                [delta, vchunks[None, :, :, None] * delta], axis=0)
+                [delta, vchunks[None, :, :, None] * delta[:nch - 3]],
+                axis=0)
         m_vert = jnp.concatenate([bsl[1:], mprev[:, :, : c - 1]], axis=2)
         m_diag = mvert
         # predecessor choice mirrors backtrack()'s np.argmin tie order:
@@ -671,8 +699,9 @@ def _bank_extend_diag_impl(rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
         [jnp.sum(vq, axis=1), jnp.sum(vq * xm, axis=1),
          jnp.sum(vq * xm * xm, axis=1)], axis=1)                 # [J, 3]
     scores = _moment_scores(new_rows, new_moms[:3], ns2, sx2, sxx2, lengths)
-    probs = _moment_scores_prob(new_rows, new_moms, ns2, sx2, sxx2,
-                                vstats2, lengths, threshold)
+    prob_fn = _moment_scores_prob if nch == 6 else _moment_scores_prob_approx
+    probs = prob_fn(new_rows, new_moms, ns2, sx2, sxx2,
+                    vstats2, lengths, threshold)
     return new_rows, new_moms, ns2, sx2, sxx2, scores, vstats2, probs
 
 
@@ -798,6 +827,102 @@ def _moment_scores_prob(rows, moms, ns, sx, sxx, vstats, lengths,
     n = jnp.maximum(ns, 1).astype(jnp.float32)[:, None]            # [J, 1]
     probs = _prob_from_moments(
         msel[0], msel[1], msel[2], msel[3], msel[4], msel[5],
+        sx[:, None], sxx[:, None], vstats[:, 0][:, None],
+        vstats[:, 1][:, None], vstats[:, 2][:, None], n,
+        jnp.float32(threshold))
+    return jnp.where(ns[:, None] > 0, probs, 0.0)
+
+
+def _prob_from_moments_approx(sy, syy, sxy, svy, sx, sxx, sv, svx, svxx,
+                              n, threshold):
+    """Approximate match probability from ONE carried variance channel —
+    the serving-tick tail (:func:`_prob_from_moments` stays the verdict
+    tail; THE single approx definition, shared by the jnp wavefront and
+    both Pallas approx twins).
+
+    Of the three path-dependent variance accumulators only
+    ``svy = Σ v_i·y~_j(i)`` rides the warp path; the two dropped ones
+    are reconstructed at the tail from the path-independent folds
+    (sv, svx, svxx — note Σ v_i along the path IS sv: the warp keeps
+    one pair per query row) via the warp-path regression
+    ``y~_j(i) ≈ α + β·x~_i`` with β = cov/vx, α = (sy − β·sx)/n:
+
+        svxy ≈ α·svx + β·svxx + (svx/sv)·resid
+        svyy ≈ α²·sv + 2αβ·svx + β²·svxx
+               + 2(α + β·svx/sv)·resid + sv·σ_ε²
+
+    where ``resid = svy − (α·sv + β·svx)`` is the part of the carried
+    proxy the regression line misses (it re-centers both
+    reconstructions on the measured channel, so well-fit paths are
+    reproduced almost exactly) and ``σ_ε² = max(vy − cov²/vx, 0)/n`` is
+    the per-row regression residual variance.  Disattenuation, the
+    delta-method variance algebra and every degenerate clamp are the
+    exact tail's, with the reconstructed channels substituted.
+
+    Zero input variance zeroes sv/svx/svxx/svy, hence resid, both
+    reconstructions and every var_r term: sigma is exactly 0 and the
+    result reduces BITWISE to the exact tail's point rule
+    ``r^ >= threshold`` — approx and exact agree bit-for-bit on
+    noise-free traces.  Constant queries/references ride the same
+    safe-guards as the exact tail (safe_vx / sv_safe / clamped sqrt
+    args), so the output is always finite, never NaN.
+    """
+    r = _corr_from_moments(sy, syy, sxy, sx, sxx, n)
+    vx = jnp.maximum(sxx - sx * sx / n, 0.0)
+    vy = jnp.maximum(syy - sy * sy / n, 0.0)
+    cov = sxy - sx * sy / n
+    denom = jnp.sqrt(vx * vy)
+    safe_vx = jnp.where(vx > 0, vx, 1.0)
+    den = jnp.clip(vx - sv, vx * 0.25, vx)
+    g = jnp.where(den > 0, jnp.sqrt(vx / jnp.where(den > 0, den, 1.0)),
+                  1.0)
+    r_hat = jnp.clip(r * g, -1.0, 1.0)
+    c = 1.0 / jnp.where(denom > 0, denom, 1.0)
+    a = -c * sy / n + r * sx / (n * safe_vx)
+    b = -r / (2.0 * safe_vx)
+    # tail reconstruction of the dropped channels (see docstring)
+    beta = cov / safe_vx
+    alpha = (sy - beta * sx) / n
+    sv_safe = jnp.where(sv > 0, sv, 1.0)
+    resid = svy - (alpha * sv + beta * svx)
+    svxy_hat = alpha * svx + beta * svxx + (svx / sv_safe) * resid
+    sige2 = jnp.maximum(vy - cov * cov / safe_vx, 0.0) / n
+    svyy_hat = jnp.maximum(
+        alpha * alpha * sv + 2.0 * alpha * beta * svx
+        + beta * beta * svxx
+        + 2.0 * (alpha + beta * svx / sv_safe) * resid + sv * sige2,
+        0.0)
+    var_r = (a * a * sv + 4.0 * a * b * svx + 4.0 * b * b * svxx
+             + 2.0 * a * c * svy + 4.0 * b * c * svxy_hat
+             + c * c * svyy_hat)
+    sigma = jnp.sqrt(jnp.maximum(var_r, 0.0))
+    z = (r_hat - threshold) / jnp.where(sigma > 0, sigma, 1.0)
+    phi = 0.5 * jax.lax.erfc(-z / jnp.sqrt(jnp.float32(2.0)))
+    point = (r_hat >= threshold).astype(phi.dtype)
+    return jnp.where(sigma > 0, phi, point)
+
+
+def _moment_scores_prob_approx(rows, moms, ns, sx, sxx, vstats, lengths,
+                               threshold):
+    """Open-end approx match probability per (job, reference) -> [J, K].
+
+    The four-channel twin of :func:`_moment_scores_prob`: same masked
+    open-end argmin endpoint, but the gather reads the [4, J, M, K]
+    slab (sy, syy, sxy, svy) and the tail is
+    :func:`_prob_from_moments_approx`.  Feeding it the first four
+    channels of an exact six-channel slab gives bit-identical output
+    (channel 3 is svy in both layouts) — which is how the degraded
+    approx tick under an exact-mode service reuses its slab.
+    """
+    m = rows.shape[1]
+    colmask = jnp.arange(m, dtype=jnp.int32)[:, None] < lengths[None, :]
+    masked = jnp.where(colmask[None], rows, _INF)
+    j_end = jnp.argmin(masked, axis=1)                             # [J, K]
+    msel = jnp.take_along_axis(moms, j_end[None, :, None, :],
+                               axis=2)[:, :, 0, :]                 # [4, J, K]
+    n = jnp.maximum(ns, 1).astype(jnp.float32)[:, None]            # [J, 1]
+    probs = _prob_from_moments_approx(
+        msel[0], msel[1], msel[2], msel[3],
         sx[:, None], sxx[:, None], vstats[:, 0][:, None],
         vstats[:, 1][:, None], vstats[:, 2][:, None], n,
         jnp.float32(threshold))
@@ -999,6 +1124,93 @@ def bank_extend_tick_scored_var_dispatch(rows, moms, ns, sx, sxx, vstats,
                                        threshold=threshold)
 
 
+@functools.partial(jax.jit, static_argnames=("band", "threshold"))
+def bank_extend_tick_scored_var_approx(rows, moms, ns, sx, sxx, vstats,
+                                       bank_t, lengths, chunks, vchunks,
+                                       nvalid, qlens,
+                                       band: Optional[int] = None,
+                                       threshold: float = 0.9):
+    """Approximate variance-carrying fused scoring tick (jnp wavefront)
+    -> ``(rows, moms, ns, sx, sxx, scores, vstats, probs)``.
+
+    The serving-rate probability tick: same recurrence and return
+    contract as :func:`bank_extend_tick_scored_var` but the moment slab
+    is FOUR channels ([4, J, M, K]: sy, syy, sxy, svy) — one carried
+    σ²-proxy instead of three — and ``probs`` comes from the
+    :func:`_prob_from_moments_approx` tail (reconstructed svyy/svxy).
+    ~1.3x the exact scored tick's slab traffic instead of ~2x; the
+    exact six-channel tick stays the verdict/finish scorer.  Zero
+    input variance reduces probs BITWISE to the point rule, exactly
+    like the exact tail.
+    """
+    if moms.shape[0] != 4:
+        raise ValueError("approx variance mode needs a four-channel "
+                         f"moment slab, got {moms.shape[0]} channels")
+    return _bank_extend_diag_impl(rows, moms, ns, sx, sxx, bank_t, lengths,
+                                  chunks, nvalid, qlens, band=band,
+                                  score=True, vchunks=vchunks,
+                                  vstats=vstats, threshold=threshold)
+
+
+@functools.partial(jax.jit, static_argnames=("band", "threshold",
+                                             "interpret", "block_k"))
+def _scored_kernel_tick_var_approx(rows, moms, ns, sx, sxx, vstats, bank_t,
+                                   lengths, chunks, vchunks, nvalid, qlens,
+                                   band: Optional[int], threshold: float,
+                                   interpret: bool, block_k: int):
+    """Approx variance-carrying Pallas scoring tick in tick (K-last)
+    layout — the four-channel twin of :func:`_scored_kernel_tick_var`
+    (same kernel, one variance slab instead of three, approx tail)."""
+    from ..kernels.dtw import stream_bank_extend_scored_kernel
+    rows_km, moms_km, _ = stream_bank_extend_scored_kernel(
+        rows.transpose(0, 2, 1), moms.transpose(0, 1, 3, 2), ns,
+        bank_t.T, lengths, chunks, nvalid, qlens, band=band,
+        block_k=block_k, interpret=interpret, vchunks=vchunks)
+    new_rows = rows_km.transpose(0, 2, 1)                  # [J, M, K]
+    new_moms = moms_km.transpose(0, 1, 3, 2)               # [4, J, M, K]
+    c = chunks.shape[1]
+    xm = chunks - _MOM_SHIFT
+    vmask = (jnp.arange(c, dtype=jnp.int32)[None, :]
+             < nvalid[:, None]).astype(jnp.float32)
+    sx2 = sx + jnp.sum(xm * vmask, axis=1)
+    sxx2 = sxx + jnp.sum(xm * xm * vmask, axis=1)
+    vq = vchunks * vmask
+    vstats2 = vstats + jnp.stack(
+        [jnp.sum(vq, axis=1), jnp.sum(vq * xm, axis=1),
+         jnp.sum(vq * xm * xm, axis=1)], axis=1)
+    ns2 = ns + nvalid
+    scores = _moment_scores(new_rows, new_moms[:3], ns2, sx2, sxx2,
+                            lengths)
+    probs = _moment_scores_prob_approx(new_rows, new_moms, ns2, sx2, sxx2,
+                                       vstats2, lengths, threshold)
+    return new_rows, new_moms, ns2, sx2, sxx2, scores, vstats2, probs
+
+
+def bank_extend_tick_scored_var_approx_dispatch(
+        rows, moms, ns, sx, sxx, vstats, bank_t, lengths, chunks, vchunks,
+        nvalid, qlens, band: Optional[int] = None, threshold: float = 0.9,
+        use_kernel: Optional[bool] = None,
+        interpret: Optional[bool] = None, block_k: int = 128):
+    """Approx variance-carrying fused scoring tick routed to the best
+    backend (Pallas streaming kernel with FOUR VMEM moment slabs on TPU,
+    jnp wavefront elsewhere) — the serving twin of
+    :func:`bank_extend_tick_scored_var_dispatch`, returning the 8-tuple
+    of :func:`bank_extend_tick_scored_var_approx`."""
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        if interpret is None:
+            from ..kernels.common import default_interpret
+            interpret = default_interpret()
+        return _scored_kernel_tick_var_approx(
+            rows, moms, ns, sx, sxx, vstats, bank_t, lengths, chunks,
+            vchunks, nvalid, qlens, band=band, threshold=threshold,
+            interpret=interpret, block_k=block_k)
+    return bank_extend_tick_scored_var_approx(
+        rows, moms, ns, sx, sxx, vstats, bank_t, lengths, chunks, vchunks,
+        nvalid, qlens, band=band, threshold=threshold)
+
+
 # ---------------------------------------------------------------------------
 # Matrix-free offline scoring: closed-end moment-carrying bank / pairs
 # scorers (the offline mirror of the fused streaming tick)
@@ -1188,7 +1400,8 @@ def _score_tile_many(xs, xlens, bank_km, lengths, sx, sxx,
 
 def _score_tile_var(x, xv, xlen, bank_km, lengths, sx, sxx, sv, svx, svxx,
                     band: Optional[int], threshold: float,
-                    unroll: int = _WAVEFRONT_UNROLL):
+                    unroll: int = _WAVEFRONT_UNROLL,
+                    approx: bool = False):
     """Variance-carrying twin of :func:`_score_tile`: one query [N] with
     per-sample variances ``xv`` [N] vs one reference tile [BK, M] ->
     (scores, probs, dists) [BK].
@@ -1201,6 +1414,12 @@ def _score_tile_var(x, xv, xlen, bank_km, lengths, sx, sxx, sv, svx, svxx,
     variance window is ZERO-sentinel-padded (unlike the _BIG query
     sentinel): out-of-grid reads only feed don't-care cells, and zeros
     can never overflow a moment accumulator.
+
+    ``approx=True`` switches the probability tail to
+    :func:`_prob_from_moments_approx`, fed only (sy, syy, sxy, svy) —
+    bit-identical to a dedicated four-channel carry (the svy channel's
+    path arithmetic is unchanged), so this is the offline calibration
+    reference for the approx serving tick without a second DP variant.
     """
     bk, m = bank_km.shape
     n = x.shape[0]
@@ -1270,24 +1489,32 @@ def _score_tile_var(x, xv, xlen, bank_km, lengths, sx, sxx, sv, svx, svxx,
     mf = Bf + jnp.concatenate([base_d, vme * base_d], axis=0)
     nn = jnp.maximum(xlen, 1).astype(jnp.float32)
     scores = _corr_from_moments(mf[0], mf[1], mf[2], sx, sxx, nn)
-    probs = _prob_from_moments(mf[0], mf[1], mf[2], mf[3], mf[4], mf[5],
-                               sx, sxx, sv, svx, svxx, nn,
-                               jnp.float32(threshold))
+    if approx:
+        probs = _prob_from_moments_approx(mf[0], mf[1], mf[2], mf[3],
+                                          sx, sxx, sv, svx, svxx, nn,
+                                          jnp.float32(threshold))
+    else:
+        probs = _prob_from_moments(mf[0], mf[1], mf[2], mf[3], mf[4],
+                                   mf[5], sx, sxx, sv, svx, svxx, nn,
+                                   jnp.float32(threshold))
     return (jnp.where(xlen > 0, scores, 0.0),
             jnp.where(xlen > 0, probs, 0.0), dist)
 
 
-@functools.partial(jax.jit, static_argnames=("band", "threshold"))
+@functools.partial(jax.jit, static_argnames=("band", "threshold", "approx"))
 def _score_tile_var_many(xs, xvs, xlens, bank_km, lengths, sx, sxx,
-                         vstats, band: Optional[int], threshold: float):
+                         vstats, band: Optional[int], threshold: float,
+                         approx: bool = False):
     """J queries (with variances) x one reference tile ->
     (scores, probs, dists) [J, BK]; the variance-mode column of
-    :func:`_score_tile_many` (``lax.map`` over jobs, [7, BK, M] slabs)."""
+    :func:`_score_tile_many` (``lax.map`` over jobs, [7, BK, M] slabs).
+    ``approx`` selects the single-proxy probability tail."""
 
     def one_job(args):
         x, xv, xlen, sxj, sxxj, vst = args
         return _score_tile_var(x, xv, xlen, bank_km, lengths, sxj, sxxj,
-                               vst[0], vst[1], vst[2], band, threshold)
+                               vst[0], vst[1], vst[2], band, threshold,
+                               approx=approx)
 
     return jax.lax.map(one_job, (xs, xvs, xlens, sx, sxx, vstats))
 
@@ -1639,6 +1866,7 @@ def dtw_score_bank_many(xs, bank, lengths=None, xlens=None,
                         sx=None, sxx=None, *,
                         xvars=None, vstats=None,
                         threshold: float = 0.9,
+                        prob_mode: str = "exact",
                         plan: Optional[ScoreBankPlan] = None,
                         use_kernel: Optional[bool] = None,
                         interpret: Optional[bool] = None,
@@ -1663,6 +1891,10 @@ def dtw_score_bank_many(xs, bank, lengths=None, xlens=None,
     P[true warp correlation >= ``threshold``] per
     :func:`_prob_from_moments` — all-zero ``xvars`` reduces ``probs``
     to the point rule ``scores >= threshold`` exactly.
+    ``prob_mode="approx"`` swaps in the single-proxy
+    :func:`_prob_from_moments_approx` tail (the serving tick's
+    probability model) — the calibration reference for pinning approx
+    against exact offline; verdict paths keep the default exact tail.
 
     Routed to the Pallas offline kernel (``kernels.dtw.score``) on TPU
     backends — DP row and moment slabs pinned in VMEM per (query,
@@ -1695,6 +1927,9 @@ def dtw_score_bank_many(xs, bank, lengths=None, xlens=None,
                 [query_var_moments(xs[i, :xlens[i]], xvars[i, :xlens[i]])
                  for i in range(j)], np.float32)
         vstats = np.asarray(vstats, np.float32)
+    if prob_mode not in ("exact", "approx"):
+        raise ValueError(f"prob_mode must be 'exact' or 'approx', "
+                         f"got {prob_mode!r}")
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
     if k == 0:
@@ -1707,8 +1942,13 @@ def dtw_score_bank_many(xs, bank, lengths=None, xlens=None,
             if interpret is None:
                 from ..kernels.common import default_interpret
                 interpret = default_interpret()
-            from ..kernels.dtw import score_bank_offline_var_kernel
-            scores, probs, dists = score_bank_offline_var_kernel(
+            if prob_mode == "approx":
+                from ..kernels.dtw import \
+                    score_bank_offline_var_approx_kernel as var_kernel
+            else:
+                from ..kernels.dtw import \
+                    score_bank_offline_var_kernel as var_kernel
+            scores, probs, dists = var_kernel(
                 jnp.asarray(xs), jnp.asarray(xvars), jnp.asarray(xlens),
                 jnp.asarray(series), jnp.asarray(lengths),
                 jnp.asarray(sx), jnp.asarray(sxx), jnp.asarray(vstats),
@@ -1729,7 +1969,8 @@ def dtw_score_bank_many(xs, bank, lengths=None, xlens=None,
                     jnp.asarray(xs[lo:hi]), jnp.asarray(xvars[lo:hi]),
                     jnp.asarray(xlens[lo:hi]), tb, tl,
                     jnp.asarray(sx[lo:hi]), jnp.asarray(sxx[lo:hi]),
-                    jnp.asarray(vstats[lo:hi]), band, float(threshold))
+                    jnp.asarray(vstats[lo:hi]), band, float(threshold),
+                    approx=prob_mode == "approx")
                 for tb, tl in plan.tiles])
         jax.block_until_ready(parts)
         scores, probs, dists = (np.concatenate(

@@ -35,7 +35,8 @@ from jax.experimental import pallas as pl
 from .stream import _INF, _MOM_SHIFT, _fill_from_anchor, _minplus_scan2
 
 __all__ = ["score_bank_offline_kernel", "score_bank_offline",
-           "score_bank_offline_var_kernel"]
+           "score_bank_offline_var_kernel",
+           "score_bank_offline_var_approx_kernel"]
 
 
 def _score_kernel(xlen_ref, sx_ref, sxx_ref, x_ref, len_ref, bank_ref,
@@ -178,13 +179,21 @@ def score_bank_offline(xs, xlens, bank, lengths, sx, sxx,
 def _score_var_kernel(xlen_ref, sx_ref, sxx_ref, vstats_ref, x_ref, vx_ref,
                       len_ref, bank_ref, score_ref, prob_ref, dist_ref, *,
                       n: int, m: int, band: Optional[int],
-                      threshold: float):
+                      threshold: float, approx: bool = False):
     """Variance-carrying twin of :func:`_score_kernel`: six moment slabs
     ([6, BK, M]: sy, syy, sxy, svy, svyy, svxy — each variance channel's
     delta is ``v_i *`` the matching base delta) plus an in-kernel
     probabilistic reduction (``core.dtw._prob_from_moments``, the single
-    shared probability tail) beside the point score."""
-    from ...core.dtw import _corr_from_moments, _prob_from_moments
+    shared probability tail) beside the point score.
+
+    ``approx=True`` is the calibration twin of the approx serving tick:
+    FOUR slabs (only svy rides beside the base three) and the
+    ``core.dtw._prob_from_moments_approx`` reduction — the offline
+    oracle the approx tick's probabilities are pinned against."""
+    from ...core.dtw import (_corr_from_moments, _prob_from_moments,
+                             _prob_from_moments_approx)
+
+    nch = 4 if approx else 6
 
     xlen = xlen_ref[0]
     x = x_ref[0]                                   # [N]
@@ -219,31 +228,38 @@ def _score_var_kernel(xlen_ref, sx_ref, sxx_ref, vstats_ref, x_ref, vx_ref,
         sel_vert = jnp.logical_and(~sel_diag, p_vert <= p_horiz)
         anch = jnp.logical_or(sel_diag, sel_vert)
         m_diag = jnp.concatenate(
-            [jnp.zeros((6, bk, 1), moms.dtype), moms[:, :, :-1]], axis=2)
+            [jnp.zeros((nch, bk, 1), moms.dtype), moms[:, :, :-1]], axis=2)
         base = jnp.where(sel_diag[None], m_diag,
                          jnp.where(sel_vert[None], moms, 0.0))
         base = _fill_from_anchor(base, anch, m)
         xm = x[i] - _MOM_SHIFT
         dm = jnp.stack([yc, yy, xm * yc])
-        new_moms = base + jnp.concatenate([dm, xv[i] * dm], axis=0)
+        new_moms = base + jnp.concatenate([dm, xv[i] * dm[:nch - 3]],
+                                          axis=0)
         valid = i < xlen
         return (jnp.where(valid, new, row),
                 jnp.where(valid, new_moms, moms))
 
     row0 = jnp.full((bk, m), _INF, jnp.float32)
-    moms0 = jnp.zeros((6, bk, m), jnp.float32)
+    moms0 = jnp.zeros((nch, bk, m), jnp.float32)
     row, moms = jax.lax.fori_loop(0, n, body, (row0, moms0))
 
     onehot = jj[None, :] == (lens - 1)[:, None]              # [BK, M]
     dist = jnp.sum(jnp.where(onehot, row, 0.0), axis=1)
-    msel = jnp.sum(jnp.where(onehot[None], moms, 0.0), axis=2)  # [6, BK]
+    msel = jnp.sum(jnp.where(onehot[None], moms, 0.0), axis=2)  # [nch, BK]
     nn = jnp.maximum(xlen, 1).astype(jnp.float32)
     scores = _corr_from_moments(msel[0], msel[1], msel[2], sx_ref[0],
                                 sxx_ref[0], nn)
-    probs = _prob_from_moments(
-        msel[0], msel[1], msel[2], msel[3], msel[4], msel[5],
-        sx_ref[0], sxx_ref[0], vstats_ref[0, 0], vstats_ref[0, 1],
-        vstats_ref[0, 2], nn, jnp.float32(threshold))
+    if approx:
+        probs = _prob_from_moments_approx(
+            msel[0], msel[1], msel[2], msel[3],
+            sx_ref[0], sxx_ref[0], vstats_ref[0, 0], vstats_ref[0, 1],
+            vstats_ref[0, 2], nn, jnp.float32(threshold))
+    else:
+        probs = _prob_from_moments(
+            msel[0], msel[1], msel[2], msel[3], msel[4], msel[5],
+            sx_ref[0], sxx_ref[0], vstats_ref[0, 0], vstats_ref[0, 1],
+            vstats_ref[0, 2], nn, jnp.float32(threshold))
     score_ref[0] = jnp.where(xlen > 0, scores, 0.0)
     prob_ref[0] = jnp.where(xlen > 0, probs, 0.0)
     dist_ref[0] = dist
@@ -251,14 +267,14 @@ def _score_var_kernel(xlen_ref, sx_ref, sxx_ref, vstats_ref, x_ref, vx_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("band", "threshold", "block_k",
-                                    "interpret"))
+                                    "interpret", "approx"))
 def _score_var_call(xs, xvars, xlens, bank, lengths, sx, sxx, vstats,
                     band: Optional[int], threshold: float, block_k: int,
-                    interpret: bool):
+                    interpret: bool, approx: bool = False):
     j, n = xs.shape
     k, m = bank.shape
     kernel = functools.partial(_score_var_kernel, n=n, m=m, band=band,
-                               threshold=threshold)
+                               threshold=threshold, approx=approx)
     scores, probs, dists = pl.pallas_call(
         kernel,
         grid=(j, k // block_k),
@@ -292,7 +308,8 @@ def score_bank_offline_var_kernel(xs, xvars, xlens, bank, lengths, sx,
                                   band: Optional[int] = None,
                                   threshold: float = 0.9,
                                   block_k: int = 128,
-                                  interpret: bool = True):
+                                  interpret: bool = True,
+                                  approx: bool = False):
     """Closed-end scores + match probabilities + endpoint distances of J
     uncertain queries vs the whole bank — one pallas_call.
 
@@ -300,6 +317,8 @@ def score_bank_offline_var_kernel(xs, xvars, xlens, bank, lengths, sx,
     variances and ``vstats`` [J, 3] = (sv, svx, svxx) folds
     (``core.dtw.query_var_moments``) -> (scores, probs, dists) [J, K],
     with ``probs`` = P[true warp correlation >= ``threshold``].
+    ``approx=True`` runs the four-slab single-proxy variant (see
+    :func:`score_bank_offline_var_approx_kernel`).
     """
     xs = jnp.asarray(xs, jnp.float32)
     xvars = jnp.asarray(xvars, jnp.float32)
@@ -319,5 +338,22 @@ def score_bank_offline_var_kernel(xs, xvars, xlens, bank, lengths, sx,
             [lengths, jnp.ones((pad,), jnp.int32)], axis=0)
     scores, probs, dists = _score_var_call(
         xs, xvars, xlens, bank, lengths, sx, sxx, vstats, band,
-        float(threshold), bk, interpret)
+        float(threshold), bk, interpret, approx=approx)
     return scores[:, :k], probs[:, :k], dists[:, :k]
+
+
+def score_bank_offline_var_approx_kernel(xs, xvars, xlens, bank, lengths,
+                                         sx, sxx, vstats,
+                                         band: Optional[int] = None,
+                                         threshold: float = 0.9,
+                                         block_k: int = 128,
+                                         interpret: bool = True):
+    """Approx-tail offline scorer: FOUR moment slabs (sy, syy, sxy, svy)
+    and the ``core.dtw._prob_from_moments_approx`` reduction — the
+    calibration harness's offline oracle for the approx serving tick
+    (the verdict path keeps :func:`score_bank_offline_var_kernel`).
+    Same signature and returns as the exact variant."""
+    return score_bank_offline_var_kernel(
+        xs, xvars, xlens, bank, lengths, sx, sxx, vstats, band=band,
+        threshold=threshold, block_k=block_k, interpret=interpret,
+        approx=True)

@@ -140,13 +140,17 @@ def _stream_scored_kernel(ns_ref, nv_ref, ql_ref, x_ref, *refs, c: int,
     [BK, M] DP row slice AND its [3, BK, M] warp-path moment slabs by up
     to ``c`` samples, entirely in VMEM.
 
-    ``variance=True`` doubles the slab to [6, BK, M] (sy, syy, sxy, svy,
-    svyy, svxy) and takes an extra per-sample variance ref right after
-    the chunk ref: each variance channel's delta is ``v_i *`` the
-    matching base channel's delta, so the identical anchored
-    forward-fill carries all six (channels 0..2 arithmetic is untouched
-    — bit-identity with the three-channel kernel and the jnp wavefront
-    is preserved).
+    ``variance=True`` grows the slab and takes an extra per-sample
+    variance ref right after the chunk ref: each variance channel's
+    delta is ``v_i *`` the matching base channel's delta, so the
+    identical anchored forward-fill carries them all (channels 0..2
+    arithmetic is untouched — bit-identity with the three-channel
+    kernel and the jnp wavefront is preserved).  Exact mode twins all
+    three base channels ([6, BK, M]: sy, syy, sxy, svy, svyy, svxy);
+    approx mode twins only sy ([4, BK, M]: ..., svy — the serving
+    tick's single σ²-proxy, see ``core.dtw._prob_from_moments_approx``).
+    The channel count is read off the slab shape, so ONE kernel serves
+    both.
 
     Rows are clamped at ``_INF`` each update (like the wavefront jnp twin)
     so predecessor selection ties resolve identically in saturated
@@ -207,7 +211,10 @@ def _stream_scored_kernel(ns_ref, nv_ref, ql_ref, x_ref, *refs, c: int,
         xm = x[i] - _MOM_SHIFT
         dm = jnp.stack([yc, yy, xm * yc])
         if variance:
-            dm = jnp.concatenate([dm, vx[i] * dm], axis=0)
+            # exact mode twins all three base deltas (6 channels);
+            # approx mode only sy (4 channels) — shape-driven.
+            dm = jnp.concatenate(
+                [dm, vx[i] * dm[:moms.shape[0] - 3]], axis=0)
         new_moms = base + dm
         valid = i < nv
         return (jnp.where(valid, new, row),
@@ -353,7 +360,9 @@ def stream_bank_extend_scored_kernel(rows, moms, ns, bank, lengths, chunks,
     :func:`stream_bank_extend_kernel`.  Returns ``(rows, moms, ns)`` with
     the same layouts.  Variance mode: pass ``vchunks`` [J, C] per-sample
     variances with a SIX-channel ``moms`` [6, J, K, M] (sy, syy, sxy,
-    svy, svyy, svxy) — the extra slabs ride the same VMEM row-scan.  The
+    svy, svyy, svxy) for the exact tail, or a FOUR-channel [4, J, K, M]
+    (sy, syy, sxy, svy) for the approx serving tick — the extra slabs
+    ride the same VMEM row-scan.  The
     open-end score reduction over the returned slabs lives in
     ``core.dtw`` (``bank_extend_tick_scored[_var]_dispatch``) so the
     moment semantics stay defined in exactly one place.
@@ -368,9 +377,10 @@ def stream_bank_extend_scored_kernel(rows, moms, ns, bank, lengths, chunks,
     lengths = jnp.asarray(lengths, jnp.int32)
     if vchunks is not None:
         vchunks = jnp.asarray(vchunks, jnp.float32)
-        if moms.shape[0] != 6:
-            raise ValueError("variance mode needs a six-channel moment "
-                             f"slab, got {moms.shape[0]} channels")
+        if moms.shape[0] not in (4, 6):
+            raise ValueError("variance mode needs a six-channel (exact) "
+                             "or four-channel (approx) moment slab, got "
+                             f"{moms.shape[0]} channels")
     j, k, m = rows.shape
     nch = moms.shape[0]
     bk = min(block_k, k)

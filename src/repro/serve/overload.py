@@ -24,18 +24,29 @@ The ladder (rungs, in escalation order)
 rung  name             effect on the tick engine
 ====  ===============  ====================================================
 0     normal           full prob-scored tick (6 moment channels + vstats)
-1     exact_score      exact scored tick only — variance channels go stale,
+1     approx_prob      approximate probability tick — 4 moment channels
+                       (one carried variance channel, the remaining tail
+                       reconstructed at the score tail, ~1.3x a scored
+                       tick instead of ~2x).  The ladder sheds probability
+                       *precision* here before it sheds probabilities
+                       entirely: probabilities keep flowing but early
+                       decisions are suppressed for exact-mode services
+                       (``degraded_level=1`` on jobs ticked here).
+                       Services configured with ``prob_mode="approx"``
+                       already run this tick as their base mode and are
+                       unaffected by this rung.
+2     exact_score      exact scored tick only — variance channels go stale,
                        probability-gated early decisions suppressed
                        (``degraded_level=1`` on jobs ticked here)
-2     distance_only    distance-only tick — all moment channels stale, no
+3     distance_only    distance-only tick — all moment channels stale, no
                        early decisions for jobs ticked here
                        (``degraded_level=2``); final verdicts recomputed
                        offline from the full query, bitwise unchanged
-3     deep_prune       ``prefilter_top`` halved — fewer live references
+4     deep_prune       ``prefilter_top`` halved — fewer live references
                        per tick (DTW veto still applies)
-4     slow_cohorts     ``TickCohorts`` re-arm intervals stretched by
+5     slow_cohorts     ``TickCohorts`` re-arm intervals stretched by
                        ``cohort_scale`` — jobs tick less often
-5     reject           admission pressure pinned to 1.0 — every submit
+6     reject           admission pressure pinned to 1.0 — every submit
                        sheds regardless of QoS
 ====  ===============  ====================================================
 
@@ -103,8 +114,9 @@ __all__ = ["RUNGS", "AdmissionController", "AdmissionPolicy",
            "AdmissionShedError", "OverloadConfig", "OverloadController"]
 
 #: Ladder rungs in escalation order (see the runbook table above).
-RUNGS: Tuple[str, ...] = ("normal", "exact_score", "distance_only",
-                          "deep_prune", "slow_cohorts", "reject")
+RUNGS: Tuple[str, ...] = ("normal", "approx_prob", "exact_score",
+                          "distance_only", "deep_prune", "slow_cohorts",
+                          "reject")
 
 
 class AdmissionShedError(BackpressureError):
@@ -131,7 +143,7 @@ class OverloadConfig:
     escalates after ``patience`` consecutive observations whose EWMA'd
     window-p99 exceeds it, and de-escalates after ``cooldown``
     consecutive calm observations.  ``cohort_scale`` is the tick-rate
-    stretch applied at rung >= 4."""
+    stretch applied at rung >= 5."""
 
     target_p99: float = 0.25
     window: int = 32
@@ -210,23 +222,25 @@ class OverloadController:
     @property
     def tick_mode_cap(self) -> str:
         """Most expensive tick mode the current rung allows:
-        ``"prob"`` (rung 0), ``"scored"`` (rung 1) or ``"distance"``
-        (rung >= 2)."""
+        ``"prob"`` (rung 0), ``"approx_prob"`` (rung 1), ``"scored"``
+        (rung 2) or ``"distance"`` (rung >= 3)."""
         if self.rung == 0:
             return "prob"
         if self.rung == 1:
+            return "approx_prob"
+        if self.rung == 2:
             return "scored"
         return "distance"
 
     @property
     def prefilter_divisor(self) -> int:
-        """Divide ``prefilter_top`` by this (rung >= 3 prunes deeper)."""
-        return 2 if self.rung >= 3 else 1
+        """Divide ``prefilter_top`` by this (rung >= 4 prunes deeper)."""
+        return 2 if self.rung >= 4 else 1
 
     @property
     def cohort_scale(self) -> float:
         """Stretch factor for ``TickCohorts`` re-arm intervals."""
-        return self.config.cohort_scale if self.rung >= 4 else 1.0
+        return self.config.cohort_scale if self.rung >= 5 else 1.0
 
     def pressure(self) -> float:
         """Scalar overload pressure in [0, 1] for admission and

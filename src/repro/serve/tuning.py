@@ -83,6 +83,27 @@ decisions reduce bitwise to the point rule.  The exact tick's compiled
 graph is untouched when the mode is off (separate jitted entry
 points).
 
+Two probability tails share that machinery (``prob_mode=``):
+
+* ``"exact"`` (default) — the six-channel slab above.  This is the tail
+  that VERDICTS: :meth:`finish` / :meth:`finish_many` always recompute
+  final probabilities offline through the exact six-channel scorer,
+  whatever mode served the ticks, so verdict probabilities are bitwise
+  independent of ``prob_mode``.
+* ``"approx"`` — the tail that SERVES under tight tick budgets: the
+  slab carries ONE variance channel (svy, the path-accumulated sigma^2
+  proxy) beside (sy, syy, sxy), and the score tail reconstructs
+  svyy/svxy from the per-slot (sv, svx, svxx) folds
+  (``core.dtw._prob_from_moments_approx``), cutting per-cell slab
+  traffic from 7 channels to 5 (~1.3x a scored tick instead of ~2x).
+  In-flight probabilities sit within a small tolerance band of the
+  exact tail (pinned by the calibration tests/bench) and reduce
+  BITWISE to it at zero input variance; early decisions gate on the
+  approx probability, final verdicts stay exact.  The overload ladder
+  exposes the same trade as a rung: an exact-mode service capped at
+  ``approx_prob`` keeps shipping (approximate) probabilities instead
+  of losing them entirely (see ``serve.overload``).
+
 Verdicts
 --------
 :meth:`TuningService.finish` recomputes the final verdict offline from
@@ -216,7 +237,13 @@ class TuningService:
     early decision and the final verdict on the leader's calibrated match
     probability instead of its point correlation (``threshold`` keeps its
     role as the correlation level the probability is calibrated
-    against).  ``score_in_flight=False`` is the
+    against).  ``prob_mode="approx"`` (requires ``min_probability=``)
+    serves the IN-FLIGHT probability through the four-channel
+    approximate tail — ~1.3x a scored tick instead of ~2x, probabilities
+    within a calibrated tolerance band of exact — while :meth:`finish` /
+    :meth:`finish_many` verdicts stay on the exact six-channel tail,
+    bitwise unchanged (see the module docstring's "Two probability
+    tails").  ``score_in_flight=False`` is the
     distance-only throughput mode: the tick skips the fused scoring (so no
     early decisions; :meth:`finish` still renders the offline verdict) and
     carries no moment slabs — marginally cheaper at very large K.
@@ -263,6 +290,7 @@ class TuningService:
                  band: Optional[int] = None,
                  threshold: float = MATCH_THRESHOLD,
                  min_probability: Optional[float] = None,
+                 prob_mode: str = "exact",
                  margin: float = 0.02, stable_ticks: int = 3,
                  min_fraction: float = 0.15, slots: int = 8,
                  denoise: bool = False,
@@ -306,9 +334,17 @@ class TuningService:
                 raise ValueError("min_probability needs "
                                  "score_in_flight=True (the probability "
                                  "rides the fused scoring tick)")
+        if prob_mode not in ("exact", "approx"):
+            raise ValueError("prob_mode must be 'exact' or 'approx', got "
+                             f"{prob_mode!r}")
+        if prob_mode == "approx" and min_probability is None:
+            raise ValueError("prob_mode='approx' needs min_probability= "
+                             "(the approximate tail serves the in-flight "
+                             "probability gate)")
         self.band = band
         self.threshold = threshold
         self.min_probability = min_probability
+        self.prob_mode = prob_mode
         self.margin = margin
         self.stable_ticks = stable_ticks
         self.min_fraction = min_fraction
@@ -361,7 +397,8 @@ class TuningService:
         # re-supplied at restore).
         self._config: Dict[str, object] = dict(
             band=band, threshold=threshold,
-            min_probability=min_probability, margin=margin,
+            min_probability=min_probability, prob_mode=prob_mode,
+            margin=margin,
             stable_ticks=stable_ticks, min_fraction=min_fraction,
             slots=slots, denoise=denoise, score_in_flight=score_in_flight,
             prefilter_top=prefilter_top, prefilter_margin=prefilter_margin,
@@ -547,7 +584,10 @@ class TuningService:
             self._rows = self._put(
                 np.full((self._s_cap, m, kp), float(_dtw._INF), np.float32),
                 (None, None, axis))
-            nch = 6 if self.min_probability is not None else 3
+            if self.min_probability is None:
+                nch = 3
+            else:
+                nch = 4 if self.prob_mode == "approx" else 6
             self._moms = self._put(
                 np.zeros((nch, self._s_cap, m, kp), np.float32),
                 (None, None, None, axis)) if self.score_in_flight else None
@@ -782,21 +822,25 @@ class TuningService:
 
     # -- tick compilation ----------------------------------------------------
     def _base_mode(self) -> str:
-        """The configured (unloaded) tick mode: ``"prob"``, ``"scored"``
-        or ``"distance"``."""
+        """The configured (unloaded) tick mode: ``"prob"`` (exact
+        6-channel probabilities), ``"approx_prob"`` (the 4-channel
+        approximate tail — ``prob_mode="approx"``), ``"scored"`` or
+        ``"distance"``."""
         if self.min_probability is not None:
-            return "prob"
+            return "approx_prob" if self.prob_mode == "approx" else "prob"
         return "scored" if self.score_in_flight else "distance"
 
     def _tick_mode(self) -> str:
         """Effective tick mode this tick: the configured mode, capped by
         the overload ladder's current rung (a cap can only ever be
         CHEAPER than the configured mode — ``min`` over the expense
-        order, so a distance-only service is never upgraded)."""
+        order, so a distance-only service is never upgraded and an
+        approx-probability service is never promoted to the exact
+        tail)."""
         base = self._base_mode()
         if self._overload is None:
             return base
-        order = {"prob": 0, "scored": 1, "distance": 2}
+        order = {"prob": 0, "approx_prob": 1, "scored": 2, "distance": 3}
         cap = self._overload.tick_mode_cap
         return cap if order[cap] > order[base] else base
 
@@ -816,12 +860,13 @@ class TuningService:
         per-reference quantity, so the fan-out computes disjoint K slices
         and the [S, K] score gather is the only cross-device output.
 
-        ``mode`` selects the dispatch flavor (``"prob"`` / ``"scored"`` /
-        ``"distance"``): the configured mode in an unloaded service, or a
-        cheaper ladder rung's flavor under overload (every flavor updates
-        the DP rows identically — same warp-path predecessor selection —
-        so a degraded tick leaves the rows bitwise what the full tick
-        would have computed and only side channels go stale).
+        ``mode`` selects the dispatch flavor (``"prob"`` /
+        ``"approx_prob"`` / ``"scored"`` / ``"distance"``): the
+        configured mode in an unloaded service, or a cheaper ladder
+        rung's flavor under overload (every flavor updates the DP rows
+        identically — same warp-path predecessor selection — so a
+        degraded tick leaves the rows bitwise what the full tick would
+        have computed and only side channels go stale).
 
         Returns ``(tick_fn, fallback_fn_or_None)``.  On the unsharded
         paths the fallback is the same dispatch pinned to the jnp
@@ -855,6 +900,43 @@ class TuningService:
             P = jax.sharding.PartitionSpec
             return jax.jit(_shard_map(
                 inner_var, mesh=self.mesh,
+                in_specs=(P(None, None, axis),
+                          P(None, None, None, axis),
+                          P(), P(), P(), P(None, None), P(None, axis),
+                          P(axis), P(), P(), P(), P()),
+                out_specs=(P(None, None, axis),
+                           P(None, None, None, axis),
+                           P(), P(), P(), P(None, axis),
+                           P(None, None), P(None, axis)))), None
+        if mode == "approx_prob":
+            threshold = float(self.threshold)
+            if self.mesh is None:
+                # approximate-tail twin: FOUR moment slabs (sy, syy,
+                # sxy, svy) through the same kernel machinery; svyy and
+                # svxy are reconstructed at the score tail from the
+                # per-slot variance folds (core.dtw's
+                # _prob_from_moments_approx), trading a tolerance-band
+                # probability error for ~2 fewer slab channels per
+                # cell.  Separate entry point: neither the exact prob
+                # graph nor the scored graph is touched.
+                return (functools.partial(
+                    _dtw.bank_extend_tick_scored_var_approx_dispatch,
+                    band=band, threshold=threshold),
+                    functools.partial(
+                        _dtw.bank_extend_tick_scored_var_approx_dispatch,
+                        band=band, threshold=threshold,
+                        use_kernel=False))
+
+            def inner_approx(rows, moms, ns, sx, sxx, vstats, bank_t,
+                             lengths, chunks, vchunks, nvalid, qlens):
+                return _dtw._bank_extend_diag_impl(
+                    rows, moms, ns, sx, sxx, bank_t, lengths, chunks,
+                    nvalid, qlens, band=band, score=True,
+                    vchunks=vchunks, vstats=vstats,
+                    threshold=threshold)
+            P = jax.sharding.PartitionSpec
+            return jax.jit(_shard_map(
+                inner_approx, mesh=self.mesh,
                 in_specs=(P(None, None, axis),
                           P(None, None, None, axis),
                           P(), P(), P(), P(None, None), P(None, axis),
@@ -1270,13 +1352,45 @@ class TuningService:
             probs_all = np.zeros((self._s_cap, self._k))
             probs_all[:, self._packed_idx] = \
                 np.asarray(probs, np.float64)[:, :k_live]
+        elif mode == "approx_prob":
+            # the approx tail needs only channels 0:4 (sy, syy, sxy,
+            # svy).  An approx-configured service carries exactly those
+            # four; an exact-configured service capped to this rung
+            # dispatches over the first four of its six — svyy/svxy
+            # stay stale (degraded_level=1 suppresses early decisions),
+            # but probabilities keep flowing: the rung sheds precision,
+            # not probabilities.
+            moms_in = self._moms[:4] if base == "prob" else self._moms
+            args = (self._rows, moms_in, self._ns, self._sx, self._sxx,
+                    self._vstats, self._bank_t, self._lengths,
+                    jnp.asarray(chunks), jnp.asarray(vchunks),
+                    jnp.asarray(nvalid), jnp.asarray(self._qlens))
+            (self._rows, moms_out, self._ns, self._sx, self._sxx,
+             scores, self._vstats, probs) = self._dispatch_resilient(
+                lambda: tick_fn(*args),
+                (lambda: tick_fb(*args))
+                if tick_fb is not None else None, "tick")
+            if base == "prob":
+                self._moms = self._put(
+                    jnp.concatenate([moms_out, self._moms[4:]], axis=0),
+                    (None, None, None, self._axis))
+            else:
+                self._moms = moms_out
+            sims_all = np.full((self._s_cap, self._k), -np.inf)
+            sims_all[:, self._packed_idx] = \
+                np.asarray(scores, np.float64)[:, :k_live]
+            probs_all = np.zeros((self._s_cap, self._k))
+            probs_all[:, self._packed_idx] = \
+                np.asarray(probs, np.float64)[:, :k_live]
         elif mode == "scored":
             # a prob-configured service ticking at the exact_score rung
             # runs the 3-channel dispatch over channels 0:3 of its
-            # 6-channel slab; the variance channels (and vstats) simply
-            # stay what they were — stale, never wrong-and-used, because
-            # degraded_level >= 1 suppresses every probability read.
-            moms_in = self._moms[:3] if base == "prob" else self._moms
+            # moment slab (6 channels exact, 4 approx); the variance
+            # channels (and vstats) simply stay what they were — stale,
+            # never wrong-and-used, because degraded_level >= 1
+            # suppresses every probability read.
+            moms_in = self._moms[:3] \
+                if base in ("prob", "approx_prob") else self._moms
             args = (self._rows, moms_in, self._ns, self._sx, self._sxx,
                     self._bank_t, self._lengths, jnp.asarray(chunks),
                     jnp.asarray(nvalid), jnp.asarray(self._qlens))
@@ -1285,7 +1399,7 @@ class TuningService:
                 lambda: tick_fn(*args),
                 (lambda: tick_fb(*args))
                 if tick_fb is not None else None, "tick")
-            if base == "prob":
+            if base in ("prob", "approx_prob"):
                 self._moms = self._put(
                     jnp.concatenate([moms_out, self._moms[3:]], axis=0),
                     (None, None, None, self._axis))

@@ -508,3 +508,266 @@ def test_score_bank_many_var_jnp_vs_kernel():
     np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
     p = np.asarray(a[1])
     assert np.isfinite(p).all() and (p >= 0).all() and (p <= 1).all()
+
+# ---------------------------------------------------------------------------
+# Approximate-tail (4-channel) variance DP
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("band,block_k", [(None, 128), (6, 128), (None, 4),
+                                          (6, 4)])
+def test_stream_scored_var_approx_kernel_cell_by_cell(band, block_k):
+    """Approx-mode (FOUR moment channels) Pallas streaming kernel == the
+    jnp variance wavefront on every cell — DP rows, all four slabs, the
+    (sv, svx, svxx) folds, scores and approx probs — across ragged
+    banks, bands, ragged chunks and tile padding; exact on dyadic
+    grids."""
+    import jax.numpy as jnp
+    from repro.core import dtw as _dtw
+
+    rng = np.random.default_rng(53 if band is None else band + block_k)
+    bank = _var_bank(rng)
+    k, m = bank.series.shape
+    J, C = 3, 8
+    qlens = jnp.full((J,), 4 * C, jnp.int32)
+    bank_t = jnp.asarray(bank.series.T)
+    lengths = jnp.asarray(bank.lengths)
+    rows_w = jnp.full((J, m, k), _dtw._INF)
+    moms_w = jnp.zeros((4, J, m, k))
+    ns_w = jnp.zeros((J,), jnp.int32)
+    sx_w = jnp.zeros((J,))
+    sxx_w = jnp.zeros((J,))
+    vst_w = jnp.zeros((J, 3))
+    state_p = (rows_w, moms_w, ns_w, sx_w, sxx_w, vst_w)
+    state_w = state_p
+    for _ in range(4):
+        nv = jnp.asarray(rng.integers(0, C + 1, size=J).astype(np.int32))
+        ch = jnp.asarray((rng.integers(0, 9, (J, C)) / 8.0)
+                         .astype(np.float32))
+        vch = jnp.asarray((rng.integers(0, 5, (J, C)) / 64.0)
+                          .astype(np.float32))
+        *state_w, sc_w, vw, pr_w = _dtw.bank_extend_tick_scored_var_approx(
+            state_w[0], state_w[1], state_w[2], state_w[3], state_w[4],
+            state_w[5], bank_t, lengths, ch, vch, nv, qlens, band=band,
+            threshold=0.85)
+        state_w = state_w[:5] + [vw]
+        *state_p, sc_p, vp, pr_p = \
+            _dtw.bank_extend_tick_scored_var_approx_dispatch(
+                state_p[0], state_p[1], state_p[2], state_p[3], state_p[4],
+                state_p[5], bank_t, lengths, ch, vch, nv, qlens, band=band,
+                threshold=0.85, use_kernel=True, interpret=True,
+                block_k=block_k)
+        state_p = state_p[:5] + [vp]
+        rp, rw = np.asarray(state_p[0]), np.asarray(state_w[0])
+        finite = rw < 1e37
+        assert (finite == (rp < 1e37)).all()
+        np.testing.assert_array_equal(rp[finite], rw[finite])
+        mp, mw = np.asarray(state_p[1]), np.asarray(state_w[1])
+        fin4 = np.broadcast_to(finite[None], mp.shape)
+        np.testing.assert_array_equal(mp[fin4], mw[fin4])
+        np.testing.assert_array_equal(np.asarray(sc_p), np.asarray(sc_w))
+        np.testing.assert_array_equal(np.asarray(pr_p), np.asarray(pr_w))
+        np.testing.assert_array_equal(np.asarray(vp), np.asarray(vw))
+    np.testing.assert_array_equal(np.asarray(state_p[2]),
+                                  np.asarray(state_w[2]))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_stream_var_approx_zero_variance_reduces_bitwise(use_kernel):
+    """With all-zero per-sample variances the APPROX tick's rows, base
+    moment slabs and scores are BIT-IDENTICAL to the exact scored
+    tick's, every probability is exactly 0.0 or 1.0 with
+    ``prob == 1 <=> score >= threshold`` — and the probs are bitwise
+    equal to the exact six-channel variance tick's (the approx tail
+    reduces to the same point rule, not just the same set)."""
+    import jax.numpy as jnp
+    from repro.core import dtw as _dtw
+
+    rng = np.random.default_rng(59)
+    bank = _var_bank(rng)
+    k, m = bank.series.shape
+    J, C = 3, 8
+    qlens = jnp.full((J,), 4 * C, jnp.int32)
+    bank_t = jnp.asarray(bank.series.T)
+    lengths = jnp.asarray(bank.lengths)
+    rows_e = jnp.full((J, m, k), _dtw._INF)
+    moms_e = jnp.zeros((3, J, m, k))
+    ns_e = jnp.zeros((J,), jnp.int32)
+    sx_e = jnp.zeros((J,))
+    sxx_e = jnp.zeros((J,))
+    rows_a, moms_a = rows_e, jnp.zeros((4, J, m, k))
+    ns_a, sx_a, sxx_a = ns_e, sx_e, sxx_e
+    vst_a = jnp.zeros((J, 3))
+    rows_v, moms_v = rows_e, jnp.zeros((6, J, m, k))
+    ns_v, sx_v, sxx_v, vst_v = ns_e, sx_e, sxx_e, vst_a
+    thr = 0.85
+    for _ in range(4):
+        nv = jnp.asarray(rng.integers(0, C + 1, size=J).astype(np.int32))
+        ch = jnp.asarray((rng.integers(0, 9, (J, C)) / 8.0)
+                         .astype(np.float32))
+        vch = jnp.zeros((J, C))
+        rows_e, moms_e, ns_e, sx_e, sxx_e, sc_e = \
+            _dtw.bank_extend_tick_scored(rows_e, moms_e, ns_e, sx_e,
+                                         sxx_e, bank_t, lengths, ch, nv,
+                                         qlens, band=6)
+        (rows_a, moms_a, ns_a, sx_a, sxx_a, sc_a, vst_a,
+         pr_a) = _dtw.bank_extend_tick_scored_var_approx_dispatch(
+            rows_a, moms_a, ns_a, sx_a, sxx_a, vst_a, bank_t, lengths, ch,
+            vch, nv, qlens, band=6, threshold=thr, use_kernel=use_kernel,
+            interpret=True if use_kernel else None)
+        (rows_v, moms_v, ns_v, sx_v, sxx_v, sc_v, vst_v,
+         pr_v) = _dtw.bank_extend_tick_scored_var_dispatch(
+            rows_v, moms_v, ns_v, sx_v, sxx_v, vst_v, bank_t, lengths, ch,
+            vch, nv, qlens, band=6, threshold=thr, use_kernel=use_kernel,
+            interpret=True if use_kernel else None)
+        np.testing.assert_array_equal(np.asarray(rows_a),
+                                      np.asarray(rows_e))
+        np.testing.assert_array_equal(np.asarray(moms_a)[:3],
+                                      np.asarray(moms_e))
+        np.testing.assert_array_equal(np.asarray(sc_a), np.asarray(sc_e))
+        assert np.asarray(vst_a).max() == 0.0
+        pr, sc = np.asarray(pr_a), np.asarray(sc_e)
+        assert set(np.unique(pr)) <= {0.0, 1.0}
+        np.testing.assert_array_equal(pr == 1.0, sc >= thr)
+        np.testing.assert_array_equal(pr, np.asarray(pr_v))
+
+
+def test_stream_var_approx_chunking_invariance():
+    """Any chunking of the approx-mode stream reproduces the one-shot
+    solve BITWISE on dyadic grids: rows, all four moment slabs,
+    variance folds, scores and approx probs."""
+    from _hypothesis_compat import given, settings, st
+    import jax.numpy as jnp
+    from repro.core import dtw as _dtw
+
+    rng0 = np.random.default_rng(61)
+    bank = _var_bank(rng0, k=5)
+    k, m = bank.series.shape
+    N = 24
+    bank_t = jnp.asarray(bank.series.T)
+    lengths = jnp.asarray(bank.lengths)
+    q = _dyadic_series(rng0, N)
+    v = (rng0.integers(0, 5, N) / 64.0).astype(np.float32)
+
+    def run(chunk_sizes):
+        rows = jnp.full((1, m, k), _dtw._INF)
+        moms = jnp.zeros((4, 1, m, k))
+        ns = jnp.zeros((1,), jnp.int32)
+        sx = jnp.zeros((1,))
+        sxx = jnp.zeros((1,))
+        vst = jnp.zeros((1, 3))
+        lo = 0
+        out = None
+        for c in chunk_sizes:
+            ch, vch = q[lo:lo + c], v[lo:lo + c]
+            lo += c
+            (rows, moms, ns, sx, sxx, sc, vst,
+             pr) = _dtw.bank_extend_tick_scored_var_approx(
+                rows, moms, ns, sx, sxx, vst, bank_t, lengths,
+                jnp.asarray(ch[None]), jnp.asarray(vch[None]),
+                jnp.asarray([len(ch)], np.int32),
+                jnp.asarray([N], np.int32), band=4, threshold=0.85)
+            out = (rows, moms, vst, sc, pr)
+        return [np.asarray(a) for a in out]
+
+    ref = run([N])
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(min_value=1, max_value=N - 1))
+    def prop(c):
+        sizes = [c] * (N // c)
+        if N % c:
+            sizes.append(N % c)
+        got = run(sizes)
+        for a, b in zip(got, ref):
+            np.testing.assert_array_equal(a, b)
+
+    prop()
+
+
+@pytest.mark.parametrize("band,block_k", [(None, 128), (6, 128), (None, 4),
+                                          (6, 4)])
+def test_offline_var_approx_kernel_cell_by_cell(band, block_k):
+    """Offline approx-tail Pallas kernel == the variance wavefront tile
+    scorer with ``approx=True`` bitwise (scores, probs, distances) on
+    dyadic data across ragged banks/queries, bands and tile padding;
+    zero variance further reduces bitwise to the exact offline
+    kernel."""
+    import jax.numpy as jnp
+    from repro.core import dtw as _dtw
+    from repro.kernels.dtw import (score_bank_offline_kernel,
+                                   score_bank_offline_var_approx_kernel)
+
+    rng = np.random.default_rng(7 if band is None else 20 * band + block_k)
+    bank = _var_bank(rng)
+    k, m = bank.series.shape
+    J, n = 3, 20
+    xlens = np.asarray([20, 13, 17], np.int32)
+    xs = np.zeros((J, n), np.float32)
+    xv = np.zeros((J, n), np.float32)
+    for i, L in enumerate(xlens):
+        xs[i, :L] = _dyadic_series(rng, L)
+        xv[i, :L] = (rng.integers(0, 5, L) / 64.0).astype(np.float32)
+    sx = np.zeros(J, np.float32)
+    sxx = np.zeros(J, np.float32)
+    vst = np.zeros((J, 3), np.float32)
+    for i, L in enumerate(xlens):
+        sx[i], sxx[i] = _dtw.query_moments(xs[i, :L])
+        vst[i] = _dtw.query_var_moments(xs[i, :L], xv[i, :L])
+    ks, kp, kd = score_bank_offline_var_approx_kernel(
+        xs, xv, xlens, bank.series, bank.lengths, sx, sxx, vst,
+        band=band, threshold=0.85, block_k=block_k, interpret=True)
+    ws, wp, wd = _dtw._score_tile_var_many(
+        jnp.asarray(xs), jnp.asarray(xv), jnp.asarray(xlens),
+        jnp.asarray(bank.series), jnp.asarray(bank.lengths),
+        jnp.asarray(sx), jnp.asarray(sxx), jnp.asarray(vst), band, 0.85,
+        approx=True)
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(ws))
+    np.testing.assert_array_equal(np.asarray(kp), np.asarray(wp))
+    np.testing.assert_array_equal(np.asarray(kd), np.asarray(wd))
+
+    zs, zp, zd = score_bank_offline_var_approx_kernel(
+        xs, np.zeros_like(xv), xlens, bank.series, bank.lengths, sx, sxx,
+        np.zeros_like(vst), band=band, threshold=0.85, block_k=block_k,
+        interpret=True)
+    es, ed = score_bank_offline_kernel(xs, xlens, bank.series,
+                                       bank.lengths, sx, sxx, band=band,
+                                       block_k=block_k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(zs), np.asarray(es))
+    np.testing.assert_array_equal(np.asarray(zd), np.asarray(ed))
+    zp = np.asarray(zp)
+    assert set(np.unique(zp)) <= {0.0, 1.0}
+    np.testing.assert_array_equal(zp == 1.0, np.asarray(zs) >= 0.85)
+
+
+def test_score_bank_many_prob_mode_approx_jnp_vs_kernel():
+    """`dtw_score_bank_many(prob_mode="approx")`'s jnp tile path and its
+    Pallas kernel path agree bitwise on dyadic data, the returned probs
+    are finite probabilities, and scores/distances are bitwise
+    independent of prob_mode (the approx tail only changes the
+    probability channel)."""
+    from repro.core import dtw as _dtw
+
+    rng = np.random.default_rng(97)
+    bank = _var_bank(rng, k=9)
+    J, n = 2, 24
+    xs = np.stack([_dyadic_series(rng, n) for _ in range(J)])
+    xv = (rng.integers(0, 5, (J, n)) / 64.0).astype(np.float32)
+    a = _dtw.dtw_score_bank_many(xs, bank.series, bank.lengths,
+                                 band=6, xvars=xv, threshold=0.85,
+                                 prob_mode="approx", use_kernel=False)
+    b = _dtw.dtw_score_bank_many(xs, bank.series, bank.lengths,
+                                 band=6, xvars=xv, threshold=0.85,
+                                 prob_mode="approx", use_kernel=True,
+                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    p = np.asarray(a[1])
+    assert np.isfinite(p).all() and (p >= 0).all() and (p <= 1).all()
+    e = _dtw.dtw_score_bank_many(xs, bank.series, bank.lengths,
+                                 band=6, xvars=xv, threshold=0.85,
+                                 use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(e[0]))
+
+    with pytest.raises(ValueError):
+        _dtw.dtw_score_bank_many(xs, bank.series, bank.lengths, band=6,
+                                 xvars=xv, prob_mode="bogus")

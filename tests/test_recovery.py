@@ -152,6 +152,31 @@ def test_snapshot_restore_prob_prefilter_denoise():
         assert a == gold[-len(a):], f"continuation != golden (cut={cut})"
 
 
+def test_snapshot_restore_approx_prob_mode():
+    """Approx probability mode rides snapshots: the 4-channel moment
+    slab and the ``prob_mode`` flag are persisted, the restored twin
+    rebuilds an approx-mode service (same channel count, same config)
+    and continues the schedule bitwise."""
+    bank = _bank(k=6, seed=1)
+    streams = _streams(n=4, seed=7, length=64)
+    kw = dict(slots=8, min_probability=0.5, prob_mode="approx",
+              threshold=0.5, denoise=True, queue_limit=512)
+    cmds = _schedule(streams, chunks=8, variance=True, evict="j0",
+                     finish_later="j1")
+    gold = _run(TuningService(bank, **kw), cmds)
+    for cut in (2, 11, 23, len(cmds) - 3):
+        svc = TuningService(bank, **kw)
+        _run(svc, cmds, 0, cut)
+        twin = restore_service(snapshot_service(svc), bank)
+        assert twin.prob_mode == "approx"
+        assert twin._config["prob_mode"] == "approx"
+        assert twin._moms.shape[0] == 4
+        a = _run(svc, cmds, cut)
+        b = _run(twin, cmds, cut)
+        assert a == b, f"restored service diverged (cut={cut})"
+        assert a == gold[-len(a):], f"continuation != golden (cut={cut})"
+
+
 def test_snapshot_mid_repack_dirty_slots():
     """Snapshot taken AFTER a submit but BEFORE its lazy slot reset ran
     (the `_dirty` list is non-empty) must carry the pending reset."""

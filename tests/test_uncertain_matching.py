@@ -170,3 +170,113 @@ def test_host_correlation_degenerate_conventions():
     assert RunningMoments().update(c, r).corr == 0.0
     assert RunningMoments().update(r, c).corr == 0.0
     assert np.isfinite(RunningMoments().update(c, c + 0.1).corr)
+
+
+# ---------------------------------------------------------------------------
+# Approximate probability tail (prob_mode="approx")
+# ---------------------------------------------------------------------------
+
+def test_prob_mode_validation(bank):
+    with pytest.raises(ValueError):
+        TuningService(bank, min_probability=0.5, prob_mode="bogus")
+    with pytest.raises(ValueError):
+        TuningService(bank, prob_mode="approx")  # needs min_probability
+
+
+@pytest.mark.parametrize("app", ["exim", "wordcount", "terasort"])
+def test_approx_zero_variance_service_reduces_bitwise(bank, app):
+    """The PR-7 degenerate-clamp guards extended to the approx tail: an
+    approx-mode service fed zero variance == the EXACT prob service,
+    tick for tick — identical score rows, identical {0, 1}
+    probabilities, identical decisions on identical ticks — and both
+    reduce to the point rule."""
+    q = simulate_cpu_series(app, PS, run=2)
+    kw = dict(band=16, threshold=0.8, denoise=False, min_probability=0.5)
+    te, _, fe = _stream(TuningService(bank, **kw), q, np.zeros_like(q),
+                        probe=True)
+    ta, _, fa = _stream(TuningService(bank, prob_mode="approx", **kw),
+                        q, np.zeros_like(q), probe=True)
+
+    assert len(te) == len(ta) > 0
+    for (se, pe, de), (sa, pa, da) in zip(te, ta):
+        np.testing.assert_array_equal(sa, se)
+        np.testing.assert_array_equal(pa, pe)
+        assert set(np.unique(pa)) <= {0.0, 1.0}
+        np.testing.assert_array_equal(pa == 1.0, sa >= 0.8)
+        assert (da is None) == (de is None)
+        if da is not None:
+            assert da.matched == de.matched and da.corr == de.corr
+            assert da.probability == de.probability
+    assert fa.matched == fe.matched and fa.corr == fe.corr
+    assert fa.probability == fe.probability
+
+
+def test_approx_calibration_band_and_gating_agreement(bank):
+    """The headline calibration contract on golden heteroscedastic
+    traces: in-flight approx probabilities sit within a tolerance band
+    of the exact tail (|dp| <= 0.2; short prefixes dominate the band —
+    the svyy/svxy reconstruction is noisiest at small n, and the error
+    is conservative: approx under-states confidence, it never inflates
+    it enough to commit where exact would not), the ``P >=
+    min_probability``
+    gating decision agrees wherever the exact probability clears the
+    band, the approx service makes NO additional wrong early decisions,
+    and final verdicts are BITWISE the exact service's (finish always
+    recomputes through the exact six-channel tail)."""
+    BAND = 0.2
+    GATE = 0.6
+    kw = dict(band=16, threshold=0.7, denoise=True, stable_ticks=2,
+              min_fraction=0.1, margin=0.01, min_probability=GATE)
+    wrong_exact = wrong_approx = ticks_checked = 0
+    for app in APPS:
+        for run in (3, 4):
+            q, v = simulate_cpu_series_uncertain(app, PS, run=run,
+                                                 noise=0.12)
+            te, ee, fe = _stream(TuningService(bank, **kw), q, v,
+                                 probe=True)
+            ta, ea, fa = _stream(
+                TuningService(bank, prob_mode="approx", **kw), q, v,
+                probe=True)
+            assert len(te) == len(ta) > 0
+            for (se, pe, de), (sa, pa, da) in zip(te, ta):
+                # scores ride channels 0:3 — bitwise mode-independent
+                np.testing.assert_array_equal(sa, se)
+                dp = np.abs(pa - pe)
+                assert dp.max() <= BAND
+                # calibration band implies gate agreement outside it
+                clear = np.abs(pe - GATE) > BAND
+                np.testing.assert_array_equal((pa >= GATE)[clear],
+                                              (pe >= GATE)[clear])
+                ticks_checked += 1
+            ee = next((t[2] for t in te if t[2] is not None), None)
+            ea = next((t[2] for t in ta if t[2] is not None), None)
+            if ee is not None and ee.matched != app:
+                wrong_exact += 1
+            if ea is not None and ea.matched != app:
+                wrong_approx += 1
+            # finals: bitwise the exact service's verdict
+            assert fa.matched == fe.matched
+            assert fa.corr == fe.corr
+            assert fa.probability == fe.probability
+    assert wrong_approx <= wrong_exact
+    assert ticks_checked > 0
+
+
+def test_approx_constant_trace_scores_zero_and_abstains(bank):
+    """Degenerate (zero-variance-in-x) query through the approx tail:
+    score 0.0 — never NaN — probability exactly 0.0, no commitment."""
+    qc = np.full(200, 0.5, np.float32)
+    _, e_a, f_a = _stream(
+        TuningService(bank, band=16, threshold=0.7, denoise=False,
+                      min_probability=0.5, prob_mode="approx"),
+        qc, np.zeros_like(qc))
+    assert e_a is None and f_a.matched is None
+    assert f_a.corr == 0.0 and np.isfinite(f_a.corr)
+    assert f_a.probability == 0.0
+    # heteroscedastic noise on a constant trace: still finite, still 0.0
+    _, e_n, f_n = _stream(
+        TuningService(bank, band=16, threshold=0.7, denoise=False,
+                      min_probability=0.5, prob_mode="approx"),
+        qc, np.full_like(qc, 0.01))
+    assert f_n.matched is None and np.isfinite(f_n.corr)
+    assert f_n.corr == 0.0
